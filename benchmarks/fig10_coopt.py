@@ -1,0 +1,62 @@
+"""Paper Fig. 10 — co-optimizing technology, parallelism and hardware.
+
+Three incremental configurations per logic node (paper §9.2):
+  1. naive data parallelism on template budgets;
+  2. + parallelism-strategy search (paper claim: ~2x);
+  3. + hardware-architecture (budget) search via the SOE
+     (paper claim: meaningful on mature nodes, 20-30% on advanced).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ShapeCell, get_config
+from repro.configs.paper_lm import GLOBAL_BATCH, N_NODES, SEQ_LEN
+from repro.core import age, lmgraph, roofline, simulate, soe, techlib
+from repro.core.parallelism import Strategy
+from repro.core.roofline import PPEConfig
+
+PPE = PPEConfig(n_tilings=12)
+
+
+def run_node(logic: str, n_devices: int = N_NODES,
+             soe_steps: int = 12, soe_starts: int = 2) -> Dict[str, float]:
+    tech = techlib.make_tech_config(logic, "HBM2E", "IB-NDR-X8")
+    cfg = get_config("paper-lm")
+    cell = ShapeCell("paper", SEQ_LEN, GLOBAL_BATCH, "train")
+    g = lmgraph.build_graph(cfg, cell)
+    budgets = age.Budgets.default()
+    roofline.clear_cache()
+    arch = age.generate(tech, budgets)
+    naive = float(simulate.predict(
+        arch, g, Strategy("RC", dp=n_devices), cfg=PPE).total_s)
+    strat = soe.co_optimize(tech, g, n_devices, search_arch=False, ppe=PPE,
+                            template=budgets)
+    coopt = soe.co_optimize(
+        tech, g, n_devices, search_arch=True, ppe=PPE, template=budgets,
+        cfg=soe.SOEConfig(steps=soe_steps, starts=soe_starts),
+        strategies=[strat.strategy], max_strategies=8)
+    return {"naive_dp": naive, "parallelism_opt": strat.time_s,
+            "parallelism+arch_opt": min(coopt.time_s, strat.time_s),
+            "best_strategy": strat.strategy.name}
+
+
+def main(verbose: bool = True, nodes=("N12", "N7", "N3")) -> Dict:
+    out = {}
+    for lg in nodes:
+        out[lg] = run_node(lg)
+        if verbose:
+            r = out[lg]
+            print(f"fig10 {lg}: naive {r['naive_dp']:.3f}s -> strategy "
+                  f"{r['parallelism_opt']:.3f}s "
+                  f"({r['naive_dp']/r['parallelism_opt']:.2f}x, "
+                  f"{r['best_strategy']}) -> +arch "
+                  f"{r['parallelism+arch_opt']:.3f}s")
+    speedups = [out[lg]["naive_dp"] / out[lg]["parallelism_opt"]
+                for lg in nodes]
+    return {"per_node": out, "strategy_speedups": speedups}
+
+
+if __name__ == "__main__":
+    main()

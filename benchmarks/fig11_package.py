@@ -1,0 +1,68 @@
+"""Paper Fig. 11 — effect of multi-node packaging.
+
+Fix the total node count (512); group 1/2/4/8/16 nodes per package with
+2 TB/s intra-package links (paper's assumption) and re-run the
+parallelism search per grouping.
+
+Reproduction targets (paper §9.3): <= ~32% total improvement; marginal
+beyond 4 nodes/package.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ShapeCell, get_config
+from repro.configs.paper_lm import GLOBAL_BATCH, N_NODES, SEQ_LEN
+from repro.core import age, lmgraph, roofline, simulate, soe, techlib
+from repro.core.parallelism import enumerate_strategies
+from repro.core.placement import SystemGraph
+from repro.core.roofline import PPEConfig
+
+PPE = PPEConfig(n_tilings=12)
+
+
+def best_time(nodes_per_package: int, n_devices: int = N_NODES) -> float:
+    tech = techlib.make_tech_config("N7", "HBM2E", "IB-NDR-X8",
+                                    intra_bw=2e12 / 8)
+    arch = age.generate(tech, age.Budgets.default())
+    cfg = get_config("paper-lm")
+    cell = ShapeCell("paper", SEQ_LEN, GLOBAL_BATCH, "train")
+    g = lmgraph.build_graph(cfg, cell)
+    # system graph: (packages, nodes-per-package); intra-package dims ride
+    # the fat 2 TB/s links
+    if nodes_per_package == 1:
+        system = None
+    else:
+        # near-square 2-D torus of packages x fat intra-package links
+        pkgs = n_devices // nodes_per_package
+        a = max(int(pkgs ** 0.5), 1)
+        while pkgs % a:
+            a -= 1
+        system = SystemGraph(dims=(a, pkgs // a, nodes_per_package),
+                             levels=("inter", "inter", "intra"))
+    roofline.clear_cache()
+    best = float("inf")
+    for st in enumerate_strategies(n_devices, max_lp=1):
+        t = float(simulate.predict(arch, g, st, system=system,
+                                   cfg=PPE).total_s)
+        best = min(best, t)
+    return best
+
+
+def main(verbose: bool = True, groupings=(1, 2, 4, 8, 16)) -> Dict:
+    times = {g: best_time(g) for g in groupings}
+    base = times[groupings[0]]
+    improvement = {g: base / times[g] for g in groupings}
+    if verbose:
+        print("fig11: multi-node package study (512 nodes total)")
+        for g in groupings:
+            print(f"  {g:2d} nodes/package: {times[g]:.3f} s "
+                  f"({(improvement[g]-1)*100:+.1f}%)")
+        print(f"  max improvement: {(max(improvement.values())-1)*100:.1f}% "
+              "(paper: ~32% at best; marginal beyond 4)")
+    return {"times": times, "improvement": improvement}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Paper Fig. 8 — LM validation: CrossFlow vs measured LSTM LM step time.
+
+Sweep (batch, hidden, vocab) for a 2-layer LSTM LM (the paper's workload,
+scaled to CPU-feasible sizes), measure the jit'd JAX training-step wall
+time, predict via the full CrossFlow path (lmgraph -> roofline -> event
+sim), report corr + mean relative error (paper: corr 0.996, err 16%).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeCell, get_config
+from repro.core import age, lmgraph, roofline, simulate
+from repro.core.parallelism import Strategy
+from repro.core.roofline import PPEConfig
+from repro.models import build_model
+
+SEQ = 20                           # the paper's sequence length
+
+
+def measure_step(hidden: int, vocab: int, batch: int) -> float:
+    cfg = dataclasses.replace(get_config("paper-lm"), d_model=hidden,
+                              vocab_size=vocab)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.ones((batch, SEQ), jnp.int32)
+    batch_d = {"tokens": toks, "labels": toks}
+
+    @jax.jit
+    def step(p):
+        loss, _ = model.loss_fn(p, batch_d)
+        return loss
+
+    step(params).block_until_ready()
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        step(params).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def predict_step(hidden: int, vocab: int, batch: int, arch,
+                 overhead: float = 5e-5) -> float:
+    cfg = dataclasses.replace(get_config("paper-lm"), d_model=hidden,
+                              vocab_size=vocab)
+    cell = ShapeCell("lm", SEQ, batch, "prefill")   # fwd-only measurement
+    g = lmgraph.build_graph(cfg, cell)
+    roofline.clear_cache()
+    bd = simulate.predict(arch, g, Strategy("RC"),
+                          cfg=PPEConfig(n_tilings=16,
+                                        kernel_overhead_s=overhead))
+    return float(bd.total_s)
+
+
+def main(verbose: bool = True, grid=None) -> Dict:
+    grid = grid or list(itertools.product((256, 512, 768),    # hidden
+                                          (4000, 12000, 24000),  # vocab
+                                          (16, 32)))             # batch
+    measured, predicted = [], []
+    # calibrate the same way fig6 does (peak rate + per-kernel overhead)
+    from benchmarks.fig6_gemm_validation import measure as m_gemm
+    t = m_gemm(512, 512, 512)
+    peak = 2.0 * 512**3 / t / 0.85
+    overhead = max(m_gemm(32, 32, 32), 2e-5)      # sw-stack latency (paper §8)
+    arch = age.cpu_host_microarch(compute_flops=peak, dram_bw=6e9)
+    for hidden, vocab, batch in grid:
+        measured.append(measure_step(hidden, vocab, batch))
+        predicted.append(predict_step(hidden, vocab, batch, arch,
+                                      overhead))
+    measured = np.asarray(measured)
+    predicted = np.asarray(predicted)
+    corr = float(np.corrcoef(np.log(measured), np.log(predicted))[0, 1])
+    rel_err = float(np.mean(np.abs(predicted - measured) / measured))
+    if verbose:
+        print(f"fig8: LSTM LM validation ({len(grid)} configs)")
+        print(f"  corr(log t) = {corr:.3f}   mean rel err = "
+              f"{rel_err*100:.0f}%  (paper: 0.996, 16%)")
+    return {"corr": corr, "rel_err": rel_err,
+            "measured": measured.tolist(), "predicted": predicted.tolist()}
+
+
+if __name__ == "__main__":
+    main()

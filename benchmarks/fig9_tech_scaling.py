@@ -1,0 +1,85 @@
+"""Paper Fig. 9 — technology scaling case study.
+
+The paper's large LM (2-layer LSTM, hidden 16K, batch 16K, vocab 800K,
+seq 20) data-parallel across 512 nodes; sweep 7 logic nodes x 4 HBM
+generations x 3 inter-node networks (power 300 W/node, chip 850 mm^2).
+
+Reproduction targets (paper §9.1):
+  * N12 -> N7 jump regardless of memory tech (L2-bound at N12);
+  * beyond N3, logic scaling alone saturates (cache bw/capacity bound);
+  * network scaling gives larger gains than logic beyond N3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ShapeCell, get_config
+from repro.configs.paper_lm import GLOBAL_BATCH, N_NODES, SEQ_LEN
+from repro.core import age, lmgraph, roofline, simulate, techlib
+from repro.core.parallelism import Strategy
+from repro.core.roofline import PPEConfig
+
+PPE = PPEConfig(n_tilings=12)
+
+
+def iteration_time(logic: str, hbm: str, net: str,
+                   strategy: Strategy = None) -> float:
+    tech = techlib.make_tech_config(logic, hbm, net)
+    budgets = dataclasses.replace(age.Budgets.default(),
+                                  proc_chip_area_mm2=850.0, power_w=300.0)
+    arch = age.generate(tech, budgets)
+    cfg = get_config("paper-lm")
+    cell = ShapeCell("paper", SEQ_LEN, GLOBAL_BATCH, "train")
+    g = lmgraph.build_graph(cfg, cell)
+    st = strategy or Strategy("RC", kp1=1, kp2=1, dp=N_NODES, lp=1)
+    roofline.clear_cache()
+    return float(simulate.predict(arch, g, st, cfg=PPE).total_s)
+
+
+def main(verbose: bool = True, logic_nodes=None) -> Dict:
+    logic_nodes = logic_nodes or techlib.LOGIC_NODES
+    nets = techlib.NETWORK_GENERATIONS
+    hbms = techlib.HBM_GENERATIONS
+    table: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for net in nets:
+        table[net] = {}
+        for hbm in hbms:
+            table[net][hbm] = {lg: iteration_time(lg, hbm, net)
+                               for lg in logic_nodes}
+    if verbose:
+        print("fig9: iteration time (s), paper LM d512")
+        for net in nets:
+            print(f"-- network {net}")
+            hdr = " ".join(f"{lg:>8}" for lg in logic_nodes)
+            print(f"{'HBM':>7} {hdr}")
+            for hbm in hbms:
+                row = " ".join(f"{table[net][hbm][lg]:8.3f}"
+                               for lg in logic_nodes)
+                print(f"{hbm:>7} {row}")
+    # paper trends
+    base_net = nets[0]
+    t = table[base_net]
+    checks = {}
+    first, second = logic_nodes[0], logic_nodes[1]
+    checks["n12_to_n7_speedup"] = {h: t[h][first] / t[h][second]
+                                   for h in hbms}
+    # logic saturation beyond N3 at best memory (ratio N3 time / N1 time ~ 1)
+    if "N3" in logic_nodes and "N1" in logic_nodes:
+        checks["logic_saturation_n3_n1"] = \
+            t[hbms[-1]]["N3"] / t[hbms[-1]]["N1"]
+    # network scaling gain at the most advanced logic+memory
+    lg = logic_nodes[-1]
+    checks["network_gain_at_advanced_node"] = \
+        table[nets[0]][hbms[-1]][lg] / table[nets[-1]][hbms[-1]][lg]
+    if verbose:
+        print("trend checks:", {k: (round(v, 3) if isinstance(v, float)
+                                    else {kk: round(vv, 3)
+                                          for kk, vv in v.items()})
+                                for k, v in checks.items()})
+    return {"table": table, "checks": checks}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""§Perf — baseline vs hillclimb-variant comparison from dry-run artifacts.
+
+Prints, per hillclimbed cell, the three roofline terms of the baseline and
+every recorded variant, plus the bound (max term) speedup. Consumed by
+EXPERIMENTS.md §4.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun")
+
+CELLS = [
+    ("qwen3_moe_30b_a3b", "train_4k", "single"),
+    ("mistral_large_123b", "train_4k", "single"),
+    ("gemma3_27b", "prefill_32k", "single"),
+]
+
+
+def _terms(d: Dict) -> Dict:
+    coll = sum(v for k, v in d["collectives"].items() if k != "count")
+    t_c = d["flops_per_device"] / PEAK_FLOPS
+    t_m = d["bytes_per_device"] / HBM_BW
+    t_x = coll / ICI_BW
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "bound": max(t_c, t_m, t_x)}
+
+
+def load_variants(arch: str, cell: str, mesh: str) -> List[Dict]:
+    out = []
+    pat = os.path.join(ART_DIR, f"{arch}__{cell}__{mesh}*.json")
+    for p in sorted(glob.glob(pat)):
+        with open(p) as f:
+            d = json.load(f)
+        if d.get("ok"):
+            out.append(d)
+    return out
+
+
+def main(verbose: bool = True) -> Dict:
+    results = {}
+    for arch, cell, mesh in CELLS:
+        rows = []
+        for d in load_variants(arch, cell, mesh):
+            t = _terms(d)
+            rows.append({"variant": d.get("variant") or "baseline", **t})
+        base = next((r for r in rows if r["variant"] == "baseline"), None)
+        if base:
+            for r in rows:
+                r["bound_speedup"] = base["bound"] / r["bound"]
+        rows.sort(key=lambda r: r["bound"])
+        results[f"{arch}/{cell}"] = rows
+        if verbose:
+            print(f"== {arch} x {cell} ({mesh})")
+            for r in rows:
+                print(f"   {r['variant']:18s} comp {r['t_compute']:8.3f}s "
+                      f"mem {r['t_memory']:8.3f}s coll "
+                      f"{r['t_collective']:8.3f}s bound {r['bound']:8.3f}s "
+                      f"({r.get('bound_speedup', 1):5.2f}x)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

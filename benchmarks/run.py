@@ -1,0 +1,128 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark (us_per_call = the
+benchmark's own wall time; derived = its headline reproduction metric).
+
+    PYTHONPATH=src python -m benchmarks.run              # all
+    PYTHONPATH=src python -m benchmarks.run fig9 fig10   # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict
+
+
+def _bench_fig1() -> str:
+    from benchmarks import fig1_intensity
+    r = fig1_intensity.main(verbose=False)
+    return (f"median_intensity_drop={r['medians'][0]/r['medians'][-1]:.1f}x;"
+            f"spread@64k={r['spread_at_max_degree']:.1f}x")
+
+
+def _bench_fig6() -> str:
+    from benchmarks import fig6_gemm_validation
+    r = fig6_gemm_validation.main(verbose=False)
+    return f"corr={r['corr']:.3f};rel_err={r['rel_err']*100:.1f}%"
+
+
+def _bench_fig8() -> str:
+    from benchmarks import fig8_lm_validation
+    r = fig8_lm_validation.main(verbose=False)
+    return f"corr={r['corr']:.3f};rel_err={r['rel_err']*100:.0f}%"
+
+
+def _bench_fig9() -> str:
+    from benchmarks import fig9_tech_scaling
+    r = fig9_tech_scaling.main(verbose=False)
+    c = r["checks"]
+    n12n7 = max(c["n12_to_n7_speedup"].values())
+    return (f"n12->n7={n12n7:.2f}x;"
+            f"logic_sat_n3/n1={c.get('logic_saturation_n3_n1', 0):.2f};"
+            f"net_gain={c['network_gain_at_advanced_node']:.2f}x")
+
+
+def _bench_fig10() -> str:
+    from benchmarks import fig10_coopt
+    r = fig10_coopt.main(verbose=False)
+    s = max(r["strategy_speedups"])
+    return f"strategy_speedup={s:.2f}x(paper ~2x)"
+
+
+def _bench_fig11() -> str:
+    from benchmarks import fig11_package
+    r = fig11_package.main(verbose=False)
+    best = (max(r["improvement"].values()) - 1) * 100
+    return f"package_gain={best:.0f}%(paper <=32%)"
+
+
+def _bench_perf_variants() -> str:
+    from benchmarks import perf_compare
+    r = perf_compare.main(verbose=False)
+    best = {}
+    for cell, rows in r.items():
+        sp = max((row.get("bound_speedup", 1) for row in rows), default=1)
+        best[cell.split("/")[0]] = sp
+    return ";".join(f"{k}={v:.1f}x" for k, v in best.items()) or "no_data"
+
+
+def _bench_roofline() -> str:
+    from benchmarks import roofline
+    r = roofline.main(verbose=False)
+    n = sum(len(v) for v in r.values())
+    if not n:
+        return "no_dryrun_artifacts_yet"
+    fracs = [row["roofline_frac"] for rows in r.values() for row in rows]
+    return f"cells={n};mean_frac={sum(fracs)/len(fracs):.2f}"
+
+
+def _bench_crossflow_query() -> str:
+    """Paper §8: CrossFlow query latency (ms .. 20 s on their machine)."""
+    from repro.configs.base import SHAPE_CELLS, get_config
+    from repro.core import age, lmgraph, roofline as rl, simulate, techlib
+    from repro.core.parallelism import Strategy
+    arch = age.generate(techlib.make_tech_config(), age.Budgets.default())
+    g = lmgraph.build_graph(get_config("qwen1.5-0.5b"),
+                            SHAPE_CELLS["train_4k"])
+    rl.clear_cache()
+    t0 = time.perf_counter()
+    simulate.predict(arch, g, Strategy("RC", kp1=1, kp2=4, dp=4))
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    simulate.predict(arch, g, Strategy("RC", kp1=1, kp2=4, dp=4))
+    warm = time.perf_counter() - t0
+    return f"cold={cold*1e3:.0f}ms;warm={warm*1e3:.0f}ms"
+
+
+BENCHES: Dict[str, Callable[[], str]] = {
+    "fig1_intensity": _bench_fig1,
+    "fig6_gemm_validation": _bench_fig6,
+    "fig8_lm_validation": _bench_fig8,
+    "fig9_tech_scaling": _bench_fig9,
+    "fig10_coopt": _bench_fig10,
+    "fig11_package": _bench_fig11,
+    "crossflow_query_latency": _bench_crossflow_query,
+    "roofline": _bench_roofline,
+    "perf_variants": _bench_perf_variants,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        keys = [k for k in BENCHES if k.startswith(name)] or [name]
+        for key in keys:
+            fn = BENCHES[key]
+            t0 = time.perf_counter()
+            try:
+                derived = fn()
+            except Exception as e:           # noqa: BLE001
+                derived = f"ERROR:{type(e).__name__}:{e}"
+            dt = (time.perf_counter() - t0) * 1e6
+            print(f"{key},{dt:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""DeepFlow pathfinding example — the paper's §9 workflow end to end:
+
+1. ask CrossFlow where a workload sits across technology generations,
+2. co-optimize parallelism strategy + hardware budgets with the SOE,
+3. emit the sharding plan the real runtime would use on the v5e mesh.
+
+    PYTHONPATH=src python examples/pathfind.py
+"""
+
+from repro.configs.base import SHAPE_CELLS, get_config
+from repro.core import age, lmgraph, planner, simulate, soe, techlib
+from repro.core.parallelism import Strategy
+from repro.core.roofline import PPEConfig
+
+PPE = PPEConfig(n_tilings=12)
+
+
+def main() -> None:
+    cfg = get_config("qwen3-moe-30b-a3b")
+    cell = SHAPE_CELLS["train_4k"]
+    g = lmgraph.build_graph(cfg, cell)
+    print(f"=== pathfind: {cfg.name} x {cell.name} "
+          f"({g.total_flops():.2e} flops/graph-template) ===")
+
+    print("-- 1. technology what-if (N7 vs N3, HBM2E vs HBM3) --")
+    for logic, hbm in (("N7", "HBM2E"), ("N3", "HBM2E"), ("N3", "HBM3")):
+        tech = techlib.make_tech_config(logic, hbm, "IB-NDR-X8")
+        arch = age.generate(tech, age.Budgets.default())
+        bd = simulate.predict(arch, g, Strategy("RC", kp1=1, kp2=16, dp=16),
+                              cfg=PPE)
+        print(f"   {logic}/{hbm}: {float(bd.total_s)*1e3:8.1f} ms/iter "
+              f"(compute {float(bd.compute_s)*1e3:.1f}, "
+              f"comm {float(bd.comm_s)*1e3:.1f})")
+
+    print("-- 2. SOE co-optimization on N7 (256 devices) --")
+    tech = techlib.make_tech_config("N7", "HBM2E", "IB-NDR-X8")
+    res = soe.co_optimize(tech, g, n_devices=256, search_arch=True,
+                          cfg=soe.SOEConfig(steps=10, starts=2), ppe=PPE)
+    print(f"   best strategy {res.strategy.name}: {res.time_s*1e3:.1f} ms; "
+          f"core area frac -> {float(res.budgets.area_frac['core']):.2f}")
+
+    print("-- 3. runtime sharding plan on the v5e production mesh --")
+    plan = planner.plan(cfg, cell, (16, 16), ("data", "model"))
+    print(f"   strategy {plan.strategy.name} predicted "
+          f"{plan.predicted_step_s*1e3:.1f} ms/step")
+    for axis, rule in plan.rules:
+        print(f"   {axis:10s} -> {rule}")
+
+
+if __name__ == "__main__":
+    main()

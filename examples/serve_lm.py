@@ -1,0 +1,22 @@
+"""Batched serving example across three model families: dense (qwen),
+hybrid (recurrentgemma: RG-LRU state + local-attention ring cache), and
+ssm (xlstm: matrix/scalar recurrent state).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    for arch in ("qwen1.5-0.5b", "recurrentgemma-2b", "xlstm-125m"):
+        out = serve(arch, batch=2, prompt_len=24, gen=8, use_reduced=True)
+        print(f"{arch:20s} strategy={out['plan']:18s} "
+              f"prefill={out['prefill_s']:.2f}s "
+              f"decode={out['decode_s']:.2f}s "
+              f"({out['tok_per_s']:.1f} tok/s)")
+        print(f"{'':20s} sample: {out['tokens'][0][:8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

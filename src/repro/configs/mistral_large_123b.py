@@ -1,0 +1,24 @@
+"""mistral-large-123b [dense].
+
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768.
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=32768,
+    ffn_kind="swiglu",
+    norm_kind="rmsnorm",
+    tie_embeddings=False,
+    supports_long_context=False,
+    source="hf:mistralai/Mistral-Large-Instruct-2407; unverified",
+)

@@ -1,0 +1,23 @@
+"""repro.core — CrossFlow + DeepFlow (the paper's contribution).
+
+CrossFlow (standalone performance model):
+    techlib     technology components library          (paper §4.1)
+    age         micro-architecture generator engine    (paper §4.2-4.4)
+    graph       compute-graph IR                       (paper §3, §5)
+    transform   super-graph transformation             (paper §5.1)
+    placement   device mapping + routing               (paper §5.2)
+    roofline    hierarchical roofline PPE              (paper §6.1-6.4)
+    simulate    event-driven end-to-end estimation     (paper §6.5) + predict()
+
+DeepFlow (search on top of CrossFlow):
+    soe         projected-GD budget search             (paper §7)
+    planner     CrossFlow -> runtime ShardingPlan bridge (this repo's closing
+                of the loop: pathfinding drives the real pjit configuration)
+"""
+
+from repro.core import age, graph, lmgraph, parallelism, placement, roofline, \
+    simulate, soe, techlib, transform
+from repro.core.age import Budgets, MicroArch
+from repro.core.graph import ComputeGraph
+from repro.core.parallelism import Strategy
+from repro.core.simulate import predict

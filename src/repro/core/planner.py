@@ -1,0 +1,135 @@
+"""CrossFlow -> runtime bridge: pick the sharding plan for a real mesh.
+
+This is where the paper's pathfinding becomes a *first-class feature* of the
+training framework (DESIGN.md §2): given (arch config, shape cell, physical
+mesh), the planner enumerates the parallelism strategies the runtime supports,
+queries CrossFlow's performance model for each on the TPU-v5e micro-arch,
+and emits the argmin as a `ShardingPlan` that `repro.launch` turns into
+PartitionSpecs. The prediction is recorded so the dry-run can compare it
+against the XLA-derived roofline terms (our validation axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.core import age as age_lib
+from repro.core import lmgraph, simulate
+from repro.core.age import MicroArch
+from repro.core.parallelism import Strategy
+from repro.core.placement import SystemGraph, multi_pod_system, \
+    single_pod_system
+from repro.core.roofline import PPEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """What the runtime actually consumes."""
+
+    arch: str
+    cell: str
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    strategy: Strategy              # paper notation (RC-..-d..-p..)
+    # logical-axis -> mesh-axis rules (repro.parallel.sharding consumes this)
+    rules: Tuple[Tuple[str, Optional[Tuple[str, ...]]], ...]
+    predicted_step_s: float
+    predicted_breakdown: Dict[str, float]
+    notes: str = ""
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.mesh_axes if a in ("pod", "data"))
+
+
+# Logical activation/weight axes used across repro.models (MaxText-style).
+DEFAULT_RULES: Tuple[Tuple[str, Optional[Tuple[str, ...]]], ...] = (
+    ("batch", ("pod", "data")),     # activations: batch over DP axes
+    ("seq", None),                  # sequence replicated (SP overrides)
+    ("embed", None),                # d_model replicated on activations
+    ("heads", ("model",)),          # attention heads over TP
+    ("kv_heads", ("model",)),       # kv heads over TP (grouped for small kv)
+    ("mlp", ("model",)),            # ffn hidden over TP
+    ("vocab", ("model",)),          # embedding/logits vocab dim over TP
+    ("experts", ("model",)),        # MoE experts over TP axis (EP)
+    ("kv_seq", None),               # KV-cache seq dim (SP shards for 500k)
+    ("lru", ("model",)),            # RG-LRU / xLSTM recurrence width
+    ("stage", None),                # pipeline stage axis (LP > 1)
+)
+
+
+def _mesh_system(mesh_shape: Tuple[int, ...]) -> SystemGraph:
+    if len(mesh_shape) == 3:
+        return multi_pod_system(mesh_shape[0], mesh_shape[1])
+    side = mesh_shape[0]
+    return single_pod_system(side)
+
+
+def candidate_strategies(cfg: ArchConfig, cell: ShapeCell,
+                         mesh_shape: Tuple[int, ...]) -> List[Strategy]:
+    """Strategies the runtime can realize on this mesh.
+
+    The runtime maps KP -> the 'model' mesh axis and DP -> pod*data, so the
+    candidates here vary how the *model* axis is used (RC head/ffn sharding,
+    EP for MoE, SP for long-context) — the physical mesh stays fixed.
+    """
+    total = 1
+    for s in mesh_shape:
+        total *= s
+    model = mesh_shape[-1]
+    dp = total // model
+    cands = [Strategy("RC", kp1=1, kp2=model, dp=dp, lp=1)]
+    if cfg.is_moe:
+        cands.append(Strategy("RC", kp1=1, kp2=model, dp=dp, lp=1, ep=model))
+    if cell.name == "long_500k":
+        cands.append(Strategy("RC", kp1=1, kp2=model, dp=dp, lp=1, sp=model))
+    if cell.kind == "train" and cfg.n_layers >= 32 and len(mesh_shape) == 3:
+        # pipeline over the pod axis for deep models on multi-pod meshes
+        cands.append(Strategy("RC", kp1=1, kp2=model,
+                              dp=dp // mesh_shape[0], lp=mesh_shape[0]))
+    return cands
+
+
+def plan(cfg: ArchConfig, cell: ShapeCell, mesh_shape: Tuple[int, ...],
+         mesh_axes: Tuple[str, ...],
+         arch_hw: Optional[MicroArch] = None,
+         ppe: Optional[PPEConfig] = None) -> ShardingPlan:
+    """Pick the best runtime-realizable strategy by CrossFlow prediction."""
+    hw = arch_hw or age_lib.tpu_v5e_microarch()
+    ppe = ppe or PPEConfig(n_tilings=8)        # fast mode for planning
+    system = _mesh_system(mesh_shape)
+    graph = lmgraph.build_graph(cfg, cell)
+    best = None
+    for st in candidate_strategies(cfg, cell, mesh_shape):
+        bd = simulate.predict(hw, graph, st, system=system, cfg=ppe)
+        t = float(bd.total_s)
+        if best is None or t < best[0]:
+            best = (t, st, bd)
+    assert best is not None
+    t, st, bd = best
+    rules = list(DEFAULT_RULES)
+    notes = []
+    if st.sp > 1:
+        rules = [(a, ("model",)) if a == "kv_seq" else (a, ax)
+                 for a, ax in rules]
+        notes.append("SP: kv_seq sharded over model axis for long context")
+    if cfg.family in ("hybrid", "ssm"):
+        notes.append("KP restricted to head/width sharding for recurrences "
+                     "(contraction dim stateful; DESIGN.md applicability)")
+    if cfg.is_moe and cfg.moe_impl == "scatter_ep":
+        notes.append("planner recommends moe_impl='grouped_tp': the "
+                     "baseline scatter-EP dispatch lowers to a replicated "
+                     "buffer all-reduce under GSPMD (EXPERIMENTS.md §Perf, "
+                     "25x collective reduction)")
+    return ShardingPlan(
+        arch=cfg.name, cell=cell.name, mesh_shape=tuple(mesh_shape),
+        mesh_axes=tuple(mesh_axes), strategy=st, rules=tuple(rules),
+        predicted_step_s=t,
+        predicted_breakdown={
+            "compute_s": float(bd.compute_s),
+            "comm_s": float(bd.comm_s),
+            "exposed_comm_s": float(bd.exposed_comm_s),
+        },
+        notes="; ".join(notes))

@@ -1,0 +1,240 @@
+"""Hierarchical roofline performance model (DeepFlow paper §6.1-§6.3).
+
+Per compute node we estimate operational intensity at *every* level of the
+memory hierarchy by searching over tiling strategies (paper: N^L random
+tilings that satisfy the capacity constraint at each level, N≈20, L=3), plus
+a dataflow/reuse model for the register level (paper eq. 5). Node time is
+the hierarchical roofline:
+
+    t = max( flops / compute_throughput,
+             traffic_L / bw_L   for every memory level L )
+
+All candidate evaluation is vectorized `jax.numpy`, so node timing is
+differentiable w.r.t. the MicroArch parameters (used by the SOE for exact
+gradients) and cheap enough to call thousands of times (paper §8: CrossFlow
+queries take milliseconds).
+
+TPU adaptation (DESIGN.md): levels are relabelled HBM -> L2(CMEM) ->
+L1(VMEM) -> L0(vregs); the L1 tile triple doubles as the Pallas BlockSpec
+(bm, bn, bk) recommendation surfaced through `best_gemm_tiling`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.age import MicroArch
+from repro.core.graph import ComputeGraph, Node
+
+DATAFLOWS = ("weight_stationary", "output_stationary", "activation_stationary")
+
+
+@dataclasses.dataclass(frozen=True)
+class PPEConfig:
+    n_tilings: int = 24             # N per level (paper: ~20)
+    kernel_overhead_s: float = 3e-6  # sw-stack launch latency (paper §8 notes)
+    vector_frac: float = 1.0 / 16.0  # VPU : MXU throughput ratio (elementwise)
+    seed: int = 0
+
+
+def _pow2_candidates(dim: int, lo: int = 8) -> np.ndarray:
+    cands = []
+    d = 1
+    while d <= dim:
+        if d >= min(lo, dim):
+            cands.append(d)
+        d *= 2
+    if dim not in cands:
+        cands.append(dim)
+    return np.asarray(sorted(set(cands)), dtype=np.int64)
+
+
+def _sample_nested_tilings(m: int, n: int, k: int, n_samples: int,
+                           seed: int) -> np.ndarray:
+    """Sample nested tiling triples for (L2, L1, L0): shape (S, 3 levels, 3).
+
+    Hierarchy constraint: tile at level l-1 divides (<=) tile at level l.
+    Mix of random power-of-two samples and square-ish heuristics.
+    """
+    rng = np.random.default_rng(seed)
+    cm, cn, ck = _pow2_candidates(m), _pow2_candidates(n), _pow2_candidates(k)
+    out = []
+    for _ in range(n_samples):
+        t2 = (rng.choice(cm), rng.choice(cn), rng.choice(ck))
+        t1 = tuple(int(rng.choice(c[c <= t]))
+                   for c, t in zip((cm, cn, ck), t2))
+        t0 = tuple(int(rng.choice(c[c <= t]))
+                   for c, t in zip((cm, cn, ck), t1))
+        out.append((t2, t1, t0))
+    # deterministic heuristics: full problem, 512/128-square MXU-aligned tiles
+    for side2, side1 in ((512, 128), (1024, 256), (256, 128), (128, 128)):
+        t2 = (min(m, side2), min(n, side2), min(k, side2))
+        t1 = (min(m, side1), min(n, side1), min(k, side1))
+        t0 = (min(m, 128), min(n, 128), min(k, 128))
+        out.append((t2, t1, t0))
+    return np.asarray(out, dtype=np.float64)   # (S, 3, 3)
+
+
+def _blocked_traffic(M, N, K, tm, tn, tk, dtype_bytes):
+    """Bytes moved from the level holding (M,N,K) to the level tiled (tm,tn,tk).
+
+    Classic blocked-GEMM streaming: A re-streamed once per N-tile column,
+    B once per M-tile row, C read+written once per K-tile pass.
+    """
+    n_restream_a = jnp.ceil(N / tn)
+    n_restream_b = jnp.ceil(M / tm)
+    n_c_passes = jnp.maximum(jnp.ceil(K / tk), 1.0)
+    return dtype_bytes * (M * K * n_restream_a
+                          + K * N * n_restream_b
+                          + 2.0 * M * N * n_c_passes * 0.5 + M * N)
+
+
+def _reg_traffic(flops, nx, ny, reuse):
+    """Paper eq. 5: #RegAccess = #Flops * (Nx*Ny + K*Nx + K*Ny)/(2*K*Nx*Ny)."""
+    k = jnp.maximum(reuse, 1.0)
+    accesses = flops * (nx * ny + k * nx + k * ny) / (2.0 * k * nx * ny)
+    return accesses          # in elements; caller multiplies dtype bytes
+
+
+_GEMM_CACHE: dict = {}
+
+
+def _cache_key(arch: MicroArch, m, n, k, b, dtype_bytes, cfg: PPEConfig):
+    import jax
+    vals = (arch.compute_throughput, arch.dram_bw, *arch.mem_bw,
+            *arch.mem_capacity)
+    if any(isinstance(v, jax.core.Tracer) for v in vals):
+        return None                     # under SOE grad tracing: no caching
+    return (tuple(float(v) for v in vals), m, n, k, b, dtype_bytes,
+            cfg.n_tilings, cfg.seed, cfg.kernel_overhead_s)
+
+
+def clear_cache() -> None:
+    _GEMM_CACHE.clear()
+
+
+def gemm_time(arch: MicroArch, m: int, n: int, k: int, b: int = 1,
+              dtype_bytes: int = 2, cfg: PPEConfig = PPEConfig(),
+              return_tiling: bool = False):
+    """Hierarchical-roofline GEMM time on one node; vectorized tiling search."""
+    m, n, k = int(max(m, 1)), int(max(n, 1)), int(max(k, 1))
+    key = None
+    if not return_tiling:
+        key = _cache_key(arch, m, n, k, b, dtype_bytes, cfg)
+        if key is not None and key in _GEMM_CACHE:
+            return _GEMM_CACHE[key]
+    tilings = _sample_nested_tilings(m, n, k, cfg.n_tilings,
+                                     seed=cfg.seed + m * 7 + n * 31 + k * 101)
+    b, m, n, k = float(b), float(m), float(n), float(k)  # jnp f32 safety
+    flops = 2.0 * b * m * n * k
+    t2 = jnp.asarray(tilings[:, 0, :])   # (S,3)
+    t1 = jnp.asarray(tilings[:, 1, :])
+    t0 = jnp.asarray(tilings[:, 2, :])
+
+    caps, bws, lats = arch.memory_hierarchy()    # L0,L1,L2,DRAM
+    cap0, cap1, cap2 = caps[0], caps[1], caps[2]
+    bw0, bw1, bw2, bw_dram = bws[0], bws[1], bws[2], arch.dram_bw
+
+    def footprint(t):
+        return dtype_bytes * (t[:, 0] * t[:, 2] + t[:, 2] * t[:, 1]
+                              + t[:, 0] * t[:, 1])
+
+    # capacity feasibility (soft penalty keeps the search differentiable)
+    pen = (jnp.maximum(footprint(t2) / jnp.maximum(cap2, 1.0) - 1.0, 0.0)
+           + jnp.maximum(footprint(t1) / jnp.maximum(cap1, 1.0) - 1.0, 0.0)
+           + jnp.maximum(footprint(t0) / jnp.maximum(cap0, 1.0) - 1.0, 0.0))
+
+    # traffic per level (paper §6.2: walk upward from main memory)
+    traffic_dram = b * _blocked_traffic(m, n, k, t2[:, 0], t2[:, 1], t2[:, 2],
+                                        dtype_bytes)
+    n_t2 = (jnp.ceil(m / t2[:, 0]) * jnp.ceil(n / t2[:, 1])
+            * jnp.ceil(k / t2[:, 2]))
+    traffic_l2 = b * n_t2 * _blocked_traffic(
+        t2[:, 0], t2[:, 1], t2[:, 2], t1[:, 0], t1[:, 1], t1[:, 2], dtype_bytes)
+    n_t1 = n_t2 * (jnp.ceil(t2[:, 0] / t1[:, 0]) * jnp.ceil(t2[:, 1] / t1[:, 1])
+                   * jnp.ceil(t2[:, 2] / t1[:, 2]))
+    traffic_l1 = b * n_t1 * _blocked_traffic(
+        t1[:, 0], t1[:, 1], t1[:, 2], t0[:, 0], t0[:, 1], t0[:, 2], dtype_bytes)
+
+    # register level: dataflow reuse model (paper §6.3, eq. 5); best of 3
+    nx, ny = arch.tech.compute.systolic_dims
+    reuse_ws = t0[:, 2] / max(nx, 1)     # weight stationary: reuse along K
+    reuse_os = t0[:, 2] / max(ny, 1)     # output stationary
+    reuse_as = t0[:, 0] / max(nx, 1)     # activation stationary: reuse along M
+    reuse = jnp.maximum(jnp.maximum(reuse_ws, reuse_os), reuse_as)
+    traffic_l0 = _reg_traffic(flops, nx, ny, reuse) * dtype_bytes
+
+    t_compute = flops / arch.compute_throughput
+    times = jnp.stack([
+        jnp.broadcast_to(t_compute, traffic_dram.shape),
+        traffic_dram / bw_dram,
+        traffic_l2 / jnp.maximum(bw2, 1.0),
+        traffic_l1 / jnp.maximum(bw1, 1.0),
+        traffic_l0 / jnp.maximum(bw0, 1.0),
+    ], axis=0)
+    per_candidate = jnp.max(times, axis=0) * (1.0 + 10.0 * pen)
+    best = jnp.argmin(per_candidate)
+    t_best = per_candidate[best] + cfg.kernel_overhead_s
+    if return_tiling:
+        return t_best, np.asarray(tilings[int(best)], dtype=np.int64)
+    if key is not None:
+        _GEMM_CACHE[key] = t_best
+        if len(_GEMM_CACHE) > 200_000:
+            _GEMM_CACHE.clear()
+    return t_best
+
+
+def best_gemm_tiling(arch: MicroArch, m: int, n: int, k: int,
+                     dtype_bytes: int = 2,
+                     cfg: PPEConfig = PPEConfig()) -> Tuple[Tuple[int, int, int], ...]:
+    """The (L2, L1, L0) tile triples minimizing predicted time.
+
+    The L1 triple is the VMEM working set — i.e. the Pallas BlockSpec
+    (bm, bn, bk) recommendation used by repro.kernels.gemm.
+    """
+    _, tiling = gemm_time(arch, m, n, k, dtype_bytes=dtype_bytes, cfg=cfg,
+                          return_tiling=True)
+    return tuple(tuple(int(x) for x in level) for level in tiling)
+
+
+def elementwise_time(arch: MicroArch, n_elems: float, flops_per_elem: float,
+                     dtype_bytes: int = 2, cfg: PPEConfig = PPEConfig()):
+    n_elems = float(n_elems)
+    flops = n_elems * flops_per_elem
+    bytes_moved = 2.0 * n_elems * dtype_bytes
+    t = jnp.maximum(flops / (arch.compute_throughput * cfg.vector_frac),
+                    bytes_moved / arch.dram_bw)
+    return t + cfg.kernel_overhead_s
+
+
+def gather_time(arch: MicroArch, rows: float, width: float,
+                dtype_bytes: int = 2, cfg: PPEConfig = PPEConfig()):
+    bytes_moved = 2.0 * float(rows) * float(width) * dtype_bytes
+    return bytes_moved / arch.dram_bw + cfg.kernel_overhead_s
+
+
+def node_time(arch: MicroArch, node: Node, cfg: PPEConfig = PPEConfig()):
+    """Time one compute node (comm nodes are timed by the network model)."""
+    if node.kind == "gemm":
+        return gemm_time(arch, node.m, node.n, node.k, b=node.b,
+                         dtype_bytes=node.dtype_bytes, cfg=cfg)
+    if node.kind == "elementwise":
+        return elementwise_time(arch, node.n_elems, node.flops_per_elem,
+                                node.dtype_bytes, cfg)
+    if node.kind == "gather":
+        return gather_time(arch, node.rows, node.width, node.dtype_bytes, cfg)
+    if node.kind == "comm":
+        raise ValueError("comm nodes are timed by repro.core.placement")
+    raise ValueError(f"unknown node kind {node.kind}")
+
+
+def operational_intensity(node: Node) -> float:
+    """Compulsory-traffic OI (flops / main-memory bytes) — used by the
+    motivation study (paper Fig. 1)."""
+    io = node.io_bytes
+    return node.flops / io if io else 0.0

@@ -1,0 +1,195 @@
+"""Event-driven end-to-end time estimation (DeepFlow paper §6.5) and the
+top-level CrossFlow `predict` API.
+
+Event-driven simulation = resource-constrained critical-path analysis.
+Per the paper, simulation runs on the *original* (one-replica, sharded)
+graph: DP/KP replicas are homogeneous and deterministic so their timing is
+identical; only pipeline parallelism needs explicit (stage x microbatch)
+event scheduling.
+
+Resources per hardware node: one compute engine (<= k kernels at a time,
+k=1) and one network engine; compute/comm overlap is a switch (default on —
+matches both modern NCCL-style async collectives and XLA's latency-hiding
+scheduler; CrossFlow's validation in the paper included overlapped NCCL).
+
+Everything is `jnp`-friendly: with a fixed schedule order the accumulated
+times are differentiable w.r.t. MicroArch parameters (used by the SOE).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core import placement as placement_lib
+from repro.core import roofline, transform
+from repro.core.age import MicroArch
+from repro.core.graph import ComputeGraph
+from repro.core.parallelism import Strategy
+from repro.core.placement import Placement, SystemGraph
+from repro.core.roofline import PPEConfig
+
+
+@dataclasses.dataclass
+class TimeBreakdown:
+    total_s: object
+    compute_s: object
+    comm_s: object
+    exposed_comm_s: object
+    pipeline_bubble_s: object = 0.0
+    per_node: Optional[Dict[str, object]] = None
+
+    def as_floats(self) -> "TimeBreakdown":
+        f = lambda x: float(x)
+        return TimeBreakdown(f(self.total_s), f(self.compute_s),
+                             f(self.comm_s), f(self.exposed_comm_s),
+                             f(self.pipeline_bubble_s), None)
+
+
+def _node_times(arch: MicroArch, g: ComputeGraph, placement: Placement,
+                cfg: PPEConfig, pod_bw: Optional[float]) -> Dict[str, object]:
+    times = {}
+    for name, node in g.nodes.items():
+        if node.kind == "comm":
+            t = placement_lib.comm_time(
+                arch, placement, node.comm, node.comm_bytes, node.comm_axis,
+                node.comm_participants, pod_bw=pod_bw)
+        else:
+            t = roofline.node_time(arch, node, cfg)
+        # a tagged node stands for `repeat` identical layers (lmgraph)
+        times[name] = t * node.meta.get("repeat", 1)
+    return times
+
+
+def simulate_graph(arch: MicroArch, g: ComputeGraph, placement: Placement,
+                   cfg: PPEConfig = PPEConfig(), overlap: bool = True,
+                   pod_bw: Optional[float] = None,
+                   keep_per_node: bool = False) -> TimeBreakdown:
+    """List-schedule the sharded graph on one replica's resources.
+
+    Two engines (compute, network); deps respected; fixed topo order so the
+    schedule itself is not time-dependent (keeps the result differentiable).
+    """
+    times = _node_times(arch, g, placement, cfg, pod_bw)
+    finish: Dict[str, object] = {}
+    compute_free, net_free = jnp.asarray(0.0), jnp.asarray(0.0)
+    compute_busy, comm_busy = jnp.asarray(0.0), jnp.asarray(0.0)
+    for name in g.topo_order():
+        node = g.nodes[name]
+        ready = jnp.asarray(0.0)
+        for p in dict.fromkeys(g.preds(name)):
+            ready = jnp.maximum(ready, finish[p])
+        dur = times[name]
+        if node.kind == "comm":
+            start = jnp.maximum(ready, net_free) if not overlap else ready
+            # network engine serializes comms even when overlapped w/ compute
+            start = jnp.maximum(start, net_free)
+            net_free = start + dur
+            comm_busy = comm_busy + dur
+        else:
+            start = jnp.maximum(ready, compute_free)
+            compute_free = start + dur
+            compute_busy = compute_busy + dur
+        if not overlap:
+            # no overlap: both engines serialize behind each other
+            merged = jnp.maximum(compute_free, net_free)
+            compute_free = net_free = merged
+        finish[name] = start + dur
+    total = jnp.asarray(0.0)
+    for v in finish.values():
+        total = jnp.maximum(total, v)
+    exposed = jnp.maximum(total - compute_busy, 0.0)
+    return TimeBreakdown(total_s=total, compute_s=compute_busy,
+                         comm_s=comm_busy, exposed_comm_s=exposed,
+                         per_node=times if keep_per_node else None)
+
+
+def simulate_pipeline(stage_times, p2p_times, n_microbatches: int):
+    """(stage x microbatch) grid event-sim, GPipe schedule (paper Fig. 5
+    bottom shows the analogous backward-pass grid).
+
+    start(s, m) = max(finish(s-1, m) + p2p(s-1), finish(s, m-1)).
+    Returns makespan and bubble time.
+    """
+    S = len(stage_times)
+    M = int(n_microbatches)
+    finish = [[None] * M for _ in range(S)]
+    for m in range(M):
+        for s in range(S):
+            ready = jnp.asarray(0.0)
+            if s > 0:
+                ready = jnp.maximum(ready, finish[s - 1][m] + p2p_times[s - 1])
+            if m > 0:
+                ready = jnp.maximum(ready, finish[s][m - 1])
+            finish[s][m] = ready + stage_times[s]
+    makespan = finish[S - 1][M - 1]
+    work = sum(stage_times) * 0  # typing seed
+    total_work = jnp.asarray(0.0)
+    for s in range(S):
+        total_work = total_work + stage_times[s] * M
+    bubble = jnp.maximum(makespan * S - total_work, 0.0) / S
+    return makespan, bubble
+
+
+# ---------------------------------------------------------------------------
+# Top-level CrossFlow predict
+# ---------------------------------------------------------------------------
+
+
+def predict(arch: MicroArch, g: ComputeGraph, strategy: Strategy,
+            system: Optional[SystemGraph] = None,
+            cfg: PPEConfig = PPEConfig(), overlap: bool = True,
+            n_microbatches: Optional[int] = None,
+            pod_bw: Optional[float] = None,
+            grad_bytes: Optional[float] = None) -> TimeBreakdown:
+    """End-to-end per-iteration time for (model graph, strategy, hardware).
+
+    This is the CrossFlow standalone entry point (paper §3.1): transform ->
+    place -> roofline per node -> event-driven end-to-end estimate.
+    """
+    if system is None:
+        # balanced 2-D torus factorization (a, b), a*b = devices, a <= b
+        n = strategy.devices
+        a = max(int(n ** 0.5), 1)
+        while n % a:
+            a -= 1
+        system = SystemGraph(dims=(a, n // a), levels=("inter", "inter")) \
+            if a > 1 else SystemGraph(dims=(n,), levels=("inter",))
+    pl = placement_lib.place(system, strategy)
+    sharded = transform.shard_graph(g, strategy, grad_bytes=grad_bytes)
+
+    if strategy.lp <= 1:
+        return simulate_graph(arch, sharded, pl, cfg, overlap, pod_bw)
+
+    # pipeline: per-stage time from list-scheduling each stage subgraph,
+    # then the (stage x microbatch) grid sim.
+    stages = transform.stage_subgraphs(sharded, strategy.lp)
+    stage_bd = [simulate_graph(arch, sg, pl, cfg, overlap, pod_bw)
+                for sg in stages if len(sg)]
+    mb = n_microbatches or max(4 * strategy.lp, 8)
+    # per-microbatch stage time: stage work divided across microbatches
+    st = [bd.total_s / mb for bd in stage_bd]
+    act_bytes = _stage_boundary_bytes(sharded, strategy)
+    p2p = []
+    for i in range(len(st) - 1):
+        p2p.append(placement_lib.comm_time(arch, pl, "p2p",
+                                           act_bytes / mb, "lp", 2,
+                                           pod_bw=pod_bw))
+    makespan, bubble = simulate_pipeline(st, p2p, mb)
+    compute = sum(bd.compute_s for bd in stage_bd)
+    comm = sum(bd.comm_s for bd in stage_bd)
+    return TimeBreakdown(total_s=makespan, compute_s=compute, comm_s=comm,
+                         exposed_comm_s=jnp.maximum(makespan - compute, 0.0),
+                         pipeline_bubble_s=bubble)
+
+
+def _stage_boundary_bytes(g: ComputeGraph, s: Strategy) -> float:
+    """Activation bytes crossing a stage boundary ~ largest gemm output."""
+    best = 0.0
+    for node in g.nodes.values():
+        if node.kind == "gemm":
+            best = max(best, float(node.b) * node.m * node.n
+                       * node.dtype_bytes)
+    return best

@@ -1,0 +1,202 @@
+"""Search and Optimization Engine (DeepFlow paper §7).
+
+Finds the budget breakdown W* = {A_i, P_i, R_i} minimizing predicted
+iteration time f(W), subject to ΣA_i <= 1, ΣP_i <= 1, ΣR_i <= 1, with the
+paper's update rule (eq. 6):
+
+    W_t   = W_{t-1} - η g_t
+    Ŵ_t   = W_t / ||W_t||
+    M_t   = β M_{t-1} + (1-β) Ŵ_t          (exponential averaging in
+    W_t   = Project(M_t) onto C_A, C_P, C_R  parameter space, not gradients)
+
+multi-start (S starting points), T max steps (paper: T=100, S=10).
+
+Beyond-paper (DESIGN.md): the objective is the *differentiable* CrossFlow
+path (AGE with discrete=False + roofline + fixed-order event sim), so g_t is
+an exact `jax.grad` — the paper treats CrossFlow as a black box. A finite-
+difference fallback (`grad_mode="fd"`) reproduces the paper's setup exactly.
+
+The discrete parallelism-strategy dimension is co-optimized by exhaustive
+enumeration around the GD loop (`co_optimize`), matching the paper's §9.2
+"parallelism-strategy + architecture" studies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import age as age_lib
+from repro.core import simulate
+from repro.core.age import Budgets, COMPONENTS, PERIM_COMPONENTS
+from repro.core.graph import ComputeGraph
+from repro.core.parallelism import Strategy, enumerate_strategies
+from repro.core.placement import SystemGraph
+from repro.core.roofline import PPEConfig
+from repro.core.techlib import TechConfig
+
+_NC = len(COMPONENTS)
+_NP = len(PERIM_COMPONENTS)
+_DIM = 2 * _NC + _NP
+
+
+@dataclasses.dataclass
+class SOEConfig:
+    lr: float = 0.05
+    beta: float = 0.7               # momentum / EMA discount (paper eq. 6)
+    steps: int = 100                # T (paper: 100)
+    starts: int = 10                # S (paper: 10)
+    seed: int = 0
+    grad_mode: str = "auto"         # "auto" (jax.grad) | "fd" (paper-style)
+    fd_eps: float = 1e-3
+    min_frac: float = 1e-3
+
+
+@dataclasses.dataclass
+class SOEResult:
+    budgets: Budgets
+    time_s: float
+    strategy: Optional[Strategy]
+    history: List[float]
+    n_queries: int
+
+
+def _project_simplexes(w: jnp.ndarray, min_frac: float) -> jnp.ndarray:
+    """Project each constraint group (area, power, perimeter) onto
+    {x >= min_frac, Σx <= 1} — scale-down projection (budgets may be
+    under-used, never over-used)."""
+    def proj(seg):
+        seg = jnp.maximum(seg, min_frac)
+        total = jnp.sum(seg)
+        n = seg.shape[0]
+        # scale only the mass above the floor so the floor is preserved
+        # (and the projection is idempotent)
+        alpha = (1.0 - n * min_frac) / jnp.maximum(total - n * min_frac,
+                                                   1e-12)
+        scaled = min_frac + (seg - min_frac) * alpha
+        return jnp.where(total > 1.0, scaled, seg)
+    a, p, r = w[:_NC], w[_NC:2 * _NC], w[2 * _NC:]
+    return jnp.concatenate([proj(a), proj(p), proj(r)])
+
+
+def make_objective(tech: TechConfig, graph: ComputeGraph, strategy: Strategy,
+                   system: Optional[SystemGraph] = None,
+                   template: Optional[Budgets] = None,
+                   ppe: PPEConfig = PPEConfig(),
+                   pod_bw: Optional[float] = None) -> Callable:
+    """f(W) -> predicted iteration time (differentiable jnp scalar)."""
+    like = template or Budgets.default()
+
+    def f(w: jnp.ndarray):
+        budgets = Budgets.from_vector(w, like)
+        arch = age_lib.generate(tech, budgets, discrete=False)
+        bd = simulate.predict(arch, graph, strategy, system=system, cfg=ppe,
+                              pod_bw=pod_bw)
+        return bd.total_s
+
+    return f
+
+
+def optimize(objective: Callable, cfg: SOEConfig = SOEConfig(),
+             template: Optional[Budgets] = None) -> SOEResult:
+    """Projected GD with parameter-space exponential averaging (eq. 6)."""
+    like = template or Budgets.default()
+    rng = np.random.default_rng(cfg.seed)
+    n_queries = 0
+
+    if cfg.grad_mode == "fd":
+        def grad_fn(w):
+            nonlocal n_queries
+            base = float(objective(w))
+            g = np.zeros(_DIM, dtype=np.float32)
+            for i in range(_DIM):
+                wp = np.array(w)
+                wp[i] += cfg.fd_eps
+                g[i] = (float(objective(jnp.asarray(wp))) - base) / cfg.fd_eps
+                n_queries += 1
+            return jnp.asarray(g), base
+    else:
+        vg = jax.value_and_grad(objective)
+
+        def grad_fn(w):
+            nonlocal n_queries
+            n_queries += 1
+            val, g = vg(w)
+            return g, float(val)
+
+    best_w, best_t, history = None, float("inf"), []
+    for s in range(cfg.starts):
+        if s == 0:
+            w = _project_simplexes(like.as_vector(), cfg.min_frac)
+        else:
+            w = jnp.asarray(rng.dirichlet(np.ones(_NC)).tolist()
+                            + rng.dirichlet(np.ones(_NC)).tolist()
+                            + rng.dirichlet(np.ones(_NP)).tolist(),
+                            dtype=jnp.float32)
+        m = w
+        last = float("inf")
+        for t in range(cfg.steps):
+            g, val = grad_fn(w)
+            history.append(val)
+            if val < best_t:
+                best_t, best_w = val, w
+            g = jnp.nan_to_num(g, nan=0.0, posinf=0.0, neginf=0.0)
+            gnorm = jnp.linalg.norm(g)
+            g = jnp.where(gnorm > 0, g / (gnorm + 1e-12), g)
+            w_new = w - cfg.lr * g                       # W_t = W_{t-1} - η g
+            w_hat = w_new / (jnp.linalg.norm(w_new) + 1e-12)   # normalize
+            m = cfg.beta * m + (1.0 - cfg.beta) * w_hat        # EMA in W-space
+            w = _project_simplexes(m, cfg.min_frac)            # project
+            if abs(last - val) < 1e-7 * max(val, 1e-12):
+                break
+            last = val
+    final_t = float(objective(best_w))
+    if final_t < best_t:
+        best_t = final_t
+    return SOEResult(budgets=Budgets.from_vector(np.asarray(best_w), like),
+                     time_s=float(best_t), strategy=None,
+                     history=history, n_queries=n_queries)
+
+
+def co_optimize(tech: TechConfig, graph: ComputeGraph, n_devices: int,
+                system: Optional[SystemGraph] = None,
+                cfg: SOEConfig = SOEConfig(),
+                template: Optional[Budgets] = None,
+                strategies: Optional[Sequence[Strategy]] = None,
+                max_strategies: int = 24,
+                search_arch: bool = True,
+                ppe: PPEConfig = PPEConfig()) -> SOEResult:
+    """Joint (parallelism strategy x hardware budget) search (paper §9.2).
+
+    With search_arch=False only the strategy is optimized on the template
+    budgets (the paper's "parallelism strategy optimization alone" baseline).
+    """
+    like = template or Budgets.default()
+    if strategies is None:
+        strategies = list(enumerate_strategies(n_devices, max_lp=4))
+    # rank strategies on template budgets, then refine the top few
+    ranked = []
+    for st in strategies:
+        f = make_objective(tech, graph, st, system=system, template=like,
+                           ppe=ppe)
+        ranked.append((float(f(like.as_vector())), st))
+    ranked.sort(key=lambda x: x[0])
+    if not search_arch:
+        t, st = ranked[0]
+        return SOEResult(budgets=like, time_s=t, strategy=st, history=[],
+                         n_queries=len(ranked))
+    best: Optional[SOEResult] = None
+    for t0, st in ranked[:max(1, max_strategies // 8)]:
+        f = make_objective(tech, graph, st, system=system, template=like,
+                           ppe=ppe)
+        res = optimize(f, cfg=cfg, template=like)
+        res = dataclasses.replace(res, strategy=st)
+        if best is None or res.time_s < best.time_s:
+            best = res
+    assert best is not None
+    return best

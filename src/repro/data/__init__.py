@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, PrefetchIterator, synth_batch

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)
+                   ).astype(out_dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Naive softmax attention with GQA + causal + local-window masking."""
+    b, h, sq, d = q.shape
+    _, h_kv, skv, _ = k.shape
+    group = h // h_kv
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def mlstm_parallel_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                       f_cum: jax.Array, log_i: jax.Array) -> jax.Array:
+    """Naive decay-weighted linear attention (xLSTM parallel form)."""
+    b, h, s, d = q.shape
+    scale = d ** -0.5
+    a = (f_cum[..., :, None] - f_cum[..., None, :]
+         + log_i[..., None, :])                          # (b, h, s, s)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    a = jnp.where(causal[None, None], a, -1e30)
+    m = jnp.max(a, axis=-1, keepdims=True)
+    dmat = jnp.exp(a - m)
+    qk = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                    k.astype(jnp.float32))
+    w = qk * dmat
+    num = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.sum(w, axis=-1, keepdims=True)),
+                      jnp.exp(-m))
+    return (num / den).astype(q.dtype)
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via lax.scan over the sequence."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (jnp.swapaxes(a32, 0, 1), jnp.swapaxes(b32, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1)

@@ -1,0 +1,366 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the REAL step function (train_step including the
+AdamW update, prefill_step, or decode serve_step) with ShapeDtypeStruct
+inputs under the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+compiles it, and records:
+
+  * memory_analysis()  — proves the cell fits per-device HBM,
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective bytes   — parsed from the compiled HLO per collective kind,
+  * the DeepFlow planner's CrossFlow prediction for the same cell
+    (prediction vs XLA-derived terms = the validation axis).
+
+Artifacts land in artifacts/dryrun/<arch>__<cell>__<mesh>.json; runs are
+resumable (existing artifacts are skipped unless --force).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b \
+        --cell train_4k --mesh single
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import ARCH_IDS, SHAPE_CELLS, applicable_cells, \
+    get_config
+from repro.core import planner as planner_lib
+from repro.launch import mesh as mesh_lib
+from repro.launch.train import make_train_step
+from repro.models import build_model, input_specs
+from repro.parallel import sharding as shard_lib
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    These are PER-DEVICE shapes (SPMD module), i.e. bytes each device
+    receives per op — the right operand for the collective roofline term.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^[%\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", line)
+        if not m:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        op_base = op.split(".")[0]
+        if op_base.endswith("-start"):
+            op_base = op_base[:-6]
+        if op_base in _COLLECTIVES:
+            out[op_base] += _shape_bytes(shape_txt)
+            out["count"] += 1
+    return out
+
+
+def _abstract(tree):
+    return jax.eval_shape(lambda: tree) if callable(tree) else tree
+
+
+def build_cell(arch: str, cell_name: str, mesh, mesh_shape, fsdp=True,
+               remat="auto", cfg_override=None, opts=None):
+    """Returns (fn, kwargs_specs, in_shardings tuple, plan).
+
+    `opts` (hillclimb variants): cfg=dict of ArchConfig overrides,
+    rules=dict of logical-axis rule overrides, serve_bf16=bool (bf16 params
+    for prefill/decode), bf16_grads=bool (bf16 gradient all-reduce),
+    remat=bool.
+    """
+    import dataclasses as _dc
+    opts = opts or {}
+    cfg = cfg_override or get_config(arch)
+    if opts.get("cfg"):
+        cfg = _dc.replace(cfg, **opts["cfg"])
+    if "remat" in opts:
+        remat = opts["remat"]
+    model = build_model(cfg)
+    cell = SHAPE_CELLS[cell_name]
+    plan = planner_lib.plan(cfg, cell, mesh_shape, mesh.axis_names)
+    rules = shard_lib.resolve_rules(plan, mesh, fsdp=fsdp)
+    if opts.get("rules"):
+        rules = dict(rules, **opts["rules"])
+    p_shard = shard_lib.param_shardings(model, plan, mesh, fsdp=fsdp)
+    p_dtype = (jnp.bfloat16 if (opts.get("serve_bf16")
+                                and cell.kind != "train") else jnp.float32)
+    p_abs = model.abstract_params(p_dtype)
+    specs = input_specs(cfg, cell)
+    b_shard = shard_lib.batch_shardings(cfg, cell, plan, mesh)
+    b_shard = {k: b_shard[k] for k in specs}    # match input_specs exactly
+
+    if cell.kind == "train":
+        # remat may be bool or a policy string ("dots") — pass it through
+        use_remat = (cell.seq_len * cell.global_batch >= 2**20
+                     if remat == "auto" else remat)
+        opt_cfg = optim.AdamWConfig(total_steps=1000)
+        compression = "bf16" if opts.get("bf16_grads") else "none"
+        gsh = p_shard if opts.get("grad_constraint") else None
+        step = make_train_step(model, cfg, opt_cfg, rules, mesh,
+                               use_remat, compression, grad_shardings=gsh)
+
+        def fn(params, opt_state, batch):
+            p, o, _, metrics = step(params, opt_state, None, batch)
+            return p, o, metrics["loss"]
+
+        opt_abs = jax.eval_shape(optim.init, p_abs)
+        opt_shard = optim.AdamWState(
+            step=shard_lib.scalar_sharding(mesh),
+            mu=p_shard, nu=p_shard)
+        args = (p_abs, opt_abs, specs)
+        in_sh = (p_shard, opt_shard, b_shard)
+        return fn, args, in_sh, plan, cfg
+
+    if cell.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            # whisper prefill = encode + cross-KV precompute
+            def fn(params, batch):
+                return model.prefill(params, batch, rules=rules, mesh=mesh)
+        else:
+            from repro.models import transformer as tr
+
+            def fn(params, batch):
+                # realistic serving prefill: fill caches AND return the
+                # next-token logits (keeps the head/last layer live)
+                caches = tr.init_cache(cfg, cell.global_batch, cell.seq_len)
+                logits, caches, _ = tr.forward(
+                    params, batch["tokens"], cfg,
+                    embeds=batch.get("embeds"), caches=caches,
+                    rules=rules, mesh=mesh)
+                return logits[:, -1], caches
+
+        args = (p_abs, specs)
+        in_sh = (p_shard, b_shard)
+        return fn, args, in_sh, plan, cfg
+
+    # decode
+    max_len = cell.seq_len
+    cache_abs = jax.eval_shape(
+        lambda: model.init_cache(cell.global_batch, max_len))
+    cache_shard = shard_lib.cache_shardings(cfg, plan, mesh, cache_abs)
+
+    def fn(params, caches, batch):
+        pos = jnp.asarray(max_len - 1, jnp.int32)
+        logits, new_caches = model.decode_step(params, caches,
+                                               batch["tokens"], pos,
+                                               rules=rules, mesh=mesh)
+        return logits, new_caches
+
+    args = (p_abs, cache_abs, specs)
+    in_sh = (p_shard, cache_shard, b_shard)
+    return fn, args, in_sh, plan, cfg
+
+
+def _compile_metrics(arch, cell_name, mesh, mesh_shape, fsdp, cfg_override,
+                     remat="auto", opts=None):
+    """One lower+compile; returns raw metrics (scan bodies counted ONCE —
+    XLA cost_analysis does not multiply while-loop trip counts)."""
+    t0 = time.time()
+    fn, args, in_sh, plan, cfg = build_cell(arch, cell_name, mesh,
+                                            mesh_shape, fsdp=fsdp,
+                                            remat=remat, opts=opts,
+                                            cfg_override=cfg_override)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    return {
+        "plan": plan, "cfg": cfg,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes",
+                                  getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+
+
+def _probe_configs(cfg):
+    """Variant configs for the scan-trip-count correction.
+
+    Returns (probes, combine) where `combine(full, probe_metrics)` produces
+    corrected totals:  m = m_rem + n_groups * (m_full - m_rem)  (decoder)
+    or the two-scan version for enc-dec.
+    """
+    import dataclasses as dc
+    from repro.models.transformer import group_layout
+    if cfg.is_encoder_decoder:
+        n_enc, n_dec = cfg.n_encoder_layers, cfg.n_layers
+        probes = {"zero": dc.replace(cfg, n_layers=0, n_encoder_layers=0),
+                  "enc0": dc.replace(cfg, n_encoder_layers=0),
+                  "dec0": dc.replace(cfg, n_layers=0)}
+
+        def combine(full, pm, key):
+            z = pm["zero"][key]
+            b_enc = pm["dec0"][key] - z        # dec0 keeps only the encoder
+            b_dec = pm["enc0"][key] - z
+            return z + n_enc * b_enc + n_dec * b_dec
+
+        return probes, combine
+    pat, n_groups, rem = group_layout(cfg)
+    probes = {"rem": dc.replace(cfg, n_layers=rem)}   # rem==0 -> zero model
+
+    def combine(full, pm, key):
+        m_rem = pm["rem"][key]
+        return m_rem + n_groups * (full[key] - m_rem)
+
+    return probes, combine
+
+
+def _corrected(full, probe_metrics, combine):
+    out = {}
+    out["flops"] = combine(full, probe_metrics, "flops")
+    out["bytes"] = combine(full, probe_metrics, "bytes")
+    coll = {}
+    for k in list(full["coll"].keys()):
+        f = {"k": full["coll"][k]}
+        pm = {name: {"k": m["coll"][k]} for name, m in
+              probe_metrics.items()}
+        coll[k] = combine(f, pm, "k")
+    out["coll"] = coll
+    return out
+
+
+def run_cell(arch: str, cell_name: str, mesh_kind: str,
+             force: bool = False, fsdp: bool = True,
+             save: bool = True, variant: str = "",
+             correct_scan: bool = True, remat: str = "auto",
+             opts: Optional[Dict] = None) -> Optional[Dict]:
+    os.makedirs(ART_DIR, exist_ok=True)
+    tag = f"{arch}__{cell_name}__{mesh_kind}" + (f"__{variant}" if variant
+                                                 else "")
+    path = os.path.join(ART_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    multi = mesh_kind == "multi"
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi)
+    mesh_shape = (2, 16, 16) if multi else (16, 16)
+    try:
+        full = _compile_metrics(arch, cell_name, mesh, mesh_shape, fsdp,
+                                None, remat=remat, opts=opts)
+        plan, cfg = full["plan"], full["cfg"]
+        corrected = None
+        if correct_scan:
+            probes, combine = _probe_configs(cfg)
+            pm = {}
+            for name, pcfg in probes.items():
+                pm[name] = _compile_metrics(arch, cell_name, mesh,
+                                            mesh_shape, fsdp, pcfg,
+                                            remat=remat, opts=opts)
+            corrected = _corrected(full, pm, combine)
+        n_dev = 512 if multi else 256
+        result = {
+            "arch": arch, "cell": cell_name, "mesh": mesh_kind,
+            "variant": variant,
+            "mesh_shape": list(mesh_shape), "devices": n_dev, "ok": True,
+            "strategy": plan.strategy.name,
+            "predicted_step_s": plan.predicted_step_s,
+            "predicted_breakdown": plan.predicted_breakdown,
+            "flops_per_device_raw": full["flops"],
+            "bytes_per_device_raw": full["bytes"],
+            "flops_per_device": (corrected or full)["flops"],
+            "bytes_per_device": (corrected or full)["bytes"],
+            "memory": full["memory"],
+            "collectives_raw": full["coll"],
+            "collectives": (corrected or full)["coll"],
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "lower_s": full["lower_s"],
+            "compile_s": full["compile_s"],
+            "scan_corrected": bool(corrected),
+        }
+    except Exception as e:              # noqa: BLE001 — record the failure
+        result = {"arch": arch, "cell": cell_name, "mesh": mesh_kind,
+                  "variant": variant, "ok": False, "error": str(e),
+                  "traceback": traceback.format_exc()[-4000:]}
+    if save:
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        cells = [c.name for c in applicable_cells(cfg)]
+        if args.cell != "all":
+            cells = [c for c in cells if c == args.cell]
+        for cell in cells:
+            for mk in meshes:
+                r = run_cell(arch, cell, mk, force=args.force)
+                status = "OK " if r["ok"] else "FAIL"
+                extra = ""
+                if r["ok"]:
+                    peak = r["memory"]["peak_bytes"] or \
+                        (r["memory"]["argument_bytes"]
+                         + r["memory"]["temp_bytes"])
+                    extra = (f"flops/dev={r['flops_per_device']:.3e} "
+                             f"coll={r['collectives']['count']} "
+                             f"compile={r['compile_s']:.0f}s")
+                    n_ok += 1
+                else:
+                    extra = r["error"][:140]
+                    n_fail += 1
+                print(f"[dryrun] {status} {arch:22s} {cell:12s} {mk:6s} "
+                      f"{extra}", flush=True)
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

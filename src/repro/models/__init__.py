@@ -1,0 +1,4 @@
+"""repro.models — the real JAX model zoo for the 10 assigned architectures
+plus the paper's LSTM LM, built from one composable layer library."""
+
+from repro.models.model import Model, build_model, input_specs

@@ -1,0 +1,282 @@
+"""Shared model machinery: parameter definitions with logical sharding axes,
+norms, positions, and the chunked (flash-semantics) attention used by every
+arch on the XLA path.
+
+Parameter handling follows the single-source-of-truth pattern: a model is
+described once as a pytree of `ParamDef`s (shape + logical axes + init);
+from it we derive (a) materialized params, (b) `jax.ShapeDtypeStruct`
+abstract params for the dry-run, (c) `PartitionSpec`s via the logical-axis
+rules emitted by the DeepFlow planner (repro.core.planner.ShardingPlan).
+
+Logical axes used by params:
+    layers   scan-stacked layer axis (never sharded)
+    vocab    embedding/logits vocabulary dim        -> model
+    fsdp     the weight dim sharded ZeRO-3-style    -> data (big archs)
+    heads    attention projection out dim           -> model
+    mlp      ffn hidden                             -> model
+    experts  MoE expert axis                        -> model (EP)
+and by activations:
+    batch -> (pod, data);  act_seq, act_embed -> replicated;
+    act_heads -> model;  kv_seq -> model only under SP (long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# ParamDef machinery
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones
+    scale: Optional[float] = None   # default: 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_init(defs, key: jax.Array, dtype=jnp.float32):
+    """Materialize a ParamDef tree into arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def mk(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+        scale = d.scale if d.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale
+                ).astype(dtype)
+
+    return treedef.unflatten([mk(d, k) for d, k in zip(leaves, keys)])
+
+
+def tree_abstract(defs, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def)
+
+
+def tree_pspecs(defs, rules: Dict[str, Optional[Tuple[str, ...]]]):
+    """ParamDef tree -> PartitionSpec tree via logical-axis rules."""
+    def spec(d: ParamDef):
+        parts = []
+        for ax in d.axes:
+            r = rules.get(ax) if ax is not None else None
+            parts.append(r if r is None or isinstance(r, str) else tuple(r))
+        return P(*parts)
+    return jax.tree.map(spec, defs, is_leaf=is_def)
+
+
+def rules_from_plan(plan_rules) -> Dict[str, Optional[Tuple[str, ...]]]:
+    base = {k: v for k, v in plan_rules}
+    # param-axis defaults derived from the activation rules
+    base.setdefault("layers", None)
+    base.setdefault("fsdp", base.get("batch") and ("data",) or None)
+    base.setdefault("act_heads", base.get("heads"))
+    base.setdefault("act_embed", None)
+    base.setdefault("act_seq", None)
+    return base
+
+
+def logical(x: jax.Array, axes: Tuple[Optional[str], ...],
+            rules: Optional[Dict] = None, mesh=None) -> jax.Array:
+    """Activation sharding constraint by logical axes; no-op without rules."""
+    if rules is None or mesh is None:
+        return x
+    parts = []
+    used = set()
+    for ax in axes:
+        r = rules.get(ax) if ax is not None else None
+        if isinstance(r, str):
+            r = (r,)
+        if r is not None:
+            # drop mesh axes the current mesh doesn't have or that an
+            # earlier dim already claimed (SP variants remap act_seq)
+            r = tuple(a for a in r if a in mesh.axis_names
+                      and a not in used) or None
+            if r:
+                used.update(r)
+        parts.append(r)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*parts)))
+
+
+# ---------------------------------------------------------------------------
+# Norms / positions / activations
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(
+        jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def norm(kind: str, x, p) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def norm_defs(kind: str, d: int) -> Dict[str, ParamDef]:
+    if kind == "rmsnorm":
+        return {"scale": ParamDef((d,), (None,), init="zeros")}
+    return {"scale": ParamDef((d,), (None,), init="ones"),
+            "bias": ParamDef((d,), (None,), init="zeros")}
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+def activation(kind: str, x: jax.Array) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def mask_padded_vocab(logits: jax.Array, vocab: int) -> jax.Array:
+    """Set the padded vocab slots (vocab..padded) to -inf so CE/argmax
+    never see them; keeps the padded (shardable) shape."""
+    pad = logits.shape[-1] - vocab
+    if pad <= 0:
+        return logits
+    return jnp.concatenate(
+        [logits[..., :vocab],
+         jnp.full(logits.shape[:-1] + (pad,), -1e30, logits.dtype)],
+        axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention (flash semantics in pure jnp — the XLA/dry-run path)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, window: Optional[int] = None,
+                      q_offset: int = 0,
+                      kv_len: Optional[jax.Array] = None,
+                      q_chunk: int = 1024, kv_chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention without materializing (sq, skv).
+
+    q: (b, h, sq, d); k/v: (b, h_kv, skv, d). `q_offset` is the absolute
+    position of q[0] (decode: cache length); `kv_len` (scalar array) masks
+    cache positions >= kv_len. Memory: O(q_chunk * kv_chunk) per (b, h).
+    """
+    b, h, sq, d = q.shape
+    _, h_kv, skv, _ = k.shape
+    group = h // h_kv
+    scale = d ** -0.5
+    qc = min(q_chunk, sq)
+    while sq % qc:
+        qc -= 1
+    kc = min(kv_chunk, skv)
+    while skv % kc:
+        kc -= 1
+    n_q, n_k = sq // qc, skv // kc
+
+    q = q.reshape(b, h_kv, group, sq, d)
+
+    def kv_step(carry, kv_idx):
+        acc, m, l, q_blk, q_pos = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k, kv_idx * kc, kc, axis=2)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, kv_idx * kc, kc, axis=2)
+        s = jnp.einsum("bgGqd,bgkd->bgGqk", q_blk.astype(jnp.float32),
+                       k_blk.astype(jnp.float32)) * scale
+        k_pos = kv_idx * kc + jnp.arange(kc)
+        mask = jnp.ones((qc, kc), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            mask &= (k_pos < kv_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bgGqk,bgkd->bgGqd", p,
+                                      v_blk.astype(jnp.float32))
+        return (acc, m_new, l, q_blk, q_pos), None
+
+    def q_step(q_idx):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, q_idx * qc, qc, axis=3)
+        q_pos = q_offset + q_idx * qc + jnp.arange(qc)
+        acc0 = jnp.zeros((b, h_kv, group, qc, d), jnp.float32)
+        m0 = jnp.full((b, h_kv, group, qc, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h_kv, group, qc, 1), jnp.float32)
+        (acc, _, l, _, _), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0, q_blk, q_pos), jnp.arange(n_k))
+        return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+    if n_q == 1:
+        out = q_step(0)
+    else:
+        outs = jax.lax.map(q_step, jnp.arange(n_q))  # (n_q, b, hkv, g, qc, d)
+        out = jnp.moveaxis(outs, 0, 3).reshape(b, h_kv, group, sq, d)
+    return out.reshape(b, h, sq, d)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 0.0) -> jax.Array:
+    """Mean next-token CE; logits (..., vocab) f32-safe, labels int (...,)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None],
+                                 axis=-1).squeeze(-1)
+    loss = jnp.mean(lse - picked)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

@@ -1,0 +1,190 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The conv/mel audio frontend is a STUB per the assignment: the encoder
+consumes precomputed (batch, frames, d_model) frame embeddings from
+`input_specs()`. Sinusoidal positions on both sides (whisper uses
+sinusoidal enc / learned dec — deviation noted in DESIGN.md). Decoder =
+causal self-attention + cross-attention + FFN; cross K/V are computed once
+at prefill and cached.
+
+Layer stacks scan over stacked params like repro.models.transformer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.common import ParamDef
+from repro.models.transformer import attention_apply, attention_defs, \
+    ffn_apply, ffn_defs, stack_defs, _adtype
+
+
+def _enc_block_defs(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    return {"ln1": common.norm_defs(cfg.norm_kind, d),
+            "attn": attention_defs(cfg),
+            "ln2": common.norm_defs(cfg.norm_kind, d),
+            "ffn": ffn_defs(cfg)}
+
+
+def _dec_block_defs(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    return {"ln1": common.norm_defs(cfg.norm_kind, d),
+            "self": attention_defs(cfg),
+            "lnx": common.norm_defs(cfg.norm_kind, d),
+            "cross": attention_defs(cfg),
+            "ln2": common.norm_defs(cfg.norm_kind, d),
+            "ffn": ffn_defs(cfg)}
+
+
+def encdec_defs(cfg: ArchConfig) -> Dict:
+    return {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "fsdp"),
+                          scale=0.02),
+        "enc": stack_defs(_enc_block_defs(cfg), cfg.n_encoder_layers),
+        "enc_norm": common.norm_defs(cfg.norm_kind, cfg.d_model),
+        "dec": stack_defs(_dec_block_defs(cfg), cfg.n_layers),
+        "dec_norm": common.norm_defs(cfg.norm_kind, cfg.d_model),
+    }
+
+
+def _enc_block(p, x, cfg, rules, mesh):
+    h = common.norm(cfg.norm_kind, x, p["ln1"])
+    a, _ = attention_apply(p["attn"], h, cfg, causal=False, rules=rules,
+                           mesh=mesh)
+    x = x + a
+    h = common.norm(cfg.norm_kind, x, p["ln2"])
+    return x + ffn_apply(p["ffn"], h, cfg, rules, mesh)
+
+
+def encode(params: Dict, frames: jax.Array, cfg: ArchConfig, *,
+           rules=None, mesh=None) -> jax.Array:
+    x = frames.astype(_adtype(cfg))
+    x = x + common.sinusoidal_positions(x.shape[1], cfg.d_model
+                                        ).astype(x.dtype)[None]
+    x = common.logical(x, ("batch", "act_seq", "act_embed"), rules, mesh)
+
+    def body(x, lp):
+        return _enc_block(lp, x, cfg, rules, mesh), 0
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return common.norm(cfg.norm_kind, x, params["enc_norm"])
+
+
+def _dec_block(p, x, cfg, enc_out, self_cache, cross_cache, pos, rules,
+               mesh):
+    h = common.norm(cfg.norm_kind, x, p["ln1"])
+    a, new_self = attention_apply(p["self"], h, cfg, causal=True,
+                                  cache=self_cache, pos=pos, rules=rules,
+                                  mesh=mesh)
+    x = x + a
+    h = common.norm(cfg.norm_kind, x, p["lnx"])
+    a, new_cross = attention_apply(p["cross"], h, cfg, causal=False,
+                                   kv_source=enc_out, cache=cross_cache,
+                                   cross_cache_only=enc_out is None,
+                                   rules=rules, mesh=mesh)
+    x = x + a
+    h = common.norm(cfg.norm_kind, x, p["ln2"])
+    return x + ffn_apply(p["ffn"], h, cfg, rules, mesh), new_self, new_cross
+
+
+def _embed_tokens(params, cfg, tokens, pos0: int = 0):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_adtype(cfg))
+    pe = common.sinusoidal_positions(pos0 + tokens.shape[1], cfg.d_model)
+    return x + pe[pos0:pos0 + tokens.shape[1]].astype(x.dtype)[None]
+
+
+def forward(params: Dict, frames: jax.Array, tokens: jax.Array,
+            cfg: ArchConfig, *, rules=None, mesh=None, remat: bool = False
+            ) -> jax.Array:
+    """Training forward: (frame embeds, decoder tokens) -> logits."""
+    enc_out = encode(params, frames, cfg, rules=rules, mesh=mesh)
+    x = _embed_tokens(params, cfg, tokens)
+    x = common.logical(x, ("batch", "act_seq", "act_embed"), rules, mesh)
+
+    def body(x, lp):
+        y, _, _ = _dec_block(lp, x, cfg, enc_out, None, None, None, rules,
+                             mesh)
+        return y, 0
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = common.norm(cfg.norm_kind, x, params["dec_norm"])
+    logits = common.mask_padded_vocab(
+        (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32),
+        cfg.vocab_size)
+    return common.logical(logits, ("batch", "act_seq", "vocab"), rules, mesh)
+
+
+def init_cache(cfg: ArchConfig, batch: int, enc_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    nkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    L, S = cfg.n_layers, cfg.decoder_len
+    return {
+        "self": {"k": jnp.zeros((L, batch, nkv, S, hd), dtype),
+                 "v": jnp.zeros((L, batch, nkv, S, hd), dtype)},
+        "cross": {"k": jnp.zeros((L, batch, nkv, enc_len, hd), dtype),
+                  "v": jnp.zeros((L, batch, nkv, enc_len, hd), dtype)},
+    }
+
+
+def prefill(params: Dict, frames: jax.Array, cfg: ArchConfig, *,
+            rules=None, mesh=None, dtype=jnp.bfloat16) -> Dict:
+    """Encode + precompute per-layer cross K/V; empty self caches."""
+    enc_out = encode(params, frames, cfg, rules=rules, mesh=mesh)
+    b = frames.shape[0]
+    caches = init_cache(cfg, b, frames.shape[1], dtype)
+
+    def body(_, lp):
+        nkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        k = (enc_out @ lp["cross"]["wk"].astype(enc_out.dtype)
+             + (lp["cross"].get("bk", jnp.zeros(())).astype(enc_out.dtype)))
+        v = (enc_out @ lp["cross"]["wv"].astype(enc_out.dtype)
+             + (lp["cross"].get("bv", jnp.zeros(())).astype(enc_out.dtype)))
+        k = k.reshape(b, -1, nkv, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, -1, nkv, hd).transpose(0, 2, 1, 3)
+        return 0, {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    _, cross = jax.lax.scan(body, 0, params["dec"])
+    caches["cross"] = cross
+    return caches
+
+
+def decode_step(params: Dict, caches: Dict, tokens: jax.Array,
+                pos: jax.Array, cfg: ArchConfig, *, rules=None, mesh=None
+                ) -> Tuple[jax.Array, Dict]:
+    """One decoder token against self cache (<= decoder_len) + cross cache."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_adtype(cfg))
+    pe = common.sinusoidal_positions(cfg.decoder_len, cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0
+                                         ).astype(x.dtype)[None]
+
+    def body(x, scanned):
+        lp, sc, cc = scanned
+        y, new_self, _ = _dec_block(lp, x, cfg, None, sc, cc, pos, rules,
+                                    mesh)
+        return y, new_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec"], caches["self"], caches["cross"]))
+    caches = dict(caches)
+    caches["self"] = new_self
+    x = common.norm(cfg.norm_kind, x, params["dec_norm"])
+    logits = common.mask_padded_vocab(
+        (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32),
+        cfg.vocab_size)
+    return logits, caches
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ArchConfig, *, rules=None,
+            mesh=None, remat: bool = False):
+    logits = forward(params, batch["frames"], batch["tokens"], cfg,
+                     rules=rules, mesh=mesh, remat=remat)
+    ce = common.cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}

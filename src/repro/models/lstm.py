@@ -1,0 +1,72 @@
+"""The paper's validation/case-study workload: an N-layer LSTM language
+model (§8-§9: 2 layers, hidden 16K, vocab 800K, seq 20). Used by the
+measured-vs-predicted CPU validation (benchmarks/fig8) and runnable as a
+normal arch through build_model.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.common import ParamDef
+
+
+def lstm_defs(cfg: ArchConfig) -> Dict:
+    h = cfg.d_model
+    layers = {
+        "wx": ParamDef((cfg.n_layers, h, 4 * h), ("layers", "fsdp", "mlp")),
+        "wh": ParamDef((cfg.n_layers, h, 4 * h), ("layers", "fsdp", "mlp")),
+        "b": ParamDef((cfg.n_layers, 4 * h), ("layers", "mlp"),
+                      init="zeros"),
+    }
+    return {
+        "embed": ParamDef((cfg.padded_vocab, h), ("vocab", "fsdp"), scale=0.02),
+        "layers": layers,
+        "head": ParamDef((h, cfg.padded_vocab), ("fsdp", "vocab")),
+    }
+
+
+def _lstm_layer(wx, wh, b, x):
+    """x: (batch, seq, h) -> (batch, seq, h); lax.scan over time."""
+    bsz, seq, h = x.shape
+    xw = x @ wx.astype(x.dtype) + b.astype(x.dtype)      # (b, s, 4h)
+
+    def step(carry, xt):
+        hprev, cprev = carry
+        gates = xt + hprev @ wh.astype(xt.dtype)
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * cprev + jax.nn.sigmoid(i) * jnp.tanh(g)
+        hnew = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (hnew, c), hnew
+
+    h0 = jnp.zeros((bsz, h), x.dtype)
+    _, hs = jax.lax.scan(step, (h0, h0), jnp.swapaxes(xw, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def forward(params: Dict, tokens: jax.Array, cfg: ArchConfig, *,
+            rules=None, mesh=None, remat: bool = False) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = common.logical(x, ("batch", "act_seq", "act_embed"), rules, mesh)
+
+    def body(x, lp):
+        return _lstm_layer(lp[0], lp[1], lp[2], x), 0
+
+    x, _ = jax.lax.scan(body, x, (params["layers"]["wx"],
+                                  params["layers"]["wh"],
+                                  params["layers"]["b"]))
+    return common.mask_padded_vocab(
+        (x @ params["head"].astype(x.dtype)).astype(jnp.float32),
+        cfg.vocab_size)
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ArchConfig, *, rules=None,
+            mesh=None, remat: bool = False):
+    logits = forward(params, batch["tokens"], cfg, rules=rules, mesh=mesh)
+    ce = common.cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}

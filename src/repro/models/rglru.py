@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (recurrentgemma, arXiv:2402.19427).
+
+Block = input/gate projections -> short causal depthwise conv1d -> RG-LRU
+diagonal linear recurrence -> output projection. The recurrence
+
+    a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))          (gated decay)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is evaluated with `jax.lax.associative_scan` (log-depth, XLA-friendly) on
+the training/prefill path; decode keeps (h, conv tail) as O(1) state. The
+Pallas kernel (repro.kernels.rglru) implements the same first-order scan
+for the real-TPU path and is validated against the lax.scan oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamDef
+
+_C = 8.0                            # recurrentgemma's fixed scaling constant
+
+
+def rglru_defs(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "in_x": ParamDef((d, w), ("fsdp", "lru")),
+        "in_gate": ParamDef((d, w), ("fsdp", "lru")),
+        "conv_w": ParamDef((cfg.conv1d_width, w), (None, "lru"),
+                           scale=cfg.conv1d_width ** -0.5),
+        "conv_b": ParamDef((w,), ("lru",), init="zeros"),
+        "gate_a": ParamDef((w, w), ("lru", None), scale=w ** -0.5),
+        "gate_x": ParamDef((w, w), ("lru", None), scale=w ** -0.5),
+        "log_lambda": ParamDef((w,), ("lru",), init="zeros"),
+        "out": ParamDef((w, d), ("lru", "fsdp")),
+    }
+
+
+def _gates(p: Dict, xw: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """a_t (decay) and b_t (input) of the linear recurrence, fp32."""
+    x32 = xw.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["gate_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ p["gate_x"].astype(jnp.float32))
+    # softplus(log_lambda) init ~0.7; exp(-c * softplus * r) in (0, 1)
+    log_a = -_C * jax.nn.softplus(p["log_lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * x32)
+    return a, b
+
+
+def _conv(p: Dict, x: jax.Array, tail: jax.Array = None) -> jax.Array:
+    """Causal depthwise conv over seq; `tail` = last (width-1) steps from
+    the previous segment (decode state)."""
+    kw = p["conv_w"].shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+              for i in range(kw))
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def rglru_apply(p: Dict, x: jax.Array, cfg: ArchConfig,
+                return_state: bool = False):
+    """Train/prefill path. x: (b, s, d) -> (b, s, d) [, final decode state]."""
+    xw_pre = x @ p["in_x"].astype(x.dtype)                   # (b, s, w)
+    gate = jax.nn.gelu(x @ p["in_gate"].astype(x.dtype))
+    xw = _conv(p, xw_pre)
+    a, b = _gates(p, xw)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(x.dtype) * gate) @ p["out"].astype(x.dtype)
+    if not return_state:
+        return out
+    kw = p["conv_w"].shape[0]
+    state = {"h": h[:, -1],
+             "conv": xw_pre[:, -(kw - 1):].astype(jnp.float32)}
+    return out, state
+
+
+def rglru_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), jnp.float32)}
+
+
+def rglru_decode(p: Dict, x: jax.Array, state: Dict,
+                 cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    """One-token step. x: (b, 1, d); state: {h: (b, w), conv: (b, kw-1, w)}."""
+    xw = x @ p["in_x"].astype(x.dtype)                       # (b, 1, w)
+    gate = jax.nn.gelu(x @ p["in_gate"].astype(x.dtype))
+    new_conv = jnp.concatenate([state["conv"][:, 1:],
+                                xw.astype(jnp.float32)], axis=1)
+    xw = _conv(p, xw, tail=state["conv"])
+    a, b = _gates(p, xw)
+    h = a[:, 0] * state["h"] + b[:, 0]                       # (b, w)
+    out = (h[:, None].astype(x.dtype) * gate) @ p["out"].astype(x.dtype)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,479 @@
+"""Decoder-only LM covering the dense / GQA / local-global / MoE / hybrid
+(RG-LRU) / xLSTM families through one composable block dispatcher.
+
+Layer stacking is MaxText-style `jax.lax.scan` over *pattern groups*: the
+effective per-layer kind sequence has period
+lcm(|block_pattern|, |attn_pattern|); per-group params are stacked along a
+leading `layers` axis and scanned (one compiled body regardless of depth —
+88-layer mistral compiles the same body once). A partial remainder group
+(gemma3: 62 = 6*10 + 2) is applied explicitly.
+
+Each model exposes:
+    defs(cfg)                      ParamDef tree (single source of truth)
+    forward(params, batch, ...)    logits (train / prefill; optional caches)
+    init_cache(cfg, batch, len)    decode caches / recurrent states
+    decode_step(params, cache, tokens, pos)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common, moe as moe_lib, rglru as rglru_lib, \
+    xlstm as xlstm_lib
+from repro.models.common import ParamDef
+
+# ---------------------------------------------------------------------------
+# pattern machinery
+# ---------------------------------------------------------------------------
+
+
+def effective_pattern(cfg: ArchConfig) -> List[Tuple[str, str]]:
+    """Per-layer (block_kind, attn_kind) with the combined period."""
+    period = len(cfg.block_pattern)
+    if "attn" in cfg.block_pattern:
+        period = math.lcm(period, len(cfg.attn_pattern))
+    period = min(period, cfg.n_layers)
+    return [(cfg.block_kind(i),
+             cfg.attn_kind(i) if cfg.block_kind(i) == "attn" else "-")
+            for i in range(period)]
+
+
+def group_layout(cfg: ArchConfig) -> Tuple[List[Tuple[str, str]], int, int]:
+    """(pattern, n_full_groups, n_remainder_layers)."""
+    if cfg.n_layers == 0:          # dry-run probe variant (scan-correction)
+        return [], 0, 0
+    pat = effective_pattern(cfg)
+    return pat, cfg.n_layers // len(pat), cfg.n_layers % len(pat)
+
+
+def stack_defs(defs, n: int):
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes,
+                           init=d.init, scale=d.scale),
+        defs, is_leaf=common.is_def)
+
+
+# ---------------------------------------------------------------------------
+# attention / ffn blocks
+# ---------------------------------------------------------------------------
+
+
+def attention_defs(cfg: ArchConfig) -> Dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    defs = {
+        "wq": ParamDef((d, nh * hd), ("fsdp", "heads")),
+        "wk": ParamDef((d, nkv * hd), ("fsdp", "heads")),
+        "wv": ParamDef((d, nkv * hd), ("fsdp", "heads")),
+        "wo": ParamDef((nh * hd, d), ("heads", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((nh * hd,), ("heads",), init="zeros")
+        defs["bk"] = ParamDef((nkv * hd,), ("heads",), init="zeros")
+        defs["bv"] = ParamDef((nkv * hd,), ("heads",), init="zeros")
+    return defs
+
+
+def _proj(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def attention_apply(p: Dict, x: jax.Array, cfg: ArchConfig, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    cache: Optional[Dict] = None,
+                    pos: Optional[jax.Array] = None,
+                    kv_source: Optional[jax.Array] = None,
+                    cross_cache_only: bool = False,
+                    rules=None, mesh=None
+                    ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (b, s, d). Modes:
+      train:    cache=None                          -> (out, None)
+      prefill:  cache={k,v empty (b,nkv,S,hd)}      -> (out, filled cache)
+      decode:   cache filled, pos = current length  -> (out, updated cache)
+      cross:    kv_source = encoder states; cross_cache_only reads the
+                precomputed cross K/V without reprojecting (decode)
+    """
+    b, s, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = _proj(x, p["wq"], p.get("bq")).reshape(b, s, nh, hd)
+    if cross_cache_only:
+        assert cache is not None
+        q = q.transpose(0, 2, 1, 3)
+        out = common.chunked_attention(
+            q, cache["k"].astype(x.dtype), cache["v"].astype(x.dtype),
+            causal=False)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+        return _proj(out, p["wo"]), cache
+    src = kv_source if kv_source is not None else x
+    k = _proj(src, p["wk"], p.get("bk")).reshape(b, src.shape[1], nkv, hd)
+    v = _proj(src, p["wv"], p.get("bv")).reshape(b, src.shape[1], nkv, hd)
+
+    if cfg.rope_theta:
+        qpos = (jnp.arange(s) if pos is None
+                else pos + jnp.arange(s))
+        kpos = jnp.arange(src.shape[1]) if pos is None else qpos
+        q = common.rope(q, jnp.broadcast_to(qpos, (b, s)), cfg.rope_theta)
+        k = common.rope(k, jnp.broadcast_to(kpos, (b, k.shape[1])),
+                        cfg.rope_theta)
+
+    q = q.transpose(0, 2, 1, 3)                       # (b, nh, s, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    q = common.logical(q, ("batch", "act_heads", "act_seq", None),
+                       rules, mesh)
+
+    new_cache = None
+    kv_len = None
+    q_off = 0
+    if cache is not None and kv_source is None:
+        if pos is None:                                # prefill: write [0:s]
+            W = cache["k"].shape[2]
+            kk, vv = k, v
+            if W < kk.shape[2]:                        # local ring: tail only
+                kk, vv = kk[:, :, -W:], vv[:, :, -W:]
+                # slot of absolute position p is p % W: place the tail so
+                # decode's `pos % W` indexing continues consistently
+                shift = (kk.shape[2] and (k.shape[2] - W) % W)
+                kk = jnp.roll(kk, shift, axis=2)
+                vv = jnp.roll(vv, shift, axis=2)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kk.astype(cache["k"].dtype), 0, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vv.astype(cache["v"].dtype), 0, axis=2)
+            new_cache = {"k": ck, "v": cv}
+            # attention over just the fresh kv (standard causal prefill)
+        else:                                          # decode: write at pos
+            # Ring-buffer write: local-attention layers keep only a
+            # window-sized cache (W < max_len) and wrap; softmax is
+            # permutation-invariant so slot order inside the ring is
+            # irrelevant — only validity (kv_len) matters. Full caches
+            # (W == max_len) reduce to the ordinary absolute write.
+            W = cache["k"].shape[2]
+            wpos = pos % W
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, wpos, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, wpos, 0))
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+            kv_len = jnp.minimum(pos + 1, W)
+            q_off = pos
+            causal = False                 # ring entries are all <= pos
+            window = None                  # the ring IS the window
+    elif kv_source is not None and cache is not None:
+        # cross-attention with precomputed encoder kv
+        k, v = cache["k"].astype(x.dtype), cache["v"].astype(x.dtype)
+        new_cache = cache
+
+    out = common.chunked_attention(
+        q, k, v, causal=causal and kv_source is None, window=window,
+        q_offset=q_off, kv_len=kv_len)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    return _proj(out, p["wo"]), new_cache
+
+
+def ffn_defs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    mult = 2 if cfg.ffn_kind == "swiglu" else 1
+    return {"wi": ParamDef((d, mult * f), ("fsdp", "mlp")),
+            "wo": ParamDef((f, d), ("mlp", "fsdp"))}
+
+
+def ffn_apply(p: Dict, x: jax.Array, cfg: ArchConfig,
+              rules=None, mesh=None) -> jax.Array:
+    h = x @ p["wi"].astype(x.dtype)
+    h = common.logical(h, ("batch", "act_seq", "mlp"), rules, mesh)
+    if cfg.ffn_kind == "swiglu":
+        u, g = jnp.split(h, 2, axis=-1)
+        h = common.activation("swiglu", g) * u
+    else:
+        h = common.activation(cfg.ffn_kind, h)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block dispatch
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ArchConfig, kind: str, attn_kind: str) -> Dict:
+    d = cfg.d_model
+    if kind == "attn":
+        defs = {"ln1": common.norm_defs(cfg.norm_kind, d),
+                "attn": attention_defs(cfg),
+                "ln2": common.norm_defs(cfg.norm_kind, d)}
+        defs["moe" if cfg.is_moe else "ffn"] = (
+            moe_lib.moe_defs(cfg) if cfg.is_moe else ffn_defs(cfg))
+        return defs
+    if kind == "rglru":
+        return {"ln1": common.norm_defs(cfg.norm_kind, d),
+                "rec": rglru_lib.rglru_defs(cfg),
+                "ln2": common.norm_defs(cfg.norm_kind, d),
+                "ffn": ffn_defs(cfg)}
+    if kind == "mlstm":
+        return {"ln1": common.norm_defs(cfg.norm_kind, d),
+                "mlstm": xlstm_lib.mlstm_defs(cfg)}
+    if kind == "slstm":
+        return {"ln1": common.norm_defs(cfg.norm_kind, d),
+                "slstm": xlstm_lib.slstm_defs(cfg)}
+    raise ValueError(kind)
+
+
+def block_cache(cfg: ArchConfig, kind: str, attn_kind: str, batch: int,
+                max_len: int, dtype=jnp.bfloat16) -> Optional[Dict]:
+    nkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if kind == "attn":
+        # local-attention layers keep a ring buffer of exactly the window
+        # (attention_apply wraps the write position) — at long_500k this
+        # shrinks gemma3's cache ~6x vs naive full-length caches.
+        s = min(max_len, cfg.local_window) if attn_kind == "local" \
+            else max_len
+        return {"k": jnp.zeros((batch, nkv, s, hd), dtype),
+                "v": jnp.zeros((batch, nkv, s, hd), dtype)}
+    if kind == "rglru":
+        return rglru_lib.rglru_init_state(cfg, batch)
+    if kind == "mlstm":
+        return xlstm_lib.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm_lib.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_apply(p: Dict, x: jax.Array, cfg: ArchConfig, kind: str,
+                attn_kind: str, *, cache=None, pos=None, rules=None,
+                mesh=None) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.local_window if attn_kind == "local" else None
+    if kind == "attn":
+        h = common.norm(cfg.norm_kind, x, p["ln1"])
+        a, new_cache = attention_apply(p["attn"], h, cfg, causal=True,
+                                       window=window, cache=cache, pos=pos,
+                                       rules=rules, mesh=mesh)
+        x = x + a
+        h = common.norm(cfg.norm_kind, x, p["ln2"])
+        if cfg.is_moe:
+            f, aux = moe_lib.moe_apply(p["moe"], h, cfg, rules, mesh)
+        else:
+            f = ffn_apply(p["ffn"], h, cfg, rules, mesh)
+        x = x + f
+        # residual-stream anchor: under the SP rule (act_seq -> model) the
+        # o/down-proj psums lower to reduce-scatter + all-gather instead
+        x = common.logical(x, ("batch", "act_seq", "act_embed"), rules, mesh)
+        return x, new_cache, aux
+    if kind == "rglru":
+        h = common.norm(cfg.norm_kind, x, p["ln1"])
+        if pos is None and cache is None:                  # train
+            r, new_cache = rglru_lib.rglru_apply(p["rec"], h, cfg), None
+        elif pos is None:                                  # prefill
+            r, new_cache = rglru_lib.rglru_apply(p["rec"], h, cfg,
+                                                 return_state=True)
+        else:                                              # decode
+            r, new_cache = rglru_lib.rglru_decode(p["rec"], h, cache, cfg)
+        x = x + r
+        h = common.norm(cfg.norm_kind, x, p["ln2"])
+        return x + ffn_apply(p["ffn"], h, cfg, rules, mesh), new_cache, aux
+    if kind == "mlstm":
+        h = common.norm(cfg.norm_kind, x, p["ln1"])
+        if pos is None:
+            r = xlstm_lib.mlstm_apply(p["mlstm"], h, cfg)
+            new_cache = (xlstm_lib.mlstm_prefill_state(p["mlstm"], h, cfg)
+                         if cache is not None else None)
+        else:
+            r, new_cache = xlstm_lib.mlstm_decode(p["mlstm"], h, cache, cfg)
+        return x + r, new_cache, aux
+    if kind == "slstm":
+        h = common.norm(cfg.norm_kind, x, p["ln1"])
+        if pos is None and cache is None:                  # train
+            r, new_cache = xlstm_lib.slstm_apply(p["slstm"], h, cfg), None
+        elif pos is None:                                  # prefill
+            r, new_cache = xlstm_lib.slstm_apply(p["slstm"], h, cfg,
+                                                 return_state=True)
+        else:
+            r, new_cache = xlstm_lib.slstm_decode(p["slstm"], h, cache, cfg)
+        return x + r, new_cache, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full LM
+# ---------------------------------------------------------------------------
+
+
+def lm_defs(cfg: ArchConfig) -> Dict:
+    pat, n_groups, rem = group_layout(cfg)
+    group = {f"b{j}": block_defs(cfg, bk, ak)
+             for j, (bk, ak) in enumerate(pat)}
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "fsdp"),
+                          scale=0.02),
+        "final_norm": common.norm_defs(cfg.norm_kind, cfg.d_model),
+    }
+    if n_groups:
+        defs["groups"] = stack_defs(group, n_groups)
+    if rem:
+        defs["rem"] = {f"b{j}": block_defs(cfg, *pat[j]) for j in range(rem)}
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, cfg.padded_vocab),
+                                ("fsdp", "vocab"))
+    return defs
+
+
+def _embed(params, cfg, tokens, embeds=None, rules=None, mesh=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_adtype(cfg))
+    if cfg.family in ("dense", "moe", "hybrid"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if embeds is not None:                    # vlm/audio stub front-end
+        n = embeds.shape[1]
+        x = jnp.concatenate([embeds.astype(x.dtype), x[:, n:]], axis=1)
+    return common.logical(x, ("batch", "act_seq", "act_embed"), rules, mesh)
+
+
+def _head(params, cfg, x):
+    w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = x @ w.astype(x.dtype)
+    logits = common.softcap(logits.astype(jnp.float32), cfg.logits_softcap)
+    return common.mask_padded_vocab(logits, cfg.vocab_size)
+
+
+def _adtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def forward(params: Dict, tokens: jax.Array, cfg: ArchConfig, *,
+            embeds: Optional[jax.Array] = None, caches: Optional[Dict] = None,
+            rules=None, mesh=None, remat: bool = False
+            ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Train (caches=None) / prefill (caches=init). Returns
+    (logits, caches, aux)."""
+    pat, n_groups, rem = group_layout(cfg)
+    x = _embed(params, cfg, tokens, embeds, rules, mesh)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def one_group(x, gp, gcache):
+        new_caches, aux = {}, jnp.zeros((), jnp.float32)
+        for j, (bk, ak) in enumerate(pat):
+            c = gcache.get(f"b{j}") if gcache else None
+            x, nc, a = block_apply(gp[f"b{j}"], x, cfg, bk, ak, cache=c,
+                                   rules=rules, mesh=mesh)
+            new_caches[f"b{j}"] = nc
+            aux = aux + a
+        return x, new_caches, aux
+
+    if remat == "dots":
+        one_group = jax.checkpoint(
+            one_group, policy=jax.checkpoint_policies.dots_saveable)
+    elif remat:
+        one_group = jax.checkpoint(one_group)
+
+    if n_groups:
+        gcaches = caches["groups"] if caches else None
+
+        def body(carry, scanned):
+            x, aux = carry
+            gp = scanned[0]
+            gc = scanned[1] if gcaches is not None else None
+            x, nc, a = one_group(x, gp, gc)
+            out = nc if gcaches is not None else 0
+            return (x, aux + a), out
+
+        scanned = (params["groups"], gcaches) if gcaches is not None \
+            else (params["groups"], jnp.zeros((n_groups,)))
+        (x, aux_total), new_g = jax.lax.scan(body, (x, aux_total), scanned)
+        if caches is not None:
+            caches = dict(caches)
+            caches["groups"] = new_g
+    if rem:
+        rcache = caches.get("rem") if caches else None
+        new_r = {}
+        for j in range(rem):
+            bk, ak = pat[j]
+            c = rcache.get(f"b{j}") if rcache else None
+            x, nc, a = block_apply(params["rem"][f"b{j}"], x, cfg, bk, ak,
+                                   cache=c, rules=rules, mesh=mesh)
+            new_r[f"b{j}"] = nc
+            aux_total = aux_total + a
+        if caches is not None:
+            caches["rem"] = new_r
+
+    x = common.norm(cfg.norm_kind, x, params["final_norm"])
+    logits = _head(params, cfg, x)
+    logits = common.logical(logits, ("batch", "act_seq", "vocab"),
+                            rules, mesh)
+    return logits, caches, aux_total
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    pat, n_groups, rem = group_layout(cfg)
+    out: Dict[str, Any] = {}
+    if n_groups:
+        group = {}
+        for j, (bk, ak) in enumerate(pat):
+            c = block_cache(cfg, bk, ak, batch, max_len, dtype)
+            group[f"b{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), c)
+        out["groups"] = group
+    if rem:
+        out["rem"] = {f"b{j}": block_cache(cfg, *pat[j], batch, max_len,
+                                           dtype) for j in range(rem)}
+    return out
+
+
+def decode_step(params: Dict, caches: Dict, tokens: jax.Array,
+                pos: jax.Array, cfg: ArchConfig, *, rules=None, mesh=None
+                ) -> Tuple[jax.Array, Dict]:
+    """One-token step. tokens: (b, 1) int32; pos: scalar int32 (current
+    cache length). Returns (logits (b, 1, vocab), new caches)."""
+    pat, n_groups, rem = group_layout(cfg)
+    x = _embed(params, cfg, tokens, None, rules, mesh)
+
+    if n_groups:
+        def body(x, scanned):
+            gp, gc = scanned
+            ncs = {}
+            for j, (bk, ak) in enumerate(pat):
+                x, nc, _ = block_apply(gp[f"b{j}"], x, cfg, bk, ak,
+                                       cache=gc[f"b{j}"], pos=pos,
+                                       rules=rules, mesh=mesh)
+                ncs[f"b{j}"] = nc
+            return x, ncs
+
+        x, new_g = jax.lax.scan(body, x, (params["groups"],
+                                          caches["groups"]))
+        caches = dict(caches)
+        caches["groups"] = new_g
+    if rem:
+        new_r = {}
+        for j in range(rem):
+            bk, ak = pat[j]
+            x, nc, _ = block_apply(params["rem"][f"b{j}"], x, cfg, bk, ak,
+                                   cache=caches["rem"][f"b{j}"], pos=pos,
+                                   rules=rules, mesh=mesh)
+            new_r[f"b{j}"] = nc
+        caches["rem"] = new_r
+
+    x = common.norm(cfg.norm_kind, x, params["final_norm"])
+    return _head(params, cfg, x), caches
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ArchConfig, *, rules=None,
+            mesh=None, remat: bool = False) -> Tuple[jax.Array, Dict]:
+    logits, _, aux = forward(params, batch["tokens"], cfg,
+                             embeds=batch.get("embeds"), rules=rules,
+                             mesh=mesh, remat=remat)
+    ce = common.cross_entropy(logits, batch["labels"])
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}

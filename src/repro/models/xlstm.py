@@ -1,0 +1,292 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential recurrence with block-diagonal
+recurrent weights).
+
+mLSTM training uses the paper's *parallel form*: linear attention with a
+cumulative-gate decay matrix
+
+    D_tj = exp(F_t - F_j + i_j - m_t),  F = cumsum(log f)
+    h_t  = (sum_j D_tj (q_t.k_j) v_j) / max(|sum_j D_tj (q_t.k_j)|, e^{-m_t})
+
+evaluated chunk-wise (same memory shape as chunked attention). Decode
+carries the (h, d, d') matrix state C and normalizer n — O(1) per token.
+
+sLSTM is inherently sequential (h_{t-1} feeds the gates through recurrent
+weights R), so training runs a lax.scan over time with exponential-gating
+stabilizer m_t — faithful to the paper; this is the arch where the
+DeepFlow planner's KP restriction note applies (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamDef
+
+
+def _heads(cfg: ArchConfig) -> Tuple[int, int]:
+    return cfg.n_heads, cfg.resolved_head_dim
+
+
+def mlstm_defs(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    nh, hd = _heads(cfg)
+    return {
+        "wq": ParamDef((d, nh * hd), ("fsdp", "heads")),
+        "wk": ParamDef((d, nh * hd), ("fsdp", "heads")),
+        "wv": ParamDef((d, nh * hd), ("fsdp", "heads")),
+        "wi": ParamDef((d, nh), ("fsdp", None), scale=0.1),
+        "wf": ParamDef((d, nh), ("fsdp", None), scale=0.1),
+        "bf": ParamDef((nh,), (None,), init="ones"),
+        "wo": ParamDef((nh * hd, d), ("heads", "fsdp")),
+        "up": ParamDef((d, 2 * d), ("fsdp", "mlp")),
+        "down": ParamDef((2 * d, d), ("mlp", "fsdp")),
+    }
+
+
+def slstm_defs(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    nh, hd = _heads(cfg)
+    return {
+        "wz": ParamDef((d, nh * hd), ("fsdp", "heads")),
+        "wi": ParamDef((d, nh * hd), ("fsdp", "heads"), scale=0.1),
+        "wf": ParamDef((d, nh * hd), ("fsdp", "heads"), scale=0.1),
+        "wo_gate": ParamDef((d, nh * hd), ("fsdp", "heads"), scale=0.1),
+        # block-diagonal recurrent weights, one (hd, hd) block per head
+        "rz": ParamDef((nh, hd, hd), (None, None, None), scale=hd ** -0.5),
+        "ri": ParamDef((nh, hd, hd), (None, None, None), scale=0.05),
+        "rf": ParamDef((nh, hd, hd), (None, None, None), scale=0.05),
+        "bf": ParamDef((nh * hd,), ("heads",), init="ones"),
+        "wo": ParamDef((nh * hd, d), ("heads", "fsdp")),
+        "up": ParamDef((d, 2 * d), ("fsdp", "mlp")),
+        "down": ParamDef((2 * d, d), ("mlp", "fsdp")),
+    }
+
+
+def _split_heads(x: jax.Array, nh: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, nh, -1).transpose(0, 2, 1, 3)   # (b, nh, s, hd)
+
+
+# --------------------------------------------------------------------- mLSTM
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f, chunk: int = 512):
+    """q/k/v: (b, h, s, d); log_i/log_f: (b, h, s). Chunked decay-weighted
+    linear attention (causal)."""
+    b, h, s, d = q.shape
+    scale = d ** -0.5
+    f_cum = jnp.cumsum(log_f, axis=-1)                     # F_t
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    n_c = s // c
+
+    def q_step(qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * c, c, axis=2) * scale
+        fq = jax.lax.dynamic_slice_in_dim(f_cum, qi * c, c, axis=2)
+        q_pos = qi * c + jnp.arange(c)
+
+        def kv_step(carry, kj):
+            num, den, m = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kj * c, c, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kj * c, c, axis=2)
+            fk = jax.lax.dynamic_slice_in_dim(f_cum, kj * c, c, axis=2)
+            ik = jax.lax.dynamic_slice_in_dim(log_i, kj * c, c, axis=2)
+            k_pos = kj * c + jnp.arange(c)
+            # log decay D_tj = F_t - F_j + i_j  (j <= t)
+            a = fq[..., :, None] - fk[..., None, :] + ik[..., None, :]
+            causal = q_pos[:, None] >= k_pos[None, :]
+            a = jnp.where(causal[None, None], a, -1e30)
+            m_new = jnp.maximum(m, jnp.max(a, axis=-1, keepdims=True))
+            dmat = jnp.exp(a - m_new)
+            qk = jnp.einsum("bhqd,bhkd->bhqk", q_blk.astype(jnp.float32),
+                            k_blk.astype(jnp.float32))
+            w = qk * dmat
+            corr = jnp.exp(m - m_new)
+            num = num * corr + jnp.einsum("bhqk,bhkd->bhqd", w,
+                                          v_blk.astype(jnp.float32))
+            den = den * corr[..., 0] + jnp.sum(w, axis=-1)
+            return (num, den, m_new), None
+
+        num0 = jnp.zeros((b, h, c, d), jnp.float32)
+        den0 = jnp.zeros((b, h, c), jnp.float32)
+        m0 = jnp.full((b, h, c, 1), -1e30, jnp.float32)
+        (num, den, m), _ = jax.lax.scan(kv_step, (num0, den0, m0),
+                                        jnp.arange(qi + 1))
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m[..., 0]))
+        return num / denom[..., None]
+
+    # causal chunk loop: q chunk qi only attends kv chunks <= qi. lax.scan
+    # cannot have data-dependent trip counts, so scan all and mask instead.
+    def q_step_full(qi):
+        return q_step(qi)
+
+    if n_c == 1:
+        out = q_step_full(0)
+    else:
+        outs = []
+        for qi in range(n_c):                 # unrolled (n_c is small: s/512)
+            outs.append(q_step_full(qi))
+        out = jnp.concatenate(outs, axis=2)
+    return out.astype(q.dtype)
+
+
+def mlstm_apply(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    b, s, d = x.shape
+    nh, hd = _heads(cfg)
+    q = _split_heads(x @ p["wq"].astype(x.dtype), nh)
+    k = _split_heads(x @ p["wk"].astype(x.dtype), nh)
+    v = _split_heads(x @ p["wv"].astype(x.dtype), nh)
+    x32 = x.astype(jnp.float32)
+    log_i = (x32 @ p["wi"].astype(jnp.float32)).transpose(0, 2, 1)  # (b,h,s)
+    log_f = jax.nn.log_sigmoid(
+        (x32 @ p["wf"].astype(jnp.float32)).transpose(0, 2, 1)
+        + p["bf"].astype(jnp.float32)[None, :, None])
+    h = _mlstm_parallel(q, k, v, log_i, log_f)
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    out = h @ p["wo"].astype(x.dtype)
+    # up/down projection (replaces the FFN; d_ff=0 in the config)
+    u = jax.nn.gelu(out @ p["up"].astype(x.dtype))
+    return u @ p["down"].astype(x.dtype)
+
+
+def mlstm_prefill_state(p: Dict, x: jax.Array, cfg: ArchConfig) -> Dict:
+    """Final recurrent (C, n, m) state after consuming x — so decode can
+    continue after a parallel-form prefill."""
+    b, s, d = x.shape
+    nh, hd = _heads(cfg)
+    k = _split_heads(x @ p["wk"].astype(x.dtype), nh).astype(jnp.float32)
+    v = _split_heads(x @ p["wv"].astype(x.dtype), nh).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    log_i = (x32 @ p["wi"].astype(jnp.float32)).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(
+        (x32 @ p["wf"].astype(jnp.float32)).transpose(0, 2, 1)
+        + p["bf"].astype(jnp.float32)[None, :, None])
+    f_cum = jnp.cumsum(log_f, axis=-1)
+    # weight of step j in the final state: F_T - F_j + i_j
+    a = f_cum[..., -1:] - f_cum + log_i                    # (b, h, s)
+    m = jnp.max(a, axis=-1)
+    w = jnp.exp(a - m[..., None])
+    c = jnp.einsum("bhs,bhsd,bhse->bhde", w, k, v)
+    n = jnp.einsum("bhs,bhsd->bhd", w, k)
+    return {"c": c, "n": n, "m": m}
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    nh, hd = _heads(cfg)
+    return {"c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, nh, hd), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def mlstm_decode(p: Dict, x: jax.Array, state: Dict,
+                 cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    """x: (b, 1, d). Recurrent matrix-memory update (xLSTM eqs. 19-27)."""
+    b, _, d = x.shape
+    nh, hd = _heads(cfg)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, nh, hd) * hd ** -0.5
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, nh, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, nh, hd)
+    x32 = x[:, 0].astype(jnp.float32)
+    log_i = x32 @ p["wi"].astype(jnp.float32)                 # (b, nh)
+    log_f = jax.nn.log_sigmoid(x32 @ p["wf"].astype(jnp.float32)
+                               + p["bf"].astype(jnp.float32))
+    m_new = jnp.maximum(state["m"] + log_f, log_i)
+    fg = jnp.exp(state["m"] + log_f - m_new)[..., None]
+    ig = jnp.exp(log_i - m_new)[..., None]
+    c = state["c"] * fg[..., None] + ig[..., None] \
+        * jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    n = state["n"] * fg + ig * k.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhd->bhe", c, q.astype(jnp.float32))
+    # stabilized denominator: max(|n.q|, e^{-m}) (xLSTM eq. 27 with the
+    # running stabilizer factored out — matches the parallel form)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n,
+                                         q.astype(jnp.float32))),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, 1, nh * hd).astype(x.dtype)
+    out = h @ p["wo"].astype(x.dtype)
+    u = jax.nn.gelu(out @ p["up"].astype(x.dtype))
+    return u @ p["down"].astype(x.dtype), {"c": c, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------- sLSTM
+
+
+def _slstm_gates(p, x32):
+    z = x32 @ p["wz"].astype(jnp.float32)
+    i = x32 @ p["wi"].astype(jnp.float32)
+    f = x32 @ p["wf"].astype(jnp.float32) + p["bf"].astype(jnp.float32)
+    o = x32 @ p["wo_gate"].astype(jnp.float32)
+    return z, i, f, o
+
+
+def _slstm_step(p, nh, hd, carry, zifo):
+    c, n, h, m = carry                                     # (b, nh, hd) each
+    z_x, i_x, f_x, o_x = zifo
+
+    def rec(w, hh):                                        # block-diag recur
+        return jnp.einsum("bhd,hde->bhe", hh, w.astype(jnp.float32))
+
+    z = jnp.tanh(z_x + rec(p["rz"], h))
+    i_t = i_x + rec(p["ri"], h)
+    f_t = f_x + rec(p["rf"], h)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + m, i_t)  # stabilizer
+    i_g = jnp.exp(i_t - m_new)
+    f_g = jnp.exp(jax.nn.log_sigmoid(f_t) + m - m_new)
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    h = jax.nn.sigmoid(o_x) * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new), h
+
+
+def slstm_apply(p: Dict, x: jax.Array, cfg: ArchConfig,
+                return_state: bool = False):
+    b, s, d = x.shape
+    nh, hd = _heads(cfg)
+    x32 = x.astype(jnp.float32)
+    z, i, f, o = _slstm_gates(p, x32)
+
+    def reshape(t):                                        # (s, b, nh, hd)
+        return t.reshape(b, s, nh, hd).transpose(1, 0, 2, 3)
+
+    carry0 = tuple(jnp.zeros((b, nh, hd), jnp.float32) for _ in range(3)) \
+        + (jnp.full((b, nh, hd), -1e30, jnp.float32),)
+    step = lambda c, zi: _slstm_step(p, nh, hd, c, zi)
+    carry, hs = jax.lax.scan(step, carry0,
+                             (reshape(z), reshape(i), reshape(f), reshape(o)))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, nh * hd).astype(x.dtype)
+    out = h @ p["wo"].astype(x.dtype)
+    u = jax.nn.gelu(out @ p["up"].astype(x.dtype))
+    y = u @ p["down"].astype(x.dtype)
+    if not return_state:
+        return y
+    c, n, hh, m = carry
+    return y, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    nh, hd = _heads(cfg)
+    zero = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": zero, "n": zero, "h": zero,
+            "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}
+
+
+def slstm_decode(p: Dict, x: jax.Array, state: Dict,
+                 cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    b, _, d = x.shape
+    nh, hd = _heads(cfg)
+    x32 = x[:, 0].astype(jnp.float32)
+    z, i, f, o = _slstm_gates(p, x32)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    zifo = tuple(t.reshape(b, nh, hd) for t in (z, i, f, o))
+    (c, n, h, m), hh = _slstm_step(p, nh, hd, carry, zifo)
+    hflat = hh.reshape(b, 1, nh * hd).astype(x.dtype)
+    out = hflat @ p["wo"].astype(x.dtype)
+    u = jax.nn.gelu(out @ p["up"].astype(x.dtype))
+    return u @ p["down"].astype(x.dtype), {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, apply, global_norm, \
+    init, schedule

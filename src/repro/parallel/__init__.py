@@ -1,0 +1,1 @@
+from repro.parallel import collectives, pipeline, sharding

@@ -1,0 +1,51 @@
+"""Collective helpers: bucketed gradient all-reduce (overlap-friendly) and
+compressed psum.
+
+Under pjit, gradient reduction is implicit in the sharding; these helpers
+exist for the shard_map paths (pipeline stages, explicit-EP experiments)
+and as §Perf levers — bucketing lets XLA's latency-hiding scheduler start
+reducing early buckets while later ones are still being produced.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flatten_to_buckets(tree: Any, bucket_bytes: int = 4 << 20
+                       ) -> Tuple[List[jax.Array], Any]:
+    """Flatten a grad tree into ~bucket_bytes 1-D buckets; returns
+    (buckets, spec) where spec reassembles the tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = [l.reshape(-1) for l in leaves]
+    sizes = [f.size for f in flat]
+    big = jnp.concatenate(flat) if flat else jnp.zeros((0,))
+    per = max(bucket_bytes // max(big.dtype.itemsize, 1), 1)
+    buckets = [big[i:i + per] for i in range(0, big.size, per)] or [big]
+    return buckets, (treedef, sizes, [l.shape for l in leaves], big.size)
+
+
+def unflatten_buckets(buckets: List[jax.Array], spec) -> Any:
+    treedef, sizes, shapes, total = spec
+    big = jnp.concatenate(buckets)[:total]
+    leaves, off = [], 0
+    for n, shp in zip(sizes, shapes):
+        leaves.append(big[off:off + n].reshape(shp))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def bucketed_psum(tree: Any, axis_name, bucket_bytes: int = 4 << 20) -> Any:
+    """psum per bucket (inside shard_map) — XLA can overlap the early
+    buckets' reduction with the remaining computation."""
+    buckets, spec = flatten_to_buckets(tree, bucket_bytes)
+    reduced = [jax.lax.psum(b, axis_name) for b in buckets]
+    return unflatten_buckets(reduced, spec)
+
+
+def mean_psum(tree: Any, axis_name) -> Any:
+    n = jax.lax.psum(jnp.ones(()), axis_name)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, tree)

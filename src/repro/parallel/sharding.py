@@ -1,0 +1,129 @@
+"""Sharding rules: DeepFlow ShardingPlan -> NamedShardings for params,
+optimizer state, inputs and step functions.
+
+The planner (repro.core.planner) emits logical-axis rules in the paper's
+strategy vocabulary (RC kernel parallelism -> 'model' axis, DP -> pod*data,
+EP/SP reusing 'model'); this module resolves them against a concrete mesh.
+ZeRO-1/3 style optimizer/param sharding is expressed by the `fsdp` logical
+axis -> 'data'.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.core.planner import ShardingPlan
+from repro.models import common
+
+
+def resolve_rules(plan: ShardingPlan, mesh: Mesh,
+                  fsdp: bool = True) -> Dict[str, Optional[Tuple[str, ...]]]:
+    """Plan rules -> rules dict valid on `mesh` (drop absent axes)."""
+    rules = common.rules_from_plan(plan.rules)
+    if not fsdp:
+        rules["fsdp"] = None
+    out = {}
+    for k, v in rules.items():
+        if v is None:
+            out[k] = None
+            continue
+        if isinstance(v, str):
+            v = (v,)
+        v = tuple(a for a in v if a in mesh.axis_names)
+        out[k] = v or None
+    return out
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        entry = (entry,)
+    n = 1
+    for a in entry:
+        n *= mesh.shape[a]
+    return n
+
+
+def guard_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop spec entries whose mesh-axis product doesn't divide the dim —
+    GSPMD requires divisibility; replication is always semantically safe
+    (whisper's 20 kv heads on a 16-way model axis, batch=1 cells, ...)."""
+    parts = []
+    for i, dim in enumerate(shape):
+        entry = spec[i] if i < len(spec) else None
+        if entry is not None and dim % _axis_size(mesh, entry):
+            entry = None
+        parts.append(entry)
+    return P(*parts)
+
+
+def param_shardings(model, plan: ShardingPlan, mesh: Mesh, fsdp: bool = True):
+    rules = resolve_rules(plan, mesh, fsdp)
+    pspecs = model.param_pspecs(rules)
+    return jax.tree.map(
+        lambda s, d: named(mesh, guard_spec(mesh, s, d.shape)),
+        pspecs, model.defs, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(cfg: ArchConfig, cell: ShapeCell, plan: ShardingPlan,
+                    mesh: Mesh):
+    """Input batch shardings: batch dim over DP axes; embeds likewise."""
+    rules = resolve_rules(plan, mesh)
+    dp = rules.get("batch")
+    if dp is not None and cell.global_batch % _axis_size(mesh, dp):
+        dp = None                      # batch=1 long-context cells
+    bspec = P(dp)
+    specs = {"tokens": named(mesh, bspec), "labels": named(mesh, bspec)}
+    if cfg.is_encoder_decoder:
+        specs["frames"] = named(mesh, P(dp, None, None))
+    if cfg.frontend == "vision_stub" and cfg.n_patch_tokens:
+        specs["embeds"] = named(mesh, P(dp, None, None))
+    if cell.kind == "prefill":
+        specs.pop("labels", None)
+    return specs
+
+
+def cache_shardings(cfg: ArchConfig, plan: ShardingPlan, mesh: Mesh,
+                    caches_tree) -> object:
+    """KV caches: batch over DP, heads over model; under SP the cache seq
+    dim is sharded over model instead (long_500k: batch=1, kv heads few)."""
+    rules = resolve_rules(plan, mesh)
+    dp = rules.get("batch")
+    sp = rules.get("kv_seq")
+    # under SP (long_500k, batch=1) the model axis carries the cache seq
+    # dim, so kv heads move to the data axis instead
+    heads = rules.get("heads") if not sp else (
+        ("data",) if "data" in mesh.axis_names else None)
+
+    def spec_for(leaf):
+        nd = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+        # stacked caches have a leading layers axis (never sharded)
+        parts = [None] * nd
+        shape = leaf.shape
+        # find the (batch, heads/width, [seq, dim]) block by rank
+        off = nd - 4 if nd >= 4 else max(nd - 3, 0)
+        if nd >= 4:
+            parts[off] = dp          # batch
+            parts[off + 1] = heads   # kv heads
+            if sp:
+                parts[off + 2] = sp  # cache sequence (SP)
+        elif nd >= 2:
+            parts[off] = dp
+            parts[-1] = rules.get("lru") or rules.get("heads")
+        return guard_spec(mesh, P(*parts), shape)
+
+    return jax.tree.map(lambda l: named(mesh, spec_for(l)), caches_tree)
+
+
+def scalar_sharding(mesh: Mesh):
+    return named(mesh, P())

@@ -1,0 +1,4 @@
+from repro.runtime.compression import compress, compression_ratio, \
+    decompress, init_error_state
+from repro.runtime.fault import PreemptionHandler, StragglerWatchdog, \
+    elastic_plan

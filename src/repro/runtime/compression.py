@@ -1,0 +1,84 @@
+"""Gradient compression for the DP all-reduce: int8 quantization with
+error feedback.
+
+At 1000+ nodes the gradient all-reduce over DCN dominates (the paper's §9.1
+network-scaling study is exactly about this); int8 + per-block scales cuts
+the payload 4x vs f32 / 2x vs bf16. Error feedback (Karimireddy et al.)
+accumulates the quantization residual locally so the compressed SGD
+direction stays unbiased in the long run.
+
+Usage inside a pjit'd train step:
+    comp, state = compress(grads, state)     # quantize + residual update
+    comp = psum-mean over DP axes (runtime does this via sharding)
+    grads = decompress(comp)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048                       # elements per quantization scale
+
+
+class CompressedTree(NamedTuple):
+    q: Any                          # int8 payloads (same treedef)
+    scales: Any                     # f32 per-block scales
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+                shape: Tuple[int, ...]) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress(grads: Any, error_state: Optional[Any] = None
+             ) -> Tuple[CompressedTree, Any]:
+    """Quantize grads (+error feedback). Returns (compressed, new_state)."""
+    if error_state is None:
+        error_state = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, error_state)
+    qs = jax.tree.map(_quantize, corrected)
+    q = jax.tree.map(lambda t: t[0], qs,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    decompressed = jax.tree.map(
+        lambda qq, ss, g: _dequantize(qq, ss, g.shape), q, scales, grads)
+    new_err = jax.tree.map(lambda c, d: c - d, corrected, decompressed)
+    return CompressedTree(q=q, scales=scales), new_err
+
+
+def decompress(comp: CompressedTree, like: Any) -> Any:
+    return jax.tree.map(
+        lambda q, s, g: _dequantize(q, s, g.shape).astype(g.dtype),
+        comp.q, comp.scales, like)
+
+
+def compression_ratio(grads: Any) -> float:
+    raw = sum(g.size * g.dtype.itemsize for g in jax.tree.leaves(grads))
+    comp = sum(g.size * 1 + -(-g.size // BLOCK) * 4
+               for g in jax.tree.leaves(grads))
+    return raw / comp

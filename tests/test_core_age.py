@@ -1,0 +1,111 @@
+"""AGE (micro-architecture generator) unit tests — paper §4 semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import age, techlib
+from repro.core.age import Budgets
+
+
+@pytest.fixture(scope="module")
+def tech():
+    return techlib.make_tech_config("N7", "HBM2E", "IB-NDR-X8")
+
+
+def test_generate_produces_positive_parameters(tech):
+    arch = age.generate(tech, Budgets.default())
+    assert float(arch.compute_throughput) > 0
+    assert float(arch.dram_bw) > 0
+    assert float(arch.dram_capacity) > 0
+    assert all(float(c) > 0 for c in arch.mem_capacity)
+    assert all(float(b) > 0 for b in arch.mem_bw)
+    assert float(arch.net_inter_bw) > 0
+    assert float(arch.net_intra_bw) > 0
+
+
+def test_more_core_area_more_throughput(tech):
+    lo = Budgets.default()
+    hi = dataclasses.replace(lo, area_frac={**lo.area_frac, "core": 0.55},
+                             power_frac={**lo.power_frac, "core": 0.75})
+    a_lo = age.generate(tech, lo)
+    a_hi = age.generate(tech, hi)
+    assert float(a_hi.compute_throughput) > float(a_lo.compute_throughput)
+
+
+def test_power_budget_limits_throughput(tech):
+    """Halving power while keeping area fixed must not increase throughput
+    (V/f scaling, paper §4.4.1)."""
+    b = Budgets.default()
+    starved = dataclasses.replace(b, power_w=60.0)
+    a_full = age.generate(tech, b)
+    a_starved = age.generate(tech, starved)
+    assert float(a_starved.compute_throughput) \
+        <= float(a_full.compute_throughput)
+    # frequency must actually have been scaled down
+    assert float(a_starved.core_frequency) < float(a_full.core_frequency)
+
+
+def test_eq4_dram_devices_limited_by_each_term(tech):
+    b = Budgets.default()
+    # starve controller area: DRAM capacity must drop
+    starved = dataclasses.replace(
+        b, area_frac={**b.area_frac, "dram": 0.002})
+    assert float(age.generate(tech, starved).dram_capacity) \
+        < float(age.generate(tech, b).dram_capacity)
+    # starve perimeter: capacity must drop too
+    starved_p = dataclasses.replace(
+        b, perim_frac={**b.perim_frac, "dram": 0.02})
+    assert float(age.generate(tech, starved_p).dram_capacity) \
+        < float(age.generate(tech, b).dram_capacity)
+
+
+def test_logic_scaling_increases_mcu_count():
+    """N12 -> N5: 1.8x area scaling per node => more MCUs in the same area."""
+    b = Budgets.default()
+    t12 = techlib.make_tech_config("N12", "HBM2E", "IB-NDR-X8")
+    t5 = techlib.make_tech_config("N5", "HBM2E", "IB-NDR-X8")
+    n12 = float(age.generate(t12, b).n_mcu)
+    n5 = float(age.generate(t5, b).n_mcu)
+    assert n5 > 2.0 * n12
+
+
+def test_hbm_generation_increases_bandwidth():
+    b = Budgets.default()
+    bws = []
+    for gen in techlib.HBM_GENERATIONS:
+        t = techlib.make_tech_config("N7", gen, "IB-NDR-X8")
+        bws.append(float(age.generate(t, b).dram_bw))
+    assert bws == sorted(bws)
+    assert bws[-1] > bws[0]
+
+
+def test_differentiable_path(tech):
+    """The smooth AGE must yield finite nonzero grads w.r.t. budgets."""
+    like = Budgets.default()
+
+    def f(w):
+        arch = age.generate(tech, Budgets.from_vector(w, like),
+                            discrete=False)
+        return (arch.compute_throughput / 1e12
+                + arch.dram_bw / 1e12 + arch.mem_bw[2] / 1e13)
+
+    g = jax.grad(f)(like.as_vector())
+    assert jnp.all(jnp.isfinite(g))
+    assert float(jnp.linalg.norm(g)) > 0
+
+
+def test_budget_vector_roundtrip():
+    b = Budgets.default()
+    v = b.as_vector()
+    b2 = age.Budgets.from_vector(v, b)
+    assert jnp.allclose(b2.as_vector(), v)
+
+
+def test_tpu_v5e_fixed_entry():
+    arch = age.tpu_v5e_microarch()
+    assert abs(float(arch.compute_throughput) / (197e12 * 0.85) - 1) < 1e-6
+    assert float(arch.dram_bw) == pytest.approx(819e9)
+    assert float(arch.net_inter_bw) == pytest.approx(50e9)

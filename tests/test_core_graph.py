@@ -1,0 +1,155 @@
+"""Compute-graph IR, transformation, placement, simulation tests."""
+
+import pytest
+
+from repro.configs.base import SHAPE_CELLS, ShapeCell, all_configs, get_config
+from repro.core import age, lmgraph, placement, simulate, techlib, transform
+from repro.core.graph import ComputeGraph
+from repro.core.parallelism import Strategy, enumerate_strategies
+
+
+@pytest.fixture(scope="module")
+def arch():
+    return age.generate(techlib.make_tech_config(), age.Budgets.default())
+
+
+def test_graph_topo_and_flops():
+    g = ComputeGraph("t")
+    g.gemm("a", m=64, n=64, k=64)
+    g.gemm("b", m=64, n=64, k=64, deps=["a"])
+    g.elementwise("c", n_elems=64 * 64, deps=["b"])
+    assert g.topo_order() == ["a", "b", "c"]
+    assert g.total_flops() == 2 * 64**3 * 2 + 64 * 64
+
+
+def test_graph_cycle_detection():
+    g = ComputeGraph("t")
+    g.gemm("a", m=8, n=8, k=8)
+    g.gemm("b", m=8, n=8, k=8, deps=["a"])
+    g.connect("b", "a")
+    with pytest.raises(ValueError):
+        g.topo_order()
+
+
+def test_strategy_notation_roundtrip():
+    for s in ["RC-4-2-d3-p2", "CR-8-d64-p1", "RC-1-16-d32-p1"]:
+        assert Strategy.parse(s).name == s
+
+
+def test_strategy_enumeration_covers_devices():
+    for st in enumerate_strategies(64, max_lp=4):
+        assert st.devices == 64
+
+
+def test_rc_sharding_divides_gemm_dims():
+    g = lmgraph.gemm_graph(1024, 2048, 512)
+    sh = transform.shard_graph(g, Strategy("RC", kp1=4, kp2=2, dp=2))
+    node = sh.nodes["gemm"]
+    assert node.m == 1024 // 2 // 4          # dp then kp1
+    assert node.n == 2048 // 2
+    assert node.k == 512                     # contraction intact for RC
+    # an allgather was inserted for the kp2-sharded activation
+    assert any(n.comm == "allgather" for n in sh.comm_nodes())
+    # dp grad allreduce present
+    assert any(n.comm == "allreduce" and n.comm_axis == "dp"
+               for n in sh.comm_nodes())
+
+
+def test_cr_sharding_cuts_contraction_and_allreduces():
+    g = lmgraph.gemm_graph(1024, 1024, 4096)
+    sh = transform.shard_graph(g, Strategy("CR", kp1=8, dp=1))
+    node = sh.nodes["gemm"]
+    assert node.k == 4096 // 8
+    ar = [n for n in sh.comm_nodes() if n.comm == "allreduce"
+          and n.comm_axis == "kp1"]
+    assert ar and ar[0].comm_bytes == 1024 * 1024 * 2
+
+
+def test_supergraph_materializes_replicas():
+    g = lmgraph.gemm_graph(256, 256, 256)
+    st = Strategy("RC", kp1=2, kp2=2, dp=3, lp=1)
+    sg = transform.build_supergraph(g, st)
+    base = len(g)
+    assert len(sg) == base * st.devices
+    assert any(e.cross for e in sg.edges)
+
+
+def test_pipeline_stage_cut_balances_flops():
+    cfg = get_config("qwen1.5-0.5b")
+    g = lmgraph.build_graph(cfg, SHAPE_CELLS["train_4k"])
+    stages = transform.stage_subgraphs(g, 4)
+    assert len(stages) == 4
+    masses = [sum(n.flops for n in s.nodes.values()) for s in stages]
+    assert max(masses) < 0.8 * sum(masses)   # no stage hogs everything
+
+
+def test_placement_prefers_contiguous_axes():
+    sys_g = placement.single_pod_system(16)
+    st = Strategy("RC", kp1=1, kp2=16, dp=16)
+    pl = placement.place(sys_g, st)
+    # the heavy kp2 axis must be mapped to ring-adjacent hardware
+    assert pl.axis_maps["kp2"].ring_hop_distance <= 1.0
+
+
+def test_multi_pod_dp_rides_pod_links():
+    sys_g = placement.multi_pod_system(2, 16)
+    st = Strategy("RC", kp1=1, kp2=16, dp=32)
+    pl = placement.place(sys_g, st)
+    assert pl.axis_maps["dp"].level == "pod"   # spans the pod boundary
+
+
+def test_comm_time_monotone_in_size_and_participants(arch):
+    sys_g = placement.single_pod_system(16)
+    pl = placement.place(sys_g, Strategy("RC", kp1=1, kp2=16, dp=16))
+    t1 = placement.comm_time(arch, pl, "allreduce", 1e6, "dp", 16)
+    t2 = placement.comm_time(arch, pl, "allreduce", 2e6, "dp", 16)
+    assert float(t2) > float(t1)
+    assert placement.comm_time(arch, pl, "allreduce", 1e6, "dp", 1) == 0.0
+
+
+def test_predict_end_to_end_breakdown(arch):
+    g = lmgraph.gemm_graph(4096, 4096, 4096, train=True)
+    bd = simulate.predict(arch, g, Strategy("RC", kp1=2, kp2=2, dp=4))
+    assert float(bd.total_s) > 0
+    assert float(bd.total_s) >= float(bd.compute_s) - 1e-9
+    assert float(bd.exposed_comm_s) <= float(bd.comm_s) + 1e-9
+
+
+def test_predict_dp_scaling_reduces_time(arch):
+    cfg = get_config("qwen1.5-0.5b")
+    g = lmgraph.build_graph(cfg, SHAPE_CELLS["train_4k"])
+    t8 = float(simulate.predict(arch, g, Strategy("RC", dp=8)).compute_s)
+    t64 = float(simulate.predict(arch, g, Strategy("RC", dp=64)).compute_s)
+    assert t64 < t8
+
+
+def test_pipeline_has_bubble(arch):
+    cfg = get_config("qwen1.5-0.5b")
+    g = lmgraph.build_graph(cfg, SHAPE_CELLS["train_4k"])
+    bd = simulate.predict(arch, g, Strategy("RC", dp=8, lp=4),
+                          n_microbatches=8)
+    assert float(bd.pipeline_bubble_s) > 0
+
+
+def test_all_arch_graphs_build_and_match_6nd():
+    """Graph flops vs 6*N_active*D within modelling tolerance (train_4k)."""
+    cell = SHAPE_CELLS["train_4k"]
+    for name, cfg in all_configs().items():
+        g = lmgraph.build_graph(cfg, cell)
+        gf = sum(n.flops * n.meta.get("repeat", 1) for n in g.nodes.values())
+        nd = 6.0 * cfg.active_param_count() * cell.tokens
+        ratio = gf / nd
+        # whisper: decoder only sees 448 tokens => 6ND overcounts, allow wide
+        lo = 0.45 if cfg.is_encoder_decoder else 0.8
+        assert lo < ratio < 1.5, (name, ratio)
+
+
+def test_decode_graph_is_linear_in_kv():
+    cfg = get_config("qwen1.5-0.5b")
+    g32 = lmgraph.build_graph(cfg, SHAPE_CELLS["decode_32k"])
+    cell16 = ShapeCell("d16k", 16384, 128, "decode")
+    g16 = lmgraph.build_graph(cfg, cell16)
+    qk32 = [n for n in g32.nodes.values() if n.name.endswith(".qk")][0]
+    qk16 = [n for n in g16.nodes.values() if n.name.endswith(".qk")][0]
+    assert qk32.flops == pytest.approx(2 * qk16.flops, rel=0.01)
+    assert qk32.m == 1                        # one new token

@@ -1,0 +1,160 @@
+"""Family-level correctness: parallel-form training paths must agree with
+the sequential decode recurrences (the serving-correctness invariant for
+hybrid/ssm archs), and MoE dispatch must match a dense loop-over-experts
+reference."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models import common, moe as moe_lib, rglru as rglru_lib, \
+    xlstm as xlstm_lib
+from repro.models.common import tree_init
+
+
+def _params(defs, seed=0):
+    return tree_init(defs, jax.random.PRNGKey(seed))
+
+
+# ------------------------------------------------------------------- RG-LRU
+def test_rglru_parallel_matches_sequential_decode():
+    cfg = reduced(get_config("recurrentgemma-2b"))
+    p = _params(rglru_lib.rglru_defs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model))
+    y_par, state = rglru_lib.rglru_apply(p, x, cfg, return_state=True)
+    state_seq = rglru_lib.rglru_init_state(cfg, 2)
+    ys = []
+    for t in range(12):
+        y_t, state_seq = rglru_lib.rglru_decode(p, x[:, t:t + 1], state_seq,
+                                                cfg)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+    # final states agree too (prefill -> decode handoff)
+    np.testing.assert_allclose(np.asarray(state["h"]),
+                               np.asarray(state_seq["h"]),
+                               rtol=2e-3, atol=2e-3)
+
+
+# -------------------------------------------------------------------- mLSTM
+def test_mlstm_parallel_matches_recurrent_decode():
+    cfg = reduced(get_config("xlstm-125m"))
+    p = _params(xlstm_lib.mlstm_defs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 10, cfg.d_model)) * 0.3
+
+    # isolate the recurrence: compare head outputs h (pre out-proj) by
+    # running the full blocks — outputs must match since the only
+    # nonlinearity mismatch would come from the recurrence itself.
+    y_par = xlstm_lib.mlstm_apply(p, x, cfg)
+    state = xlstm_lib.mlstm_init_state(cfg, 2)
+    ys = []
+    for t in range(10):
+        y_t, state = xlstm_lib.mlstm_decode(p, x[:, t:t + 1], state, cfg)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_mlstm_prefill_state_matches_decode_rollout():
+    cfg = reduced(get_config("xlstm-125m"))
+    p = _params(xlstm_lib.mlstm_defs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model)) * 0.3
+    st_pre = xlstm_lib.mlstm_prefill_state(p, x, cfg)
+    st_roll = xlstm_lib.mlstm_init_state(cfg, 1)
+    for t in range(8):
+        _, st_roll = xlstm_lib.mlstm_decode(p, x[:, t:t + 1], st_roll, cfg)
+    # compare the de-stabilized states: c * exp(m) is the invariant
+    def destab(s):
+        return s["c"] * jnp.exp(s["m"])[..., None, None]
+    np.testing.assert_allclose(np.asarray(destab(st_pre)),
+                               np.asarray(destab(st_roll)),
+                               rtol=2e-2, atol=2e-2)
+
+
+# -------------------------------------------------------------------- sLSTM
+def test_slstm_apply_matches_stepwise_decode():
+    cfg = reduced(get_config("xlstm-125m"))
+    p = _params(xlstm_lib.slstm_defs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 6, cfg.d_model)) * 0.5
+    y_par = xlstm_lib.slstm_apply(p, x, cfg)
+    state = xlstm_lib.slstm_init_state(cfg, 2)
+    ys = []
+    for t in range(6):
+        y_t, state = xlstm_lib.slstm_decode(p, x[:, t:t + 1], state, cfg)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------- MoE
+def _dense_moe_reference(params, x, cfg):
+    """Loop over experts densely — no capacity, the exact routing target."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = (xt @ params["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, cfg.experts_per_token)
+    topw = topw / topw.sum(-1, keepdims=True)
+    out = jnp.zeros((t, d))
+    for e in range(cfg.n_experts):
+        wi, wo = params["experts"]["wi"][e], params["experts"]["wo"][e]
+        h = xt @ wi
+        u, g = jnp.split(h, 2, axis=-1)
+        y = (jax.nn.silu(g) * u) @ wo
+        for k in range(cfg.experts_per_token):
+            sel = (topi[:, k] == e).astype(x.dtype) * topw[:, k]
+            out = out + sel[:, None] * y
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        h = xt @ sh["wi"]
+        u, g = jnp.split(h, 2, axis=-1)
+        out = out + (jax.nn.silu(g) * u) @ sh["wo"]
+    return out.reshape(b, s, d)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b", "qwen3-moe-30b-a3b"])
+def test_moe_dispatch_matches_dense_reference(arch):
+    cfg = dataclasses.replace(reduced(get_config(arch)),
+                              capacity_factor=8.0)   # no drops
+    p = _params(moe_lib.moe_defs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 8, cfg.d_model)) * 0.5
+    got, aux = moe_lib.moe_apply(p, x, cfg)
+    want = _dense_moe_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0.0
+
+
+@pytest.mark.parametrize("groups", [1, 2, 4])
+def test_moe_grouped_tp_matches_dense_reference(groups):
+    """The §Perf hillclimb dispatch (group-local, TP expert weights) must
+    be numerically identical to the dense reference (same defs shapes)."""
+    cfg = dataclasses.replace(reduced(get_config("qwen3-moe-30b-a3b")),
+                              capacity_factor=8.0, moe_impl="grouped_tp",
+                              moe_groups=groups)
+    p = _params(moe_lib.moe_defs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 8, cfg.d_model)) * 0.5
+    got, aux = moe_lib.moe_apply(p, x, cfg)
+    want = _dense_moe_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_bounded():
+    """With capacity_factor=1.0 some tokens drop but the output stays
+    finite and within the convex hull scale of expert outputs."""
+    cfg = dataclasses.replace(reduced(get_config("qwen3-moe-30b-a3b")),
+                              capacity_factor=1.0)
+    p = _params(moe_lib.moe_defs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 16, cfg.d_model))
+    got, aux = moe_lib.moe_apply(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    assert float(jnp.abs(got).max()) < 1e3

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on system invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import age, lmgraph, placement, roofline, simulate, techlib, \
+    transform
+from repro.core.age import Budgets
+from repro.core.parallelism import Strategy
+from repro.core.roofline import PPEConfig
+from repro.models import common
+
+TECH = techlib.make_tech_config()
+ARCH = age.generate(TECH, Budgets.default())
+PPE = PPEConfig(n_tilings=8)
+
+
+@given(m=st.integers(64, 2048), n=st.integers(64, 2048),
+       k=st.integers(64, 2048))
+@settings(max_examples=25, deadline=None)
+def test_gemm_time_bounded_by_ideal(m, n, k):
+    """PPE time >= ideal compute time and >= compulsory-traffic time."""
+    t = float(roofline.gemm_time(ARCH, m, n, k, cfg=PPE))
+    flops = 2.0 * m * n * k
+    t_ideal = flops / float(ARCH.compute_throughput)
+    compulsory = 2 * (m * k + k * n + m * n)
+    t_mem = compulsory / float(ARCH.dram_bw)
+    assert t >= t_ideal * 0.99
+    assert t >= t_mem * 0.99
+
+
+@given(scale=st.floats(1.1, 8.0))
+@settings(max_examples=10, deadline=None)
+def test_prediction_monotone_in_compute(scale):
+    g = lmgraph.gemm_graph(2048, 2048, 2048)
+    fast = dataclasses.replace(
+        ARCH, compute_throughput=float(ARCH.compute_throughput) * scale,
+        mem_bw=tuple(float(b) * scale for b in ARCH.mem_bw),
+        dram_bw=float(ARCH.dram_bw) * scale)
+    roofline.clear_cache()
+    t_slow = float(simulate.predict(ARCH, g, Strategy("RC"), cfg=PPE).total_s)
+    roofline.clear_cache()
+    t_fast = float(simulate.predict(fast, g, Strategy("RC"), cfg=PPE).total_s)
+    roofline.clear_cache()
+    assert t_fast <= t_slow * 1.001
+
+
+@given(kp1=st.sampled_from([1, 2, 4]), kp2=st.sampled_from([1, 2, 4]),
+       dp=st.sampled_from([1, 2, 4]))
+@settings(max_examples=20, deadline=None)
+def test_rc_sharding_conserves_flops(kp1, kp2, dp):
+    """Per-shard flops x devices == original flops (exact for 2^k dims)."""
+    g = lmgraph.gemm_graph(1024, 1024, 512)
+    st_ = Strategy("RC", kp1=kp1, kp2=kp2, dp=dp)
+    sh = transform.shard_graph(g, st_)
+    per_shard = sh.nodes["gemm"].flops
+    assert per_shard * st_.devices == pytest.approx(g.nodes["gemm"].flops)
+
+
+@given(size=st.floats(1e3, 1e9), p=st.sampled_from([2, 4, 8, 16, 64]))
+@settings(max_examples=30, deadline=None)
+def test_allreduce_geq_reducescatter(size, p):
+    sys_g = placement.single_pod_system(16)
+    pl = placement.place(sys_g, Strategy("RC", kp1=1, kp2=16, dp=16))
+    ar = float(placement.comm_time(ARCH, pl, "allreduce", size, "dp", p))
+    rs = float(placement.comm_time(ARCH, pl, "reducescatter", size, "dp", p))
+    assert ar >= rs * 1.8                      # ring AR ~= RS + AG
+
+
+@given(data=st.data())
+@settings(max_examples=15, deadline=None)
+def test_budget_projection_idempotent_and_feasible(data):
+    from repro.core.soe import _DIM, _NC, _project_simplexes
+    w = jnp.asarray(data.draw(st.lists(
+        st.floats(0.0, 2.0), min_size=_DIM, max_size=_DIM)))
+    p1 = _project_simplexes(w, 1e-3)
+    p2 = _project_simplexes(p1, 1e-3)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5)
+    assert float(jnp.sum(p1[:_NC])) <= 1.0 + 1e-4
+    assert float(jnp.min(p1)) >= 1e-3 - 1e-6
+
+
+@given(b=st.integers(1, 3), h=st.integers(1, 4), s=st.sampled_from([16, 64]),
+       d=st.sampled_from([8, 32]),
+       qc=st.sampled_from([8, 16, 64]), kc=st.sampled_from([8, 16, 64]))
+@settings(max_examples=20, deadline=None)
+def test_chunked_attention_matches_naive(b, h, s, d, qc, kc):
+    """The XLA-path chunked attention == naive softmax attention for any
+    chunking (the system invariant the dry-run path relies on)."""
+    from repro.kernels import ref
+    ks = jax.random.split(jax.random.PRNGKey(b * 100 + h), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, h, s, d))
+    v = jax.random.normal(ks[2], (b, h, s, d))
+    got = common.chunked_attention(q, k, v, causal=True, q_chunk=qc,
+                                   kv_chunk=kc)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_data_tokens_in_range(seed):
+    from repro.configs.base import get_config, reduced
+    from repro.data import DataConfig, synth_batch
+    arch = reduced(get_config("qwen1.5-0.5b"))
+    b = synth_batch(DataConfig(global_batch=2, seq_len=8, seed=seed), arch, 0)
+    toks = np.asarray(b["tokens"])
+    assert toks.min() >= 0 and toks.max() < arch.vocab_size
+
+
+@given(vocab=st.integers(5, 300))
+@settings(max_examples=20, deadline=None)
+def test_mask_padded_vocab_never_selected(vocab):
+    logits = jnp.ones((2, 4, -(-vocab // 256) * 256)) * 3.0
+    masked = common.mask_padded_vocab(logits, vocab)
+    assert int(jnp.argmax(masked, -1).max()) < vocab
+    # CE over masked logits equals CE over the unpadded slice
+    labels = jnp.zeros((2, 4), jnp.int32)
+    ce_m = common.cross_entropy(masked, labels)
+    ce_u = common.cross_entropy(logits[..., :vocab], labels)
+    np.testing.assert_allclose(float(ce_m), float(ce_u), rtol=1e-5)
