@@ -77,6 +77,15 @@ def _bench_roofline() -> str:
     return f"cells={n};mean_frac={sum(fracs)/len(fracs):.2f}"
 
 
+def _bench_sweep_scale() -> str:
+    """Batched pathfinding engine vs per-point loop (ISSUE-1 tentpole)."""
+    from benchmarks import sweep_scale
+    r = sweep_scale.main(verbose=False)
+    return (f"speedup={r['speedup_warm']:.0f}x(>=10x);"
+            f"batched_pps={r['batched_pps']:.0f};"
+            f"eager_pps={r['eager_pps']:.1f}")
+
+
 def _bench_crossflow_query() -> str:
     """Paper §8: CrossFlow query latency (ms .. 20 s on their machine)."""
     from repro.configs.base import SHAPE_CELLS, get_config
@@ -102,27 +111,37 @@ BENCHES: Dict[str, Callable[[], str]] = {
     "fig9_tech_scaling": _bench_fig9,
     "fig10_coopt": _bench_fig10,
     "fig11_package": _bench_fig11,
+    "sweep_scale": _bench_sweep_scale,
     "crossflow_query_latency": _bench_crossflow_query,
     "roofline": _bench_roofline,
     "perf_variants": _bench_perf_variants,
 }
 
 
-def main() -> None:
+def main() -> int:
     wanted = sys.argv[1:] or list(BENCHES)
     print("name,us_per_call,derived")
+    failed = []
     for name in wanted:
         keys = [k for k in BENCHES if k.startswith(name)] or [name]
         for key in keys:
-            fn = BENCHES[key]
+            fn = BENCHES.get(key)
             t0 = time.perf_counter()
             try:
+                if fn is None:
+                    raise KeyError(f"unknown benchmark {key!r}")
                 derived = fn()
             except Exception as e:           # noqa: BLE001
                 derived = f"ERROR:{type(e).__name__}:{e}"
+                failed.append(key)
             dt = (time.perf_counter() - t0) * 1e6
             print(f"{key},{dt:.0f},{derived}", flush=True)
+    if failed:
+        # a raising benchmark must fail the CI smoke job, not just print
+        print(f"FAILED: {','.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,111 @@
+"""Throughput of the batched pathfinding engine vs. the per-point loop.
+
+Workload: the paper's Fig. 9 technology-scaling sweep (paper LM, DP=512) —
+7 logic nodes x 4 HBM generations x 3 networks, extended with budget
+variants so the batch is representative of a real design-space exploration.
+
+The per-point baseline is exactly what `benchmarks/fig9_tech_scaling.py`
+does per cell: one eager `simulate.predict` per hardware point (with the
+roofline cache cleared, as fig9 does).  The batched engine stacks all
+hardware points into one struct-of-arrays matrix and scores them with a
+single jitted vmap (`repro.core.pathfinder.BatchedEvaluator`).
+
+Reports points/sec for both, the warm (steady-state) speedup, and the
+speedup including one-off XLA compile time.  The ISSUE-1 acceptance bar is
+a >= 10x warm speedup; `main()` asserts it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import ShapeCell, get_config
+from repro.configs.paper_lm import GLOBAL_BATCH, N_NODES, SEQ_LEN
+from repro.core import age, lmgraph, pathfinder, roofline, simulate, techlib
+from repro.core.parallelism import Strategy
+from repro.core.roofline import PPEConfig
+
+PPE = PPEConfig(n_tilings=12)
+BUDGET_VARIANTS = ((850.0, 300.0), (650.0, 250.0), (1000.0, 400.0))
+MAX_EAGER_POINTS = 24              # baseline is timed on a subset this size
+
+
+def _build_archs():
+    """All Fig.9 hardware points x budget variants, AGE'd eagerly."""
+    archs = []
+    for area, power in BUDGET_VARIANTS:
+        budgets = dataclasses.replace(age.Budgets.default(),
+                                      proc_chip_area_mm2=area, power_w=power)
+        for logic, hbm, net in itertools.product(
+                techlib.LOGIC_NODES, techlib.HBM_GENERATIONS,
+                techlib.NETWORK_GENERATIONS):
+            tech = techlib.make_tech_config(logic, hbm, net)
+            archs.append(age.generate(tech, budgets))
+    return archs
+
+
+def main(verbose: bool = True) -> Dict:
+    cfg = get_config("paper-lm")
+    cell = ShapeCell("paper", SEQ_LEN, GLOBAL_BATCH, "train")
+    g = lmgraph.build_graph(cfg, cell)
+    st = Strategy("RC", kp1=1, kp2=1, dp=N_NODES, lp=1)
+    archs = _build_archs()
+    n_total = len(archs)
+
+    # -- per-point loop (the fig9 inner loop) ----------------------------
+    n_eager = min(MAX_EAGER_POINTS, n_total)
+    t0 = time.perf_counter()
+    eager_rows = []
+    for a in archs[:n_eager]:
+        roofline.clear_cache()
+        bd = simulate.predict(a, g, st, cfg=PPE)
+        eager_rows.append(float(bd.total_s))
+    eager_s = time.perf_counter() - t0
+    eager_pps = n_eager / eager_s
+
+    # -- batched engine --------------------------------------------------
+    ev = pathfinder.BatchedEvaluator(g, st, ppe=PPE, cache=None)
+    t0 = time.perf_counter()
+    rows = ev.evaluate(archs)                  # includes XLA compile
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rows2 = ev.evaluate(archs)                 # steady state
+    warm_s = time.perf_counter() - t0
+    batched_pps = n_total / warm_s
+    cold_pps = n_total / cold_s
+
+    # agreement on the points both paths scored
+    np.testing.assert_allclose(rows[:n_eager, 0], eager_rows, rtol=1e-5)
+    np.testing.assert_array_equal(rows, rows2)
+
+    speedup = batched_pps / eager_pps
+    speedup_cold = cold_pps / eager_pps
+    assert speedup >= 10.0, (
+        f"batched engine only {speedup:.1f}x over the per-point loop "
+        f"(ISSUE-1 acceptance: >= 10x)")
+    out = {
+        "n_points": n_total,
+        "eager_pps": eager_pps,
+        "batched_pps": batched_pps,
+        "compile_s": cold_s,
+        "speedup_warm": speedup,
+        "speedup_incl_compile": speedup_cold,
+    }
+    if verbose:
+        print(f"sweep_scale: {n_total} fig9-style points "
+              f"(timed {n_eager} eager)")
+        print(f"  per-point loop : {eager_pps:10.1f} points/s")
+        print(f"  batched (warm) : {batched_pps:10.1f} points/s "
+              f"-> {speedup:.0f}x")
+        print(f"  batched (cold) : {cold_pps:10.1f} points/s "
+              f"-> {speedup_cold:.1f}x (incl. {cold_s:.2f}s compile)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

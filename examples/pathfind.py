@@ -1,43 +1,60 @@
-"""DeepFlow pathfinding example — the paper's §9 workflow end to end:
+"""DeepFlow pathfinding example — the paper's §9 workflow end to end, on
+the batched pathfinding engine:
 
-1. ask CrossFlow where a workload sits across technology generations,
-2. co-optimize parallelism strategy + hardware budgets with the SOE,
+1. sweep a design space (tech nodes x HBM gens x meshes) in one batched
+   evaluation and read off the Pareto frontier,
+2. co-optimize parallelism strategy + hardware budgets with the batched
+   multi-start SOE,
 3. emit the sharding plan the real runtime would use on the v5e mesh.
 
     PYTHONPATH=src python examples/pathfind.py
+
+The same flows are scriptable via the CLI:
+
+    PYTHONPATH=src python -m repro.pathfind sweep --arch qwen3-moe-30b-a3b \
+        --cell train_4k --mesh 16x16 --logic N7,N3 --hbm HBM2E,HBM3
 """
 
 from repro.configs.base import SHAPE_CELLS, get_config
-from repro.core import age, lmgraph, planner, simulate, soe, techlib
-from repro.core.parallelism import Strategy
+from repro.core import lmgraph, pathfinder, planner, soe, techlib
 from repro.core.roofline import PPEConfig
 
 PPE = PPEConfig(n_tilings=12)
+ARCH = "qwen3-moe-30b-a3b"
 
 
 def main() -> None:
-    cfg = get_config("qwen3-moe-30b-a3b")
+    cfg = get_config(ARCH)
     cell = SHAPE_CELLS["train_4k"]
     g = lmgraph.build_graph(cfg, cell)
     print(f"=== pathfind: {cfg.name} x {cell.name} "
           f"({g.total_flops():.2e} flops/graph-template) ===")
 
-    print("-- 1. technology what-if (N7 vs N3, HBM2E vs HBM3) --")
-    for logic, hbm in (("N7", "HBM2E"), ("N3", "HBM2E"), ("N3", "HBM3")):
-        tech = techlib.make_tech_config(logic, hbm, "IB-NDR-X8")
-        arch = age.generate(tech, age.Budgets.default())
-        bd = simulate.predict(arch, g, Strategy("RC", kp1=1, kp2=16, dp=16),
-                              cfg=PPE)
-        print(f"   {logic}/{hbm}: {float(bd.total_s)*1e3:8.1f} ms/iter "
-              f"(compute {float(bd.compute_s)*1e3:.1f}, "
-              f"comm {float(bd.comm_s)*1e3:.1f})")
+    print("-- 1. batched design-space sweep (tech x memory x mesh) --")
+    result = pathfinder.sweep(
+        [ARCH], ["train_4k"], [(16, 16), (8, 8)],
+        logic_nodes=("N7", "N3"), hbms=("HBM2E", "HBM3"),
+        nets=("IB-NDR-X8",), ppe=PPE)
+    for p in sorted(result.points, key=lambda p: p.time_s)[:4]:
+        print(f"   {p.logic:>3}/{p.hbm:<5} mesh {'x'.join(map(str, p.mesh)):>5} "
+              f"{p.strategy.name:<18} {p.time_s*1e3:8.1f} ms/iter")
+    frontier = result.pareto(objectives=("time_s", "devices"))
+    print(f"   Pareto(time, devices): {len(frontier)} of "
+          f"{len(result.points)} points")
+    for p in sorted(frontier, key=lambda p: p.devices):
+        print(f"     d{p.devices:<4} {p.logic}/{p.hbm} "
+              f"-> {p.time_s*1e3:.1f} ms")
+    stats = pathfinder.cache_stats()
+    print(f"   prediction cache: {stats['hits']} hits / "
+          f"{stats['misses']} misses")
 
-    print("-- 2. SOE co-optimization on N7 (256 devices) --")
+    print("-- 2. batched multi-start SOE co-optimization on N7 (256 dev) --")
     tech = techlib.make_tech_config("N7", "HBM2E", "IB-NDR-X8")
     res = soe.co_optimize(tech, g, n_devices=256, search_arch=True,
                           cfg=soe.SOEConfig(steps=10, starts=2), ppe=PPE)
     print(f"   best strategy {res.strategy.name}: {res.time_s*1e3:.1f} ms; "
-          f"core area frac -> {float(res.budgets.area_frac['core']):.2f}")
+          f"core area frac -> {float(res.budgets.area_frac['core']):.2f} "
+          f"({res.n_queries} CrossFlow queries)")
 
     print("-- 3. runtime sharding plan on the v5e production mesh --")
     plan = planner.plan(cfg, cell, (16, 16), ("data", "model"))

@@ -11,12 +11,13 @@ CrossFlow (standalone performance model):
 
 DeepFlow (search on top of CrossFlow):
     soe         projected-GD budget search             (paper §7)
+    pathfinder  batched/vmapped design-space sweeps + LRU prediction cache
     planner     CrossFlow -> runtime ShardingPlan bridge (this repo's closing
                 of the loop: pathfinding drives the real pjit configuration)
 """
 
-from repro.core import age, graph, lmgraph, parallelism, placement, roofline, \
-    simulate, soe, techlib, transform
+from repro.core import age, graph, lmgraph, parallelism, pathfinder, \
+    placement, roofline, simulate, soe, techlib, transform
 from repro.core.age import Budgets, MicroArch
 from repro.core.graph import ComputeGraph
 from repro.core.parallelism import Strategy

@@ -92,12 +92,14 @@ class ComputeGraph:
         self.edges: List[Edge] = []
         self._succ: Dict[str, List[str]] = {}
         self._pred: Dict[str, List[str]] = {}
+        self._fingerprint: Optional[str] = None
 
     # -- construction -----------------------------------------------------
     def add(self, node: Node, deps: Iterable[str] = (),
             dep_bytes: float = 0.0) -> Node:
         if node.name in self.nodes:
             raise ValueError(f"duplicate node {node.name}")
+        self._fingerprint = None
         self.nodes[node.name] = node
         self._succ.setdefault(node.name, [])
         self._pred.setdefault(node.name, [])
@@ -134,6 +136,7 @@ class ComputeGraph:
         if src not in self.nodes or dst not in self.nodes:
             raise KeyError(f"unknown edge endpoint {src}->{dst}")
         e = Edge(src, dst, bytes=bytes, cross=cross)
+        self._fingerprint = None
         self.edges.append(e)
         self._succ[src].append(dst)
         self._pred[dst].append(src)
@@ -170,6 +173,30 @@ class ComputeGraph:
 
     def validate(self) -> None:
         self.topo_order()
+
+    def fingerprint(self) -> str:
+        """Stable structural hash: node kinds/dims/meta + dependency wiring.
+
+        Two graphs with the same fingerprint produce identical prediction
+        traces, so this is the graph component of batched-evaluator and
+        prediction-cache keys (repro.core.pathfinder).  Memoized until the
+        next structural mutation (add/connect) — sweep drivers call this
+        once per point."""
+        if self._fingerprint is not None:
+            return self._fingerprint
+        import hashlib
+        h = hashlib.sha1()
+        index = {n: i for i, n in enumerate(self.nodes)}
+        for name, node in self.nodes.items():
+            h.update(repr((
+                node.kind, node.b, node.m, node.n, node.k, node.n_elems,
+                node.flops_per_elem, node.rows, node.width, node.comm,
+                node.comm_bytes, node.comm_axis, node.comm_participants,
+                node.dtype_bytes, sorted(node.meta.items()),
+                sorted(index[p] for p in set(self._pred[name])),
+            )).encode())
+        self._fingerprint = h.hexdigest()
+        return self._fingerprint
 
     def total_flops(self) -> float:
         return sum(n.flops for n in self.nodes.values())

@@ -1,0 +1,547 @@
+"""Batched pathfinding engine — vectorized design-space sweeps over CrossFlow.
+
+The paper's headline contribution is *automated* exploration of the
+technology x hardware x software stack (§7, §9), which only pays off when the
+evaluator can score thousands of candidate points cheaply (cf. DFModel,
+COSMIC).  The per-point path (`simulate.predict`) walks the compute graph in
+eager `jnp`, so a sweep costs O(points x graph-size) Python dispatches.
+
+This module exploits the observation that for a fixed *skeleton* —
+(compute graph, parallelism strategy, system graph, PPE config) — the whole
+CrossFlow pipeline (AGE -> roofline -> placement -> event-driven sim) is pure
+traceable `jax.numpy` code in the MicroArch's numeric leaves.  So:
+
+  * `BatchedEvaluator` stacks MicroArch candidates into a struct-of-arrays
+    hardware matrix and scores all of them with ONE `jax.jit(jax.vmap(...))`
+    call per skeleton (compiled functions are cached per skeleton);
+  * `evaluate_budgets` does the same over SOE budget vectors, batching
+    through the differentiable AGE (`age.generate(discrete=False)`);
+  * an LRU `PredictionCache` keyed on (graph fingerprint, strategy, system,
+    ppe, hardware point) makes repeated points across SOE multi-starts and
+    planner calls free;
+  * `sweep` cross-products arches x shape cells x mesh shapes x techlib
+    nodes and returns every point plus the Pareto frontier.
+
+`benchmarks/sweep_scale.py` measures the resulting throughput (points/sec)
+against the per-point loop on the Fig. 9 tech-scaling sweep.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import age as age_lib
+from repro.core import simulate
+from repro.core.age import Budgets, MicroArch
+from repro.core.graph import ComputeGraph
+from repro.core.parallelism import Strategy
+from repro.core.placement import SystemGraph
+from repro.core.roofline import PPEConfig
+from repro.core.techlib import TechConfig
+
+# ---------------------------------------------------------------------------
+# Struct-of-arrays hardware points
+# ---------------------------------------------------------------------------
+
+# The MicroArch leaves the performance model actually consumes.  Everything
+# else on MicroArch (n_mcu, link counts, on-chip latencies) is either unused
+# by `simulate.predict` or static per technology entry and taken from the
+# batch's template arch.
+HW_FIELDS: Tuple[str, ...] = (
+    "compute_throughput",
+    "mem_capacity_l0", "mem_capacity_l1", "mem_capacity_l2",
+    "mem_bw_l0", "mem_bw_l1", "mem_bw_l2",
+    "dram_capacity", "dram_bw",
+    "net_intra_bw", "net_inter_bw",
+    "net_intra_latency", "net_inter_latency",
+)
+HW_DIM = len(HW_FIELDS)
+
+
+def pack_hw(arch: MicroArch) -> np.ndarray:
+    """Flatten the batchable MicroArch leaves into a (HW_DIM,) f32 vector.
+
+    Host-side (NumPy): packing thousands of points must not pay per-leaf
+    JAX dispatch; the batch crosses into JAX once, already stacked.
+    """
+    return np.asarray([
+        float(arch.compute_throughput),
+        float(arch.mem_capacity[0]),
+        float(arch.mem_capacity[1]),
+        float(arch.mem_capacity[2]),
+        float(arch.mem_bw[0]),
+        float(arch.mem_bw[1]),
+        float(arch.mem_bw[2]),
+        float(arch.dram_capacity),
+        float(arch.dram_bw),
+        float(arch.net_intra_bw),
+        float(arch.net_inter_bw),
+        float(arch.net_intra_latency),
+        float(arch.net_inter_latency),
+    ], dtype=np.float32)
+
+
+def unpack_hw(template: MicroArch, v) -> MicroArch:
+    """Rebuild a MicroArch from a (HW_DIM,) vector; static leaves (tech,
+    latencies of on-chip levels, link counts) come from `template`."""
+    return dataclasses.replace(
+        template,
+        compute_throughput=v[0],
+        mem_capacity=(v[1], v[2], v[3]),
+        mem_bw=(v[4], v[5], v[6]),
+        dram_capacity=v[7],
+        dram_bw=v[8],
+        net_intra_bw=v[9],
+        net_inter_bw=v[10],
+        net_intra_latency=v[11],
+        net_inter_latency=v[12],
+    )
+
+
+def _hw_key(arch: MicroArch) -> bytes:
+    """Hashable identity of one hardware point (cache key component)."""
+    return pack_hw(arch).tobytes()
+
+
+# The five timing components one prediction returns (TimeBreakdown order).
+METRICS: Tuple[str, ...] = ("total_s", "compute_s", "comm_s",
+                            "exposed_comm_s", "pipeline_bubble_s")
+
+
+def _breakdown_row(bd: simulate.TimeBreakdown) -> np.ndarray:
+    return np.asarray([float(bd.total_s), float(bd.compute_s),
+                       float(bd.comm_s), float(bd.exposed_comm_s),
+                       float(bd.pipeline_bubble_s)], dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# LRU prediction cache
+# ---------------------------------------------------------------------------
+
+
+class PredictionCache:
+    """LRU cache of prediction rows keyed on (skeleton, hardware point)."""
+
+    def __init__(self, maxsize: int = 65536):
+        self.maxsize = maxsize
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key) -> Optional[np.ndarray]:
+        row = self._data.get(key)
+        if row is None:
+            self.misses += 1
+            return None
+        self._data.move_to_end(key)
+        self.hits += 1
+        return row
+
+    def put(self, key, row: np.ndarray) -> None:
+        self._data[key] = row
+        self._data.move_to_end(key)
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._data)}
+
+
+_PREDICTION_CACHE = PredictionCache()
+
+
+def prediction_cache() -> PredictionCache:
+    return _PREDICTION_CACHE
+
+
+def cache_stats() -> Dict[str, int]:
+    return _PREDICTION_CACHE.stats
+
+
+def clear_prediction_cache() -> None:
+    _PREDICTION_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Batched evaluator (one skeleton, many hardware points)
+# ---------------------------------------------------------------------------
+
+# LRU of jitted per-skeleton evaluation functions.  Each entry captures a
+# compiled XLA executable plus the closed-over graph, so unlike the
+# lightweight PredictionCache this must stay small and evict.
+_COMPILED: "collections.OrderedDict[tuple, Callable]" = \
+    collections.OrderedDict()
+_COMPILED_MAXSIZE = 128
+
+
+def _skeleton_key(graph_fp: str, strategy: Strategy,
+                  system: SystemGraph, ppe: PPEConfig, overlap: bool,
+                  n_microbatches: Optional[int], pod_bw: Optional[float],
+                  systolic_dims: tuple) -> tuple:
+    return (graph_fp, strategy, system, ppe, overlap, n_microbatches,
+            pod_bw, tuple(systolic_dims))
+
+
+class BatchedEvaluator:
+    """Scores many MicroArch candidates on one (graph, strategy, system).
+
+    The scalar prediction is traced once per skeleton, `jax.vmap`-ed over the
+    hardware matrix and `jax.jit`-ed; compiled functions are cached
+    process-wide so repeated evaluators on the same skeleton are free.
+    """
+
+    def __init__(self, graph: ComputeGraph, strategy: Strategy,
+                 system: Optional[SystemGraph] = None,
+                 ppe: PPEConfig = PPEConfig(), overlap: bool = True,
+                 n_microbatches: Optional[int] = None,
+                 pod_bw: Optional[float] = None,
+                 cache: Optional[PredictionCache] = _PREDICTION_CACHE):
+        self.graph = graph
+        self.strategy = strategy
+        self.system = system or simulate.default_system(strategy)
+        self.ppe = ppe
+        self.overlap = overlap
+        self.n_microbatches = n_microbatches
+        self.pod_bw = pod_bw
+        self.cache = cache
+        self._graph_fp = graph.fingerprint()
+
+    # -- compiled path ----------------------------------------------------
+    def _skeleton(self, template: MicroArch) -> tuple:
+        return _skeleton_key(self._graph_fp, self.strategy, self.system,
+                             self.ppe, self.overlap, self.n_microbatches,
+                             self.pod_bw,
+                             template.tech.compute.systolic_dims)
+
+    def _compiled(self, template: MicroArch) -> Callable:
+        key = self._skeleton(template)
+        fn = _COMPILED.get(key)
+        if fn is not None:
+            _COMPILED.move_to_end(key)
+        else:
+            def scalar(v):
+                arch = unpack_hw(template, v)
+                bd = simulate.predict(
+                    arch, self.graph, self.strategy, system=self.system,
+                    cfg=self.ppe, overlap=self.overlap,
+                    n_microbatches=self.n_microbatches, pod_bw=self.pod_bw)
+                return jnp.stack([
+                    jnp.asarray(bd.total_s, dtype=jnp.float32),
+                    jnp.asarray(bd.compute_s, dtype=jnp.float32),
+                    jnp.asarray(bd.comm_s, dtype=jnp.float32),
+                    jnp.asarray(bd.exposed_comm_s, dtype=jnp.float32),
+                    jnp.asarray(bd.pipeline_bubble_s, dtype=jnp.float32),
+                ])
+            fn = jax.jit(jax.vmap(scalar))
+            _COMPILED[key] = fn
+            while len(_COMPILED) > _COMPILED_MAXSIZE:
+                _COMPILED.popitem(last=False)
+        return fn
+
+    # -- public API -------------------------------------------------------
+    def evaluate(self, archs: Sequence[MicroArch],
+                 min_batch_jit: int = 2) -> np.ndarray:
+        """Score MicroArch candidates -> (B, 5) rows ordered like METRICS.
+
+        Cached points are returned for free; only misses are evaluated, in a
+        single vmapped call (or eagerly when fewer than `min_batch_jit`
+        misses remain — avoids paying XLA compile time for one-off points).
+        """
+        archs = list(archs)
+        if not archs:
+            return np.zeros((0, len(METRICS)), dtype=np.float64)
+        sd0 = tuple(archs[0].tech.compute.systolic_dims)
+        for a in archs:
+            if tuple(a.tech.compute.systolic_dims) != sd0:
+                raise ValueError("mixed systolic dims in one batch; group "
+                                 "points with evaluate_points() instead")
+        out = np.zeros((len(archs), len(METRICS)), dtype=np.float64)
+        skel = self._skeleton(archs[0])
+        vecs = [pack_hw(a) for a in archs]
+        misses: List[int] = []
+        keys: List[Optional[tuple]] = []
+        for i, a in enumerate(archs):
+            key = (skel, vecs[i].tobytes()) if self.cache is not None \
+                else None
+            keys.append(key)
+            row = self.cache.get(key) if self.cache is not None else None
+            if row is None:
+                misses.append(i)
+            else:
+                out[i] = row
+        if not misses:
+            return out
+        if len(misses) >= min_batch_jit:
+            fn = self._compiled(archs[0])
+            hw = jnp.asarray(np.stack([vecs[i] for i in misses]))
+            rows = np.asarray(fn(hw), dtype=np.float64)
+        else:
+            rows = np.stack([self._eager_row(archs[i]) for i in misses])
+        for j, i in enumerate(misses):
+            out[i] = rows[j]
+            if self.cache is not None:
+                self.cache.put(keys[i], rows[j])
+        return out
+
+    def _eager_row(self, arch: MicroArch) -> np.ndarray:
+        bd = simulate.predict(arch, self.graph, self.strategy,
+                              system=self.system, cfg=self.ppe,
+                              overlap=self.overlap,
+                              n_microbatches=self.n_microbatches,
+                              pod_bw=self.pod_bw)
+        return _breakdown_row(bd)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous point sets (different graphs / strategies / systems)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalPoint:
+    """One (hardware, workload, strategy, system) candidate."""
+
+    arch: MicroArch
+    graph: ComputeGraph
+    strategy: Strategy
+    system: Optional[SystemGraph] = None
+    pod_bw: Optional[float] = None
+
+
+def evaluate_points(points: Sequence[EvalPoint],
+                    ppe: PPEConfig = PPEConfig(),
+                    cache: Optional[PredictionCache] = _PREDICTION_CACHE,
+                    min_batch_jit: int = 4) -> np.ndarray:
+    """Score a heterogeneous candidate list -> (N, 5) metric matrix.
+
+    Points are grouped by skeleton (graph fingerprint, strategy, system,
+    ppe); each group is one struct-of-arrays batch.  Hardware-only axes
+    (techlib nodes, budget variants) therefore collapse into single vmapped
+    calls, while structure-changing axes (strategy, mesh) form their own
+    groups and still benefit from the LRU cache.
+    """
+    out = np.zeros((len(points), len(METRICS)), dtype=np.float64)
+    groups: Dict[tuple, List[int]] = {}
+    evaluators: Dict[tuple, BatchedEvaluator] = {}
+    for i, p in enumerate(points):
+        ev = BatchedEvaluator(p.graph, p.strategy, system=p.system, ppe=ppe,
+                              pod_bw=p.pod_bw, cache=cache)
+        key = ev._skeleton(p.arch)
+        groups.setdefault(key, []).append(i)
+        evaluators.setdefault(key, ev)
+    for key, idxs in groups.items():
+        ev = evaluators[key]
+        rows = ev.evaluate([points[i].arch for i in idxs],
+                           min_batch_jit=min_batch_jit)
+        for j, i in enumerate(idxs):
+            out[i] = rows[j]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Budget-space batching (the SOE axis)
+# ---------------------------------------------------------------------------
+
+
+_BUDGET_COMPILED: "collections.OrderedDict[tuple, Callable]" = \
+    collections.OrderedDict()
+
+
+def evaluate_budgets(tech: TechConfig, graph: ComputeGraph,
+                     strategy: Strategy, budget_vectors,
+                     system: Optional[SystemGraph] = None,
+                     template: Optional[Budgets] = None,
+                     ppe: PPEConfig = PPEConfig(),
+                     pod_bw: Optional[float] = None) -> jnp.ndarray:
+    """Score a (B, DIM) stack of SOE budget vectors in one vmapped call.
+
+    The budget-space analogue of `BatchedEvaluator.evaluate`: goes through
+    the differentiable AGE (`discrete=False`), so the result is also
+    differentiable w.r.t. the budget stack.  (`soe.optimize` builds its own
+    vmapped value_and_grad over the same objective for the GD loop; use
+    this for one-shot batched budget scans.)  The jitted function is
+    memoized per (tech, graph, strategy, system, ppe, template) skeleton.
+    """
+    like = template or Budgets.default()
+    key = (tech, graph.fingerprint(), strategy, system, ppe, pod_bw,
+           like.node_area_mm2, like.proc_chip_area_mm2, like.power_w)
+    fn = _BUDGET_COMPILED.get(key)
+    if fn is not None:
+        _BUDGET_COMPILED.move_to_end(key)
+    else:
+        def f(w):
+            budgets = Budgets.from_vector(w, like)
+            arch = age_lib.generate(tech, budgets, discrete=False)
+            bd = simulate.predict(arch, graph, strategy, system=system,
+                                  cfg=ppe, pod_bw=pod_bw)
+            return bd.total_s
+
+        fn = jax.jit(jax.vmap(f))
+        _BUDGET_COMPILED[key] = fn
+        while len(_BUDGET_COMPILED) > _COMPILED_MAXSIZE:
+            _BUDGET_COMPILED.popitem(last=False)
+    return fn(jnp.asarray(budget_vectors, dtype=jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier
+# ---------------------------------------------------------------------------
+
+
+def pareto_front(points: Sequence, objectives: Sequence[Callable]) -> List:
+    """Non-dominated subset minimizing every objective (callables on points).
+
+    O(n^2); returns points in input order.  A point is kept iff no other
+    point is <= on all objectives and < on at least one.
+    """
+    vals = [tuple(float(obj(p)) for obj in objectives) for p in points]
+    keep = []
+    for i, vi in enumerate(vals):
+        dominated = False
+        for j, vj in enumerate(vals):
+            if j == i:
+                continue
+            if all(a <= b for a, b in zip(vj, vi)) \
+                    and any(a < b for a, b in zip(vj, vi)):
+                dominated = True
+                break
+        if not dominated:
+            keep.append(points[i])
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# Design-space sweep driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One evaluated design point of a `sweep()`."""
+
+    arch: str                       # model architecture id
+    cell: str                       # shape cell name
+    mesh: Tuple[int, ...]
+    logic: str
+    hbm: str
+    net: str
+    strategy: Strategy
+    time_s: float
+    compute_s: float
+    comm_s: float
+    exposed_comm_s: float
+    devices: int
+    power_w: float
+    chip_area_mm2: float
+
+    def metric(self, name: str) -> float:
+        return float(getattr(self, name))
+
+    def as_csv_row(self) -> str:
+        return (f"{self.arch},{self.cell},{'x'.join(map(str, self.mesh))},"
+                f"{self.logic},{self.hbm},{self.net},{self.strategy.name},"
+                f"{self.time_s:.6e},{self.compute_s:.6e},{self.comm_s:.6e},"
+                f"{self.devices},{self.power_w:g},{self.chip_area_mm2:g}")
+
+
+CSV_HEADER = ("arch,cell,mesh,logic,hbm,net,strategy,time_s,compute_s,"
+              "comm_s,devices,power_w,chip_area_mm2")
+
+
+@dataclasses.dataclass
+class SweepResult:
+    points: List[SweepPoint]
+    n_evaluations: int
+
+    def pareto(self, objectives: Sequence[str] = ("time_s", "devices")
+               ) -> List[SweepPoint]:
+        objs = [(lambda p, k=k: p.metric(k)) for k in objectives]
+        return pareto_front(self.points, objs)
+
+    def best(self) -> SweepPoint:
+        return min(self.points, key=lambda p: p.time_s)
+
+    def to_csv(self) -> str:
+        return "\n".join([CSV_HEADER] + [p.as_csv_row()
+                                         for p in self.points])
+
+
+def _default_strategies(cfg, cell, mesh_shape) -> List[Strategy]:
+    from repro.core import planner     # lazy: planner imports pathfinder
+    return planner.candidate_strategies(cfg, cell, mesh_shape)
+
+
+def sweep(arches: Sequence[str], cells: Sequence[str],
+          mesh_shapes: Sequence[Tuple[int, ...]],
+          logic_nodes: Sequence[str] = ("N7",),
+          hbms: Sequence[str] = ("HBM2E",),
+          nets: Sequence[str] = ("IB-NDR-X8",),
+          budgets: Optional[Budgets] = None,
+          ppe: PPEConfig = PPEConfig(n_tilings=8),
+          strategies_fn: Optional[Callable] = None,
+          cache: Optional[PredictionCache] = _PREDICTION_CACHE
+          ) -> SweepResult:
+    """Cross-product design-space sweep (the paper's §9 studies, batched).
+
+    arches x cells define workload graphs, mesh_shapes define systems and
+    candidate strategies, (logic, hbm, net) triples define AGE'd hardware.
+    All hardware points sharing a skeleton are scored in one vmapped call.
+    """
+    from repro.configs.base import SHAPE_CELLS, get_config
+    from repro.core import lmgraph, techlib
+    from repro.core.placement import mesh_system
+
+    budgets = budgets or Budgets.default()
+    strategies_fn = strategies_fn or _default_strategies
+
+    tech_axis = list(itertools.product(logic_nodes, hbms, nets))
+    hw_axis = []
+    for logic, hbm, net in tech_axis:
+        tech = techlib.make_tech_config(logic, hbm, net)
+        hw_axis.append(((logic, hbm, net),
+                        age_lib.generate(tech, budgets)))
+
+    points: List[EvalPoint] = []
+    labels: List[tuple] = []
+    for arch_name in arches:
+        cfg = get_config(arch_name)
+        for cell_name in cells:
+            cell = SHAPE_CELLS[cell_name]
+            graph = lmgraph.build_graph(cfg, cell)
+            for mesh in mesh_shapes:
+                system = mesh_system(tuple(mesh))
+                for st in strategies_fn(cfg, cell, tuple(mesh)):
+                    for (logic, hbm, net), hw in hw_axis:
+                        points.append(EvalPoint(hw, graph, st,
+                                                system=system))
+                        labels.append((arch_name, cell_name, tuple(mesh),
+                                       logic, hbm, net, st))
+    rows = evaluate_points(points, ppe=ppe, cache=cache)
+    out = []
+    for (arch_name, cell_name, mesh, logic, hbm, net, st), row in zip(labels,
+                                                                      rows):
+        out.append(SweepPoint(
+            arch=arch_name, cell=cell_name, mesh=mesh, logic=logic, hbm=hbm,
+            net=net, strategy=st, time_s=float(row[0]),
+            compute_s=float(row[1]), comm_s=float(row[2]),
+            exposed_comm_s=float(row[3]), devices=st.devices,
+            power_w=float(budgets.power_w),
+            chip_area_mm2=float(budgets.proc_chip_area_mm2)))
+    return SweepResult(points=out, n_evaluations=len(out))

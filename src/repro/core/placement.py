@@ -73,6 +73,17 @@ def multi_pod_system(pods: int = 2, side: int = 16) -> SystemGraph:
                        levels=("pod", "inter", "inter"))
 
 
+def mesh_system(mesh_shape: Tuple[int, ...]) -> SystemGraph:
+    """SystemGraph for a runtime mesh shape: 3-d meshes are multi-pod
+    (pod dim on the slower fabric); 1-/2-d meshes are tori of the same
+    dims, so the system node count always equals the mesh device count."""
+    if len(mesh_shape) == 3:
+        return SystemGraph(dims=tuple(mesh_shape),
+                           levels=("pod", "inter", "inter"))
+    return SystemGraph(dims=tuple(mesh_shape),
+                       levels=("inter",) * len(mesh_shape))
+
+
 @dataclasses.dataclass
 class AxisMapping:
     """Where one parallel axis landed in physical space."""

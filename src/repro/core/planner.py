@@ -16,11 +16,10 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.core import age as age_lib
-from repro.core import lmgraph, simulate
+from repro.core import lmgraph, pathfinder
 from repro.core.age import MicroArch
 from repro.core.parallelism import Strategy
-from repro.core.placement import SystemGraph, multi_pod_system, \
-    single_pod_system
+from repro.core.placement import SystemGraph, mesh_system
 from repro.core.roofline import PPEConfig
 
 
@@ -60,13 +59,6 @@ DEFAULT_RULES: Tuple[Tuple[str, Optional[Tuple[str, ...]]], ...] = (
 )
 
 
-def _mesh_system(mesh_shape: Tuple[int, ...]) -> SystemGraph:
-    if len(mesh_shape) == 3:
-        return multi_pod_system(mesh_shape[0], mesh_shape[1])
-    side = mesh_shape[0]
-    return single_pod_system(side)
-
-
 def candidate_strategies(cfg: ArchConfig, cell: ShapeCell,
                          mesh_shape: Tuple[int, ...]) -> List[Strategy]:
     """Strategies the runtime can realize on this mesh.
@@ -99,16 +91,21 @@ def plan(cfg: ArchConfig, cell: ShapeCell, mesh_shape: Tuple[int, ...],
     """Pick the best runtime-realizable strategy by CrossFlow prediction."""
     hw = arch_hw or age_lib.tpu_v5e_microarch()
     ppe = ppe or PPEConfig(n_tilings=8)        # fast mode for planning
-    system = _mesh_system(mesh_shape)
+    system = mesh_system(mesh_shape)
     graph = lmgraph.build_graph(cfg, cell)
+    # all candidates scored in one batched-engine call (LRU-cached, so a
+    # replanned (arch, cell, mesh) is free — launch/dryrun/serve re-plan)
+    cands = candidate_strategies(cfg, cell, mesh_shape)
+    rows = pathfinder.evaluate_points(
+        [pathfinder.EvalPoint(hw, graph, st, system=system)
+         for st in cands], ppe=ppe)
     best = None
-    for st in candidate_strategies(cfg, cell, mesh_shape):
-        bd = simulate.predict(hw, graph, st, system=system, cfg=ppe)
-        t = float(bd.total_s)
+    for st, row in zip(cands, rows):
+        t = float(row[0])
         if best is None or t < best[0]:
-            best = (t, st, bd)
+            best = (t, st, row)
     assert best is not None
-    t, st, bd = best
+    t, st, row = best
     rules = list(DEFAULT_RULES)
     notes = []
     if st.sp > 1:
@@ -128,8 +125,8 @@ def plan(cfg: ArchConfig, cell: ShapeCell, mesh_shape: Tuple[int, ...],
         mesh_axes=tuple(mesh_axes), strategy=st, rules=tuple(rules),
         predicted_step_s=t,
         predicted_breakdown={
-            "compute_s": float(bd.compute_s),
-            "comm_s": float(bd.comm_s),
-            "exposed_comm_s": float(bd.exposed_comm_s),
+            "compute_s": float(row[1]),
+            "comm_s": float(row[2]),
+            "exposed_comm_s": float(row[3]),
         },
         notes="; ".join(notes))

@@ -54,6 +54,7 @@ def _pow2_candidates(dim: int, lo: int = 8) -> np.ndarray:
     return np.asarray(sorted(set(cands)), dtype=np.int64)
 
 
+@functools.lru_cache(maxsize=8192)
 def _sample_nested_tilings(m: int, n: int, k: int, n_samples: int,
                            seed: int) -> np.ndarray:
     """Sample nested tiling triples for (L2, L1, L0): shape (S, 3 levels, 3).
@@ -77,7 +78,9 @@ def _sample_nested_tilings(m: int, n: int, k: int, n_samples: int,
         t1 = (min(m, side1), min(n, side1), min(k, side1))
         t0 = (min(m, 128), min(n, 128), min(k, 128))
         out.append((t2, t1, t0))
-    return np.asarray(out, dtype=np.float64)   # (S, 3, 3)
+    arr = np.asarray(out, dtype=np.float64)    # (S, 3, 3)
+    arr.setflags(write=False)                  # memoized: callers must not
+    return arr                                 # mutate (lru_cache above)
 
 
 def _blocked_traffic(M, N, K, tm, tn, tk, dtype_bytes):

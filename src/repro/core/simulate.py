@@ -138,6 +138,16 @@ def simulate_pipeline(stage_times, p2p_times, n_microbatches: int):
 # ---------------------------------------------------------------------------
 
 
+def default_system(strategy: Strategy) -> SystemGraph:
+    """Balanced 2-D torus factorization (a, b), a*b = devices, a <= b."""
+    n = strategy.devices
+    a = max(int(n ** 0.5), 1)
+    while n % a:
+        a -= 1
+    return SystemGraph(dims=(a, n // a), levels=("inter", "inter")) \
+        if a > 1 else SystemGraph(dims=(n,), levels=("inter",))
+
+
 def predict(arch: MicroArch, g: ComputeGraph, strategy: Strategy,
             system: Optional[SystemGraph] = None,
             cfg: PPEConfig = PPEConfig(), overlap: bool = True,
@@ -150,13 +160,7 @@ def predict(arch: MicroArch, g: ComputeGraph, strategy: Strategy,
     place -> roofline per node -> event-driven end-to-end estimate.
     """
     if system is None:
-        # balanced 2-D torus factorization (a, b), a*b = devices, a <= b
-        n = strategy.devices
-        a = max(int(n ** 0.5), 1)
-        while n % a:
-            a -= 1
-        system = SystemGraph(dims=(a, n // a), levels=("inter", "inter")) \
-            if a > 1 else SystemGraph(dims=(n,), levels=("inter",))
+        system = default_system(strategy)
     pl = placement_lib.place(system, strategy)
     sharded = transform.shard_graph(g, strategy, grad_bytes=grad_bytes)
 

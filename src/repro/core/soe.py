@@ -16,6 +16,13 @@ path (AGE with discrete=False + roofline + fixed-order event sim), so g_t is
 an exact `jax.grad` — the paper treats CrossFlow as a black box. A finite-
 difference fallback (`grad_mode="fd"`) reproduces the paper's setup exactly.
 
+Batched pathfinding (repro.core.pathfinder): in "auto" grad mode all S
+starting points run as ONE `jax.vmap`-ed, `jax.jit`-ed eq.-6 update per step
+— the multi-start loop is a (S, DIM) matrix iteration, not S sequential
+descents.  Strategy ranking in `co_optimize` goes through the batched
+evaluator's LRU prediction cache, so repeated (graph, strategy, hardware)
+points across calls are free.
+
 The discrete parallelism-strategy dimension is co-optimized by exhaustive
 enumeration around the GD loop (`co_optimize`), matching the paper's §9.2
 "parallelism-strategy + architecture" studies.
@@ -52,7 +59,7 @@ class SOEConfig:
     steps: int = 100                # T (paper: 100)
     starts: int = 10                # S (paper: 10)
     seed: int = 0
-    grad_mode: str = "auto"         # "auto" (jax.grad) | "fd" (paper-style)
+    grad_mode: str = "auto"         # "auto" (batched jax.grad) | "fd" (paper)
     fd_eps: float = 1e-3
     min_frac: float = 1e-3
 
@@ -102,11 +109,22 @@ def make_objective(tech: TechConfig, graph: ComputeGraph, strategy: Strategy,
     return f
 
 
-def optimize(objective: Callable, cfg: SOEConfig = SOEConfig(),
-             template: Optional[Budgets] = None) -> SOEResult:
-    """Projected GD with parameter-space exponential averaging (eq. 6)."""
-    like = template or Budgets.default()
+def _initial_starts(cfg: SOEConfig, like: Budgets) -> List[jnp.ndarray]:
+    """Start 0 is the (projected) template; the rest Dirichlet draws."""
     rng = np.random.default_rng(cfg.seed)
+    starts = [_project_simplexes(like.as_vector(), cfg.min_frac)]
+    for _ in range(1, cfg.starts):
+        starts.append(jnp.asarray(rng.dirichlet(np.ones(_NC)).tolist()
+                                  + rng.dirichlet(np.ones(_NC)).tolist()
+                                  + rng.dirichlet(np.ones(_NP)).tolist(),
+                                  dtype=jnp.float32))
+    return starts
+
+
+def _optimize_sequential(objective: Callable, cfg: SOEConfig,
+                         like: Budgets) -> SOEResult:
+    """One start at a time; supports the paper-style FD gradient mode and
+    arbitrary (non-traceable) objectives."""
     n_queries = 0
 
     if cfg.grad_mode == "fd":
@@ -130,14 +148,7 @@ def optimize(objective: Callable, cfg: SOEConfig = SOEConfig(),
             return g, float(val)
 
     best_w, best_t, history = None, float("inf"), []
-    for s in range(cfg.starts):
-        if s == 0:
-            w = _project_simplexes(like.as_vector(), cfg.min_frac)
-        else:
-            w = jnp.asarray(rng.dirichlet(np.ones(_NC)).tolist()
-                            + rng.dirichlet(np.ones(_NC)).tolist()
-                            + rng.dirichlet(np.ones(_NP)).tolist(),
-                            dtype=jnp.float32)
+    for w in _initial_starts(cfg, like):
         m = w
         last = float("inf")
         for t in range(cfg.steps):
@@ -163,6 +174,108 @@ def optimize(objective: Callable, cfg: SOEConfig = SOEConfig(),
                      history=history, n_queries=n_queries)
 
 
+def _optimize_batched(objective: Callable, cfg: SOEConfig,
+                      like: Budgets) -> SOEResult:
+    """All S starting points advance together: one vmapped value_and_grad
+    plus one vectorized eq.-6 update per step (jit-compiled).  Converged
+    starts are frozen by mask so per-start early stopping matches the
+    sequential semantics."""
+    W = jnp.stack(_initial_starts(cfg, like))           # (S, DIM)
+    vg = jax.vmap(jax.value_and_grad(objective))
+    proj = jax.vmap(functools.partial(_project_simplexes,
+                                      min_frac=cfg.min_frac))
+    lr, beta = cfg.lr, cfg.beta
+
+    @jax.jit
+    def step(W, M, done, last):
+        vals, G = vg(W)
+        G = jnp.nan_to_num(G, nan=0.0, posinf=0.0, neginf=0.0)
+        gnorm = jnp.linalg.norm(G, axis=1, keepdims=True)
+        G = jnp.where(gnorm > 0, G / (gnorm + 1e-12), G)
+        W_new = W - lr * G                               # W_t = W_{t-1} - η g
+        W_hat = W_new / (jnp.linalg.norm(W_new, axis=1,
+                                         keepdims=True) + 1e-12)
+        M_new = beta * M + (1.0 - beta) * W_hat          # EMA in W-space
+        W_proj = proj(M_new)                             # project
+        conv = jnp.abs(last - vals) < 1e-7 * jnp.maximum(vals, 1e-12)
+        frozen = done[:, None]
+        W_out = jnp.where(frozen, W, W_proj)
+        M_out = jnp.where(frozen, M, M_new)
+        return W_out, M_out, done | conv, vals
+
+    M = W
+    done = jnp.zeros(cfg.starts, dtype=bool)
+    last = jnp.full(cfg.starts, jnp.inf)
+    history: List[float] = []
+    best_w, best_t = None, float("inf")
+    n_queries = 0
+    for t in range(cfg.steps):
+        if bool(np.all(np.asarray(done))):
+            break
+        # the vmapped value_and_grad evaluates ALL S starts every step (the
+        # done mask only freezes state), so every step costs S queries
+        n_queries += cfg.starts
+        W_before = W
+        W, M, done, vals = step(W, M, done, last)
+        vals_np = np.asarray(vals, dtype=np.float64)
+        history.extend(float(v) for v in vals_np)
+        i = int(np.argmin(vals_np))
+        if vals_np[i] < best_t:
+            best_t, best_w = float(vals_np[i]), W_before[i]
+        last = vals
+    final_t = float(objective(best_w))
+    if final_t < best_t:
+        best_t = final_t
+    return SOEResult(budgets=Budgets.from_vector(np.asarray(best_w), like),
+                     time_s=float(best_t), strategy=None,
+                     history=history, n_queries=n_queries)
+
+
+def optimize(objective: Callable, cfg: SOEConfig = SOEConfig(),
+             template: Optional[Budgets] = None) -> SOEResult:
+    """Projected GD with parameter-space exponential averaging (eq. 6).
+
+    grad_mode="auto" runs the batched multi-start path (one vmapped update
+    advances every start); "fd" or a non-traceable objective falls back to
+    the sequential paper-style loop.
+    """
+    like = template or Budgets.default()
+    if cfg.grad_mode == "fd":
+        return _optimize_sequential(objective, cfg, like)
+    try:
+        return _optimize_batched(objective, cfg, like)
+    except (jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError, TypeError):
+        # objective not jax-traceable (true black box): paper-style FD loop
+        return _optimize_sequential(
+            objective, dataclasses.replace(cfg, grad_mode="fd"), like)
+
+
+def rank_strategies(tech: TechConfig, graph: ComputeGraph,
+                    strategies: Sequence[Strategy],
+                    system: Optional[SystemGraph] = None,
+                    template: Optional[Budgets] = None,
+                    ppe: PPEConfig = PPEConfig()
+                    ) -> List[Tuple[float, Strategy]]:
+    """Score every strategy on the template budgets, cheapest first.
+
+    Scoring goes through the batched pathfinding engine: one struct-of-
+    arrays evaluation per graph/strategy skeleton with LRU caching, so a
+    re-ranking of previously seen points costs nothing.
+    """
+    from repro.core import pathfinder
+    like = template or Budgets.default()
+    # exactly the arch the per-point objective f(like.as_vector()) builds
+    budgets = Budgets.from_vector(like.as_vector(), like)
+    arch = age_lib.generate(tech, budgets, discrete=False)
+    points = [pathfinder.EvalPoint(arch, graph, st, system=system)
+              for st in strategies]
+    rows = pathfinder.evaluate_points(points, ppe=ppe)
+    ranked = [(float(rows[i, 0]), st) for i, st in enumerate(strategies)]
+    ranked.sort(key=lambda x: x[0])
+    return ranked
+
+
 def co_optimize(tech: TechConfig, graph: ComputeGraph, n_devices: int,
                 system: Optional[SystemGraph] = None,
                 cfg: SOEConfig = SOEConfig(),
@@ -180,12 +293,8 @@ def co_optimize(tech: TechConfig, graph: ComputeGraph, n_devices: int,
     if strategies is None:
         strategies = list(enumerate_strategies(n_devices, max_lp=4))
     # rank strategies on template budgets, then refine the top few
-    ranked = []
-    for st in strategies:
-        f = make_objective(tech, graph, st, system=system, template=like,
-                           ppe=ppe)
-        ranked.append((float(f(like.as_vector())), st))
-    ranked.sort(key=lambda x: x[0])
+    ranked = rank_strategies(tech, graph, strategies, system=system,
+                             template=like, ppe=ppe)
     if not search_arch:
         t, st = ranked[0]
         return SOEResult(budgets=like, time_s=t, strategy=st, history=[],

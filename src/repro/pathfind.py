@@ -1,0 +1,185 @@
+"""DeepFlow pathfinding CLI — batched design-space exploration from a shell.
+
+Subcommands:
+
+  sweep   cross-product (arch x cell x mesh x logic x hbm x net) scored by
+          the batched evaluator; prints CSV (optionally only the Pareto
+          frontier) and can write it to a file:
+
+              PYTHONPATH=src python -m repro.pathfind sweep \
+                  --arch qwen1.5-0.5b --cell train_4k \
+                  --mesh 8x8 --mesh 16x16 \
+                  --logic N7,N5,N3 --hbm HBM2E,HBM3 --csv sweep.csv
+
+  plan    the CrossFlow -> runtime bridge: best runtime-realizable strategy
+          for one (arch, cell, mesh) on the TPU-v5e micro-arch:
+
+              PYTHONPATH=src python -m repro.pathfind plan \
+                  --arch qwen1.5-0.5b --cell train_4k --mesh 16x16
+
+  soe     joint strategy x hardware-budget co-optimization (paper §7/§9.2)
+          with the batched multi-start GD:
+
+              PYTHONPATH=src python -m repro.pathfind soe \
+                  --arch qwen1.5-0.5b --cell train_4k --devices 64 \
+                  --steps 10 --starts 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Tuple
+
+
+def _mesh(text: str) -> Tuple[int, ...]:
+    try:
+        dims = tuple(int(x) for x in text.lower().split("x"))
+    except ValueError:
+        dims = ()
+    if not dims or any(d <= 0 for d in dims):
+        raise argparse.ArgumentTypeError(
+            f"bad mesh {text!r}; expected e.g. 16x16 or 2x16x16")
+    return dims
+
+
+def _csv_list(text: str) -> List[str]:
+    return [x.strip() for x in text.split(",") if x.strip()]
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="repro.pathfind", description=__doc__,
+                                formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    sw = sub.add_parser("sweep", help="batched design-space sweep")
+    sw.add_argument("--arch", action="append", required=True,
+                    help="model arch id (repeatable)")
+    sw.add_argument("--cell", action="append", required=True,
+                    help="shape cell name (repeatable)")
+    sw.add_argument("--mesh", action="append", type=_mesh, required=True,
+                    help="mesh shape like 16x16 (repeatable)")
+    sw.add_argument("--logic", type=_csv_list, default=["N7"],
+                    help="comma-separated logic nodes (default N7)")
+    sw.add_argument("--hbm", type=_csv_list, default=["HBM2E"],
+                    help="comma-separated HBM generations")
+    sw.add_argument("--net", type=_csv_list, default=["IB-NDR-X8"],
+                    help="comma-separated inter-node networks")
+    sw.add_argument("--area", type=float, default=None,
+                    help="proc chip area budget (mm^2)")
+    sw.add_argument("--power", type=float, default=None,
+                    help="node power budget (W)")
+    sw.add_argument("--tilings", type=int, default=8,
+                    help="PPE tiling samples per level")
+    sw.add_argument("--pareto", type=_csv_list, default=None, metavar="OBJS",
+                    help="print only the Pareto frontier over these "
+                         "objectives (e.g. time_s,devices)")
+    sw.add_argument("--csv", default=None, help="also write CSV here")
+
+    pl = sub.add_parser("plan", help="runtime sharding plan for one point")
+    pl.add_argument("--arch", required=True)
+    pl.add_argument("--cell", required=True)
+    pl.add_argument("--mesh", type=_mesh, required=True)
+
+    so = sub.add_parser("soe", help="strategy x budget co-optimization")
+    so.add_argument("--arch", required=True)
+    so.add_argument("--cell", required=True)
+    so.add_argument("--devices", type=int, default=64)
+    so.add_argument("--logic", default="N7")
+    so.add_argument("--hbm", default="HBM2E")
+    so.add_argument("--net", default="IB-NDR-X8")
+    so.add_argument("--steps", type=int, default=20)
+    so.add_argument("--starts", type=int, default=4)
+    so.add_argument("--tilings", type=int, default=8)
+    so.add_argument("--no-search-arch", action="store_true",
+                    help="rank strategies only (skip the budget GD)")
+    return p
+
+
+def _cmd_sweep(args) -> int:
+    import dataclasses
+    from repro.core import pathfinder
+    from repro.core.age import Budgets
+    from repro.core.roofline import PPEConfig
+
+    budgets = Budgets.default()
+    if args.area is not None:
+        budgets = dataclasses.replace(budgets, proc_chip_area_mm2=args.area)
+    if args.power is not None:
+        budgets = dataclasses.replace(budgets, power_w=args.power)
+    result = pathfinder.sweep(
+        args.arch, args.cell, args.mesh, logic_nodes=args.logic,
+        hbms=args.hbm, nets=args.net, budgets=budgets,
+        ppe=PPEConfig(n_tilings=args.tilings))
+    points = result.points
+    if args.pareto:
+        points = result.pareto(objectives=args.pareto)
+    lines = [pathfinder.CSV_HEADER] + [p.as_csv_row() for p in points]
+    print("\n".join(lines))
+    if args.csv:
+        with open(args.csv, "w") as fh:
+            fh.write("\n".join(lines) + "\n")
+        print(f"# wrote {len(points)} points to {args.csv}", file=sys.stderr)
+    best = result.best()
+    print(f"# best: {best.arch}/{best.cell} mesh="
+          f"{'x'.join(map(str, best.mesh))} {best.logic}/{best.hbm}/"
+          f"{best.net} {best.strategy.name} -> {best.time_s*1e3:.2f} ms",
+          file=sys.stderr)
+    return 0
+
+
+def _cmd_plan(args) -> int:
+    from repro.configs.base import SHAPE_CELLS, get_config
+    from repro.core import planner
+
+    axes = ("pod", "data", "model")[-len(args.mesh):]
+    plan = planner.plan(get_config(args.arch), SHAPE_CELLS[args.cell],
+                        args.mesh, axes)
+    print(f"strategy       {plan.strategy.name}")
+    print(f"predicted_step {plan.predicted_step_s*1e3:.3f} ms")
+    for k, v in plan.predicted_breakdown.items():
+        print(f"  {k:15s} {v*1e3:.3f} ms")
+    for axis, rule in plan.rules:
+        print(f"rule {axis:10s} -> {rule}")
+    if plan.notes:
+        print(f"notes: {plan.notes}")
+    return 0
+
+
+def _cmd_soe(args) -> int:
+    from repro.configs.base import SHAPE_CELLS, get_config
+    from repro.core import lmgraph, soe, techlib
+    from repro.core.roofline import PPEConfig
+
+    tech = techlib.make_tech_config(args.logic, args.hbm, args.net)
+    g = lmgraph.build_graph(get_config(args.arch), SHAPE_CELLS[args.cell])
+    res = soe.co_optimize(
+        tech, g, n_devices=args.devices,
+        cfg=soe.SOEConfig(steps=args.steps, starts=args.starts),
+        search_arch=not args.no_search_arch,
+        ppe=PPEConfig(n_tilings=args.tilings))
+    print(f"strategy  {res.strategy.name}")
+    print(f"time      {res.time_s*1e3:.3f} ms/iter")
+    print(f"queries   {res.n_queries}")
+    for comp, frac in res.budgets.area_frac.items():
+        print(f"area[{comp:9s}] {float(frac):.3f}")
+    return 0
+
+
+def main(argv=None) -> int:
+    args = _parser().parse_args(argv)
+    try:
+        return {"sweep": _cmd_sweep, "plan": _cmd_plan,
+                "soe": _cmd_soe}[args.cmd](args)
+    except ModuleNotFoundError as e:
+        print(f"error: unknown arch (no config module): {e.name}",
+              file=sys.stderr)
+    except KeyError as e:
+        print(f"error: unknown name: {e}", file=sys.stderr)
+    except (ValueError, AttributeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

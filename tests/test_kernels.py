@@ -8,6 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e '.[dev]')")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref

@@ -1,0 +1,240 @@
+"""Batched pathfinding engine tests (ISSUE-1 tentpole).
+
+Covers: batched-vs-per-point agreement, LRU cache hit/miss accounting,
+Pareto-frontier correctness, the batched multi-start SOE, and argmin
+equivalence of `soe.co_optimize` / `planner.plan` with the eager per-point
+reference loop they replaced.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPE_CELLS, get_config
+from repro.core import age, lmgraph, pathfinder, planner, simulate, soe, \
+    techlib
+from repro.core.age import Budgets
+from repro.core.parallelism import Strategy, enumerate_strategies
+from repro.core.placement import mesh_system
+from repro.core.roofline import PPEConfig
+
+PPE = PPEConfig(n_tilings=8)
+
+
+@pytest.fixture()
+def toy():
+    g = lmgraph.gemm_graph(2048, 1024, 4096, train=True)
+    st = Strategy("RC", kp1=2, kp2=2, dp=4)
+    archs = [age.generate(techlib.make_tech_config(lg, hbm),
+                          Budgets.default())
+             for lg in ("N7", "N5") for hbm in ("HBM2E", "HBM3")]
+    return g, st, archs
+
+
+# ------------------------------------------------------------- agreement
+def test_batched_evaluator_matches_per_point_predict(toy):
+    g, st, archs = toy
+    ev = pathfinder.BatchedEvaluator(g, st, ppe=PPE, cache=None)
+    rows = ev.evaluate(archs)
+    assert rows.shape == (len(archs), len(pathfinder.METRICS))
+    for arch, row in zip(archs, rows):
+        bd = simulate.predict(arch, g, st, cfg=PPE)
+        np.testing.assert_allclose(row[0], float(bd.total_s), rtol=1e-6)
+        np.testing.assert_allclose(row[1], float(bd.compute_s), rtol=1e-6)
+        np.testing.assert_allclose(row[2], float(bd.comm_s), rtol=1e-6)
+
+
+def test_batched_evaluator_pipeline_strategy_matches(toy):
+    g, _, archs = toy
+    st = Strategy("RC", kp1=2, kp2=1, dp=2, lp=2)
+    ev = pathfinder.BatchedEvaluator(g, st, ppe=PPE, cache=None)
+    rows = ev.evaluate(archs[:2])
+    for arch, row in zip(archs[:2], rows):
+        bd = simulate.predict(arch, g, st, cfg=PPE)
+        np.testing.assert_allclose(row[0], float(bd.total_s), rtol=1e-6)
+        np.testing.assert_allclose(row[4], float(bd.pipeline_bubble_s),
+                                   rtol=1e-6, atol=1e-12)
+
+
+def test_evaluate_points_heterogeneous_groups(toy):
+    g, _, archs = toy
+    strategies = [Strategy("RC", kp1=2, kp2=2, dp=4),
+                  Strategy("CR", kp1=4, dp=4)]
+    points = [pathfinder.EvalPoint(a, g, st)
+              for st in strategies for a in archs]
+    rows = pathfinder.evaluate_points(points, ppe=PPE, cache=None)
+    for p, row in zip(points, rows):
+        bd = simulate.predict(p.arch, g, p.strategy, cfg=PPE)
+        np.testing.assert_allclose(row[0], float(bd.total_s), rtol=1e-6)
+
+
+def test_hw_pack_unpack_roundtrip(toy):
+    _, _, archs = toy
+    a = archs[0]
+    v = pathfinder.pack_hw(a)
+    assert v.shape == (pathfinder.HW_DIM,)
+    b = pathfinder.unpack_hw(a, v)
+    np.testing.assert_allclose(float(b.compute_throughput),
+                               float(a.compute_throughput), rtol=1e-6)
+    np.testing.assert_allclose(float(b.dram_bw), float(a.dram_bw),
+                               rtol=1e-6)
+
+
+# ------------------------------------------------------------------ cache
+def test_prediction_cache_hit_miss_accounting(toy):
+    g, st, archs = toy
+    cache = pathfinder.PredictionCache(maxsize=64)
+    ev = pathfinder.BatchedEvaluator(g, st, ppe=PPE, cache=cache)
+    rows = ev.evaluate(archs)
+    assert cache.stats == {"hits": 0, "misses": len(archs),
+                           "size": len(archs)}
+    rows2 = ev.evaluate(archs)
+    assert cache.stats["hits"] == len(archs)
+    assert cache.stats["misses"] == len(archs)
+    np.testing.assert_array_equal(rows, rows2)
+    # partial overlap: one new point, rest hits
+    extra = age.generate(techlib.make_tech_config("N3", "HBM2E"),
+                         Budgets.default())
+    rows3 = ev.evaluate(archs + [extra])
+    assert cache.stats["hits"] == 2 * len(archs)
+    assert cache.stats["misses"] == len(archs) + 1
+    np.testing.assert_array_equal(rows3[:len(archs)], rows)
+
+
+def test_prediction_cache_lru_eviction(toy):
+    g, st, archs = toy
+    cache = pathfinder.PredictionCache(maxsize=2)
+    ev = pathfinder.BatchedEvaluator(g, st, ppe=PPE, cache=cache)
+    ev.evaluate(archs)                       # 4 points through a 2-slot LRU
+    assert len(cache) == 2
+    ev.evaluate([archs[-1]])                 # most recent point still cached
+    assert cache.stats["hits"] == 1
+
+
+def test_cache_distinguishes_strategies(toy):
+    g, _, archs = toy
+    cache = pathfinder.PredictionCache()
+    a = archs[0]
+    r1 = pathfinder.evaluate_points(
+        [pathfinder.EvalPoint(a, g, Strategy("RC", kp1=2, kp2=2, dp=4))],
+        ppe=PPE, cache=cache)
+    r2 = pathfinder.evaluate_points(
+        [pathfinder.EvalPoint(a, g, Strategy("CR", kp1=4, dp=4))],
+        ppe=PPE, cache=cache)
+    assert cache.stats["misses"] == 2        # no false sharing across keys
+    assert r1[0, 0] != r2[0, 0]
+
+
+def test_graph_fingerprint_stable_and_sensitive():
+    g1 = lmgraph.gemm_graph(512, 512, 512)
+    g2 = lmgraph.gemm_graph(512, 512, 512)
+    g3 = lmgraph.gemm_graph(512, 512, 1024)
+    assert g1.fingerprint() == g2.fingerprint()
+    assert g1.fingerprint() != g3.fingerprint()
+
+
+# ----------------------------------------------------------------- pareto
+def test_pareto_front_toy():
+    pts = [(1.0, 5.0), (2.0, 2.0), (5.0, 1.0),     # frontier
+           (2.0, 6.0), (3.0, 3.0), (6.0, 6.0)]     # dominated
+    front = pathfinder.pareto_front(pts, [lambda p: p[0], lambda p: p[1]])
+    assert front == [(1.0, 5.0), (2.0, 2.0), (5.0, 1.0)]
+
+
+def test_pareto_front_keeps_duplicates_of_nondominated():
+    pts = [(1.0, 1.0), (1.0, 1.0), (2.0, 2.0)]
+    front = pathfinder.pareto_front(pts, [lambda p: p[0], lambda p: p[1]])
+    assert front == [(1.0, 1.0), (1.0, 1.0)]
+
+
+def test_sweep_toy_cross_product_and_frontier():
+    res = pathfinder.sweep(
+        ["qwen1.5-0.5b"], ["train_4k"], [(4, 4), (8, 8)],
+        logic_nodes=("N7", "N5"), hbms=("HBM2E",), nets=("IB-NDR-X8",),
+        ppe=PPE, cache=None)
+    # dense non-long-context arch on 2-d meshes: 1 strategy per mesh
+    assert len(res.points) == 2 * 2
+    front = res.pareto(objectives=("time_s", "devices"))
+    assert 0 < len(front) <= len(res.points)
+    assert res.best() in res.points
+    times = {p.time_s for p in res.points}
+    assert len(times) > 1                      # tech axis actually matters
+    csv = res.to_csv()
+    assert csv.splitlines()[0] == pathfinder.CSV_HEADER
+    assert len(csv.splitlines()) == len(res.points) + 1
+
+
+def test_evaluate_budgets_matches_objective(toy):
+    g, st, _ = toy
+    tech = techlib.make_tech_config("N7", "HBM2E")
+    like = Budgets.default()
+    f = soe.make_objective(tech, g, st, template=like, ppe=PPE)
+    rng = np.random.default_rng(0)
+    W = np.stack([np.asarray(like.as_vector()),
+                  rng.dirichlet(np.ones(17)).astype(np.float32)])
+    times = pathfinder.evaluate_budgets(tech, g, st, W, template=like,
+                                        ppe=PPE)
+    for w, t in zip(W, times):
+        np.testing.assert_allclose(float(t), float(f(w)), rtol=1e-6)
+    # second call reuses the memoized jitted function (same values)
+    times2 = pathfinder.evaluate_budgets(tech, g, st, W, template=like,
+                                         ppe=PPE)
+    np.testing.assert_array_equal(np.asarray(times), np.asarray(times2))
+
+
+# ------------------------------------------------------------ batched SOE
+def test_batched_multistart_soe_improves(toy):
+    g, st, _ = toy
+    tech = techlib.make_tech_config("N7", "HBM2E")
+    f = soe.make_objective(tech, g, st, template=Budgets.default(), ppe=PPE)
+    start = float(f(Budgets.default().as_vector()))
+    res = soe.optimize(f, soe.SOEConfig(steps=12, starts=3))
+    assert res.time_s <= start * 1.001
+    assert res.n_queries > 0
+    assert len(res.history) >= 3               # all starts recorded
+
+
+def test_batched_soe_falls_back_for_nontraceable_objective():
+    calls = {"n": 0}
+
+    def black_box(w):
+        calls["n"] += 1
+        return float(np.sum(np.square(np.asarray(w))))   # breaks tracing
+
+    res = soe.optimize(black_box, soe.SOEConfig(steps=3, starts=2))
+    assert calls["n"] > 0
+    assert np.isfinite(res.time_s)
+
+
+# ------------------------------------------- argmin-equivalence (refactor)
+def test_co_optimize_argmin_matches_eager_reference(toy):
+    g, _, _ = toy
+    tech = techlib.make_tech_config("N7", "HBM2E")
+    res = soe.co_optimize(tech, g, n_devices=16, search_arch=False, ppe=PPE)
+    like = Budgets.default()
+    arch = age.generate(tech, Budgets.from_vector(like.as_vector(), like),
+                        discrete=False)
+    sts = list(enumerate_strategies(16, max_lp=4))
+    ranked = sorted(((float(simulate.predict(arch, g, s, cfg=PPE).total_s),
+                      s) for s in sts), key=lambda x: x[0])
+    assert res.strategy == ranked[0][1]
+    np.testing.assert_allclose(res.time_s, ranked[0][0], rtol=1e-6)
+
+
+def test_planner_argmin_matches_eager_reference():
+    cfg = get_config("qwen2-moe-a2.7b")        # MoE: >1 candidate strategy
+    cell = SHAPE_CELLS["train_4k"]
+    mesh = (16, 16)
+    plan = planner.plan(cfg, cell, mesh, ("data", "model"))
+    hw = age.tpu_v5e_microarch()
+    ppe = PPEConfig(n_tilings=8)
+    system = mesh_system(mesh)
+    graph = lmgraph.build_graph(cfg, cell)
+    cands = planner.candidate_strategies(cfg, cell, mesh)
+    assert len(cands) > 1
+    best = min(((float(simulate.predict(hw, graph, s, system=system,
+                                        cfg=ppe).total_s), i)
+                for i, s in enumerate(cands)), key=lambda x: x[0])
+    assert plan.strategy == cands[best[1]]
+    np.testing.assert_allclose(plan.predicted_step_s, best[0], rtol=1e-6)
