@@ -5,88 +5,109 @@ benchmark's own wall time; derived = its headline reproduction metric).
 
     PYTHONPATH=src python -m benchmarks.run              # all
     PYTHONPATH=src python -m benchmarks.run fig9 fig10   # subset
+    PYTHONPATH=src python -m benchmarks.run --json-dir bench_json sweep
+
+With ``--json-dir`` every benchmark also writes ``<dir>/<name>.json``:
+``{"name", "us_per_call", "derived", "ok", "data"}`` where ``data`` is the
+benchmark's full result dict — the machine-readable summary consumed by
+trajectory tracking (BENCH_*.json) and CI artifacts.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional, Tuple
+
+BenchResult = Tuple[str, Optional[Dict]]
 
 
-def _bench_fig1() -> str:
+def _bench_fig1() -> BenchResult:
     from benchmarks import fig1_intensity
     r = fig1_intensity.main(verbose=False)
     return (f"median_intensity_drop={r['medians'][0]/r['medians'][-1]:.1f}x;"
-            f"spread@64k={r['spread_at_max_degree']:.1f}x")
+            f"spread@64k={r['spread_at_max_degree']:.1f}x"), r
 
 
-def _bench_fig6() -> str:
+def _bench_fig6() -> BenchResult:
     from benchmarks import fig6_gemm_validation
     r = fig6_gemm_validation.main(verbose=False)
-    return f"corr={r['corr']:.3f};rel_err={r['rel_err']*100:.1f}%"
+    return f"corr={r['corr']:.3f};rel_err={r['rel_err']*100:.1f}%", r
 
 
-def _bench_fig8() -> str:
+def _bench_fig8() -> BenchResult:
     from benchmarks import fig8_lm_validation
     r = fig8_lm_validation.main(verbose=False)
-    return f"corr={r['corr']:.3f};rel_err={r['rel_err']*100:.0f}%"
+    return f"corr={r['corr']:.3f};rel_err={r['rel_err']*100:.0f}%", r
 
 
-def _bench_fig9() -> str:
+def _bench_fig9() -> BenchResult:
     from benchmarks import fig9_tech_scaling
     r = fig9_tech_scaling.main(verbose=False)
     c = r["checks"]
     n12n7 = max(c["n12_to_n7_speedup"].values())
     return (f"n12->n7={n12n7:.2f}x;"
             f"logic_sat_n3/n1={c.get('logic_saturation_n3_n1', 0):.2f};"
-            f"net_gain={c['network_gain_at_advanced_node']:.2f}x")
+            f"net_gain={c['network_gain_at_advanced_node']:.2f}x"), r
 
 
-def _bench_fig10() -> str:
+def _bench_fig10() -> BenchResult:
     from benchmarks import fig10_coopt
     r = fig10_coopt.main(verbose=False)
     s = max(r["strategy_speedups"])
-    return f"strategy_speedup={s:.2f}x(paper ~2x)"
+    return f"strategy_speedup={s:.2f}x(paper ~2x)", r
 
 
-def _bench_fig11() -> str:
+def _bench_fig11() -> BenchResult:
     from benchmarks import fig11_package
     r = fig11_package.main(verbose=False)
     best = (max(r["improvement"].values()) - 1) * 100
-    return f"package_gain={best:.0f}%(paper <=32%)"
+    return f"package_gain={best:.0f}%(paper <=32%)", r
 
 
-def _bench_perf_variants() -> str:
+def _bench_perf_variants() -> BenchResult:
     from benchmarks import perf_compare
     r = perf_compare.main(verbose=False)
     best = {}
     for cell, rows in r.items():
         sp = max((row.get("bound_speedup", 1) for row in rows), default=1)
         best[cell.split("/")[0]] = sp
-    return ";".join(f"{k}={v:.1f}x" for k, v in best.items()) or "no_data"
+    return (";".join(f"{k}={v:.1f}x" for k, v in best.items())
+            or "no_data"), r
 
 
-def _bench_roofline() -> str:
+def _bench_roofline() -> BenchResult:
     from benchmarks import roofline
     r = roofline.main(verbose=False)
     n = sum(len(v) for v in r.values())
     if not n:
-        return "no_dryrun_artifacts_yet"
+        return "no_dryrun_artifacts_yet", r
     fracs = [row["roofline_frac"] for rows in r.values() for row in rows]
-    return f"cells={n};mean_frac={sum(fracs)/len(fracs):.2f}"
+    return f"cells={n};mean_frac={sum(fracs)/len(fracs):.2f}", r
 
 
-def _bench_sweep_scale() -> str:
+def _bench_sweep_scale() -> BenchResult:
     """Batched pathfinding engine vs per-point loop (ISSUE-1 tentpole)."""
     from benchmarks import sweep_scale
     r = sweep_scale.main(verbose=False)
     return (f"speedup={r['speedup_warm']:.0f}x(>=10x);"
             f"batched_pps={r['batched_pps']:.0f};"
-            f"eager_pps={r['eager_pps']:.1f}")
+            f"eager_pps={r['eager_pps']:.1f}"), r
 
 
-def _bench_crossflow_query() -> str:
+def _bench_sweep_shard() -> BenchResult:
+    """Sharded sweep engine vs single-stream + resume (ISSUE-2 tentpole)."""
+    from benchmarks import sweep_shard
+    r = sweep_shard.main(verbose=False)
+    return (f"speedup_vs_single={r['speedup_vs_single']:.0f}x(>=2x);"
+            f"shard_gain={r['shard_gain']:.2f}x@{r['n_devices']}dev;"
+            f"resume_ok={int(r['resume_ok'])}"), r
+
+
+def _bench_crossflow_query() -> BenchResult:
     """Paper §8: CrossFlow query latency (ms .. 20 s on their machine)."""
     from repro.configs.base import SHAPE_CELLS, get_config
     from repro.core import age, lmgraph, roofline as rl, simulate, techlib
@@ -101,10 +122,11 @@ def _bench_crossflow_query() -> str:
     t0 = time.perf_counter()
     simulate.predict(arch, g, Strategy("RC", kp1=1, kp2=4, dp=4))
     warm = time.perf_counter() - t0
-    return f"cold={cold*1e3:.0f}ms;warm={warm*1e3:.0f}ms"
+    return (f"cold={cold*1e3:.0f}ms;warm={warm*1e3:.0f}ms",
+            {"cold_s": cold, "warm_s": warm})
 
 
-BENCHES: Dict[str, Callable[[], str]] = {
+BENCHES: Dict[str, Callable[[], BenchResult]] = {
     "fig1_intensity": _bench_fig1,
     "fig6_gemm_validation": _bench_fig6,
     "fig8_lm_validation": _bench_fig8,
@@ -112,14 +134,53 @@ BENCHES: Dict[str, Callable[[], str]] = {
     "fig10_coopt": _bench_fig10,
     "fig11_package": _bench_fig11,
     "sweep_scale": _bench_sweep_scale,
+    "sweep_shard": _bench_sweep_shard,
     "crossflow_query_latency": _bench_crossflow_query,
     "roofline": _bench_roofline,
     "perf_variants": _bench_perf_variants,
 }
 
 
-def main() -> int:
-    wanted = sys.argv[1:] or list(BENCHES)
+def _plain(obj):
+    """Best-effort conversion of benchmark result dicts to plain Python
+    types (np/jnp scalars -> float, unknown objects -> repr)."""
+    if isinstance(obj, dict):
+        return {str(k): _plain(v) for k, v in obj.items()}
+    if isinstance(obj, (str, bool, int, float)) or obj is None:
+        return obj
+    if isinstance(obj, (list, tuple)):
+        return [_plain(v) for v in obj]
+    try:
+        return float(obj)                  # np scalars, jnp scalars
+    except (TypeError, ValueError):
+        return repr(obj)
+
+
+def _jsonable(obj):
+    """Plain types + the canonical non-finite-float sanitizer (the CI
+    artifacts must stay strict RFC-8259 JSON — no Infinity/NaN tokens)."""
+    from repro.core.sweeprunner import json_safe
+    return json_safe(_plain(obj))
+
+
+def _write_json(json_dir: str, name: str, us: float, derived: str,
+                ok: bool, data: Optional[Dict]) -> None:
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"{name}.json")
+    with open(path, "w") as fh:
+        json.dump({"name": name, "us_per_call": us, "derived": derived,
+                   "ok": ok, "data": _jsonable(data)}, fh, indent=2)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.run", description=__doc__)
+    ap.add_argument("names", nargs="*",
+                    help="benchmark name prefixes (default: all)")
+    ap.add_argument("--json-dir", default=None,
+                    help="also write a machine-readable <name>.json per "
+                         "benchmark into this directory")
+    args = ap.parse_args(argv)
+    wanted = args.names or list(BENCHES)
     print("name,us_per_call,derived")
     failed = []
     for name in wanted:
@@ -127,15 +188,20 @@ def main() -> int:
         for key in keys:
             fn = BENCHES.get(key)
             t0 = time.perf_counter()
+            data: Optional[Dict] = None
+            ok = True
             try:
                 if fn is None:
                     raise KeyError(f"unknown benchmark {key!r}")
-                derived = fn()
+                derived, data = fn()
             except Exception as e:           # noqa: BLE001
                 derived = f"ERROR:{type(e).__name__}:{e}"
+                ok = False
                 failed.append(key)
             dt = (time.perf_counter() - t0) * 1e6
             print(f"{key},{dt:.0f},{derived}", flush=True)
+            if args.json_dir:
+                _write_json(args.json_dir, key, dt, derived, ok, data)
     if failed:
         # a raising benchmark must fail the CI smoke job, not just print
         print(f"FAILED: {','.join(failed)}", file=sys.stderr)

@@ -1,0 +1,174 @@
+"""Sharded sweep-engine throughput vs single-stream + resumability check.
+
+Three engines score the same hardware points on one skeleton (the regime of
+10^4-10^6-point design-space sweeps, where a handful of skeletons each carry
+thousands of hardware/budget variants):
+
+  single-stream  the PR-1 `BatchedEvaluator.evaluate` loop: per-point
+                 MicroArch objects, per-point pack/cache-key work on the
+                 Python side, one jitted vmap per call;
+  matrix         `evaluate_matrix` on one device: the struct-of-arrays
+                 hardware matrix enters JAX as a single array;
+  sharded        `evaluate_matrix` pmap'd row-wise across local JAX devices
+                 (forced host devices on CPU: this benchmark re-executes
+                 itself with --xla_force_host_platform_device_count).
+
+Asserts (ISSUE-2 acceptance):
+  * sharded >= 2x single-stream throughput;
+  * sharding itself beats the one-device matrix path when >1 device;
+  * all three agree on the predictions;
+  * an interrupted sweep resumes with ZERO re-evaluated chunks and the
+    identical point set (checkpoint/resume via repro.core.sweeprunner).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Dict
+
+MARK = "SWEEP_SHARD_RESULT:"
+N_POINTS = 16384                # matrix-path points
+N_SINGLE = 512                  # single-stream is timed on this subset
+
+
+def measure() -> Dict:
+    import jax
+    import numpy as np
+
+    from repro.configs.base import SHAPE_CELLS, get_config
+    from repro.core import age, lmgraph, pathfinder, sweeprunner, techlib
+    from repro.core.age import Budgets
+    from repro.core.parallelism import Strategy
+    from repro.core.roofline import PPEConfig
+
+    n_dev = jax.local_device_count()
+    ppe = PPEConfig(n_tilings=8)
+    g = lmgraph.build_graph(get_config("qwen1.5-0.5b"),
+                            SHAPE_CELLS["train_4k"])
+    st = Strategy("RC", kp1=1, kp2=2, dp=8)
+    template = age.generate(techlib.make_tech_config("N7", "HBM2E"),
+                            Budgets.default())
+    base = pathfinder.pack_hw(template)
+    rng = np.random.default_rng(0)
+    hw = (base[None, :]
+          * rng.uniform(0.85, 1.15, (N_POINTS, base.shape[0]))
+          ).astype(np.float32)
+
+    ev = pathfinder.BatchedEvaluator(g, st, ppe=ppe, cache=None)
+
+    def best_time(fn, repeats: int = 5):
+        """(best wall seconds, last result) — min over repeats to shed
+        scheduler noise on small shared CI hosts."""
+        best, out = float("inf"), None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    # -- single-stream: the PR-1 evaluator over MicroArch objects ---------
+    archs = [pathfinder.unpack_hw(template, row) for row in hw[:N_SINGLE]]
+    ev.evaluate(archs)                         # warm (compile + shapes)
+    single_s, rows_single = best_time(lambda: ev.evaluate(archs), 3)
+    single_pps = N_SINGLE / single_s
+
+    # -- matrix path, one device -----------------------------------------
+    ev.evaluate_matrix(template, hw, devices=1)          # warm
+    matrix_s, rows_matrix = best_time(
+        lambda: ev.evaluate_matrix(template, hw, devices=1))
+    matrix_pps = N_POINTS / matrix_s
+
+    # -- sharded across all local devices --------------------------------
+    ev.evaluate_matrix(template, hw, devices=n_dev)      # warm
+    shard_s, rows_shard = best_time(
+        lambda: ev.evaluate_matrix(template, hw, devices=n_dev))
+    shard_pps = N_POINTS / shard_s
+
+    np.testing.assert_allclose(rows_matrix[:N_SINGLE], rows_single,
+                               rtol=1e-5)
+    np.testing.assert_allclose(rows_shard, rows_matrix, rtol=1e-5)
+
+    # -- resumability: interrupt, resume, zero re-evaluation -------------
+    spec = sweeprunner.SweepSpec(
+        arches=("qwen1.5-0.5b",), mesh_shapes=((2, 2), (4, 4)),
+        scenario="train", logic_nodes=("N7", "N5"), n_tilings=4,
+        chunk_size=1)
+    with tempfile.TemporaryDirectory() as d:
+        first = sweeprunner.SweepRunner(spec, out_dir=d,
+                                        backend="serial").run(max_chunks=2)
+        assert first.n_chunks_evaluated == 2 and not first.complete
+        second = sweeprunner.SweepRunner(spec, out_dir=d,
+                                         backend="serial").run(resume=True)
+        assert second.n_chunks_skipped == 2, second
+        assert second.n_chunks_evaluated == second.n_chunks_total - 2
+        keys = sorted(r["key"] for r in second.records)
+        want = sorted(lb.key()
+                      for lb in sweeprunner.enumerate_labels(spec))
+        assert keys == want, "resumed point set differs from the spec"
+    resume_ok = True
+
+    speedup_vs_single = shard_pps / single_pps
+    shard_gain = shard_pps / matrix_pps
+    assert speedup_vs_single >= 2.0, (
+        f"sharded engine only {speedup_vs_single:.1f}x over the "
+        f"single-stream evaluator (ISSUE-2 acceptance: >= 2x)")
+    if n_dev >= 2:
+        assert shard_gain >= 1.1, (
+            f"device sharding gained only {shard_gain:.2f}x over the "
+            f"one-device matrix path on {n_dev} devices")
+    return {
+        "n_devices": n_dev,
+        "n_points": N_POINTS,
+        "single_stream_pps": single_pps,
+        "matrix_pps": matrix_pps,
+        "sharded_pps": shard_pps,
+        "speedup_vs_single": speedup_vs_single,
+        "shard_gain": shard_gain,
+        "resume_ok": resume_ok,
+    }
+
+
+def main(verbose: bool = True) -> Dict:
+    """Re-exec in a subprocess with forced host devices, parse its JSON."""
+    n_dev = min(4, os.cpu_count() or 1)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_dev}"
+                        ).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sweep_shard", "--measure"],
+        env=env, capture_output=True, text=True, cwd=root)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sweep_shard measurement failed "
+            f"(exit {proc.returncode}):\n{proc.stdout}\n{proc.stderr}")
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith(MARK))
+    r = json.loads(line[len(MARK):])
+    if verbose:
+        print(f"sweep_shard: {r['n_points']} points on one skeleton, "
+              f"{r['n_devices']} forced host devices")
+        print(f"  single-stream : {r['single_stream_pps']:10.0f} points/s")
+        print(f"  matrix (1 dev): {r['matrix_pps']:10.0f} points/s")
+        print(f"  sharded       : {r['sharded_pps']:10.0f} points/s "
+              f"-> {r['speedup_vs_single']:.0f}x vs single-stream, "
+              f"{r['shard_gain']:.2f}x shard gain")
+        print(f"  resume        : zero re-evaluated chunks "
+              f"({'ok' if r['resume_ok'] else 'FAIL'})")
+    return r
+
+
+if __name__ == "__main__":
+    if "--measure" in sys.argv:
+        print(MARK + json.dumps(measure()))
+    else:
+        main()

@@ -12,12 +12,16 @@ CrossFlow (standalone performance model):
 DeepFlow (search on top of CrossFlow):
     soe         projected-GD budget search             (paper §7)
     pathfinder  batched/vmapped design-space sweeps + LRU prediction cache
+    scenarios   workload-scenario registry (train / prefill+decode serving)
+    sweeprunner sharded, chunked, resumable sweep engine (JSONL streaming,
+                checkpoint/resume, thread/process/pmap-device fan-out)
     planner     CrossFlow -> runtime ShardingPlan bridge (this repo's closing
                 of the loop: pathfinding drives the real pjit configuration)
 """
 
 from repro.core import age, graph, lmgraph, parallelism, pathfinder, \
-    placement, roofline, simulate, soe, techlib, transform
+    placement, roofline, scenarios, simulate, soe, sweeprunner, techlib, \
+    transform
 from repro.core.age import Budgets, MicroArch
 from repro.core.graph import ComputeGraph
 from repro.core.parallelism import Strategy

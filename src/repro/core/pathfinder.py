@@ -19,11 +19,19 @@ traceable `jax.numpy` code in the MicroArch's numeric leaves.  So:
   * an LRU `PredictionCache` keyed on (graph fingerprint, strategy, system,
     ppe, hardware point) makes repeated points across SOE multi-starts and
     planner calls free;
+  * `BatchedEvaluator.evaluate_matrix` is the matrix-native fast path: an
+    (N, HW_DIM) struct-of-arrays hardware matrix is scored without building
+    per-point MicroArch objects, optionally `jax.pmap`-sharded row-wise
+    across every local device (the 10^4-10^6-point sweep regime of
+    repro.core.sweeprunner);
   * `sweep` cross-products arches x shape cells x mesh shapes x techlib
     nodes and returns every point plus the Pareto frontier.
 
 `benchmarks/sweep_scale.py` measures the resulting throughput (points/sec)
-against the per-point loop on the Fig. 9 tech-scaling sweep.
+against the per-point loop on the Fig. 9 tech-scaling sweep;
+`benchmarks/sweep_shard.py` measures the sharded matrix path against the
+single-stream evaluator.  For chunked, checkpointed, resumable sweeps (and
+the serving scenario) see `repro.core.sweeprunner` / `repro.core.scenarios`.
 """
 
 from __future__ import annotations
@@ -31,6 +39,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import threading
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
@@ -127,41 +136,51 @@ def _breakdown_row(bd: simulate.TimeBreakdown) -> np.ndarray:
 
 
 class PredictionCache:
-    """LRU cache of prediction rows keyed on (skeleton, hardware point)."""
+    """LRU cache of prediction rows keyed on (skeleton, hardware point).
+
+    Thread-safe: the sweep runner (repro.core.sweeprunner) shares one cache
+    across worker threads, so all bookkeeping happens under a lock.
+    """
 
     def __init__(self, maxsize: int = 65536):
         self.maxsize = maxsize
         self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def get(self, key) -> Optional[np.ndarray]:
-        row = self._data.get(key)
-        if row is None:
-            self.misses += 1
-            return None
-        self._data.move_to_end(key)
-        self.hits += 1
-        return row
+        with self._lock:
+            row = self._data.get(key)
+            if row is None:
+                self.misses += 1
+                return None
+            self._data.move_to_end(key)
+            self.hits += 1
+            return row
 
     def put(self, key, row: np.ndarray) -> None:
-        self._data[key] = row
-        self._data.move_to_end(key)
-        while len(self._data) > self.maxsize:
-            self._data.popitem(last=False)
+        with self._lock:
+            self._data[key] = row
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
 
     def clear(self) -> None:
-        self._data.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._data.clear()
+            self.hits = 0
+            self.misses = 0
 
     def __len__(self) -> int:
-        return len(self._data)
+        with self._lock:
+            return len(self._data)
 
     @property
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "size": len(self._data)}
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "size": len(self._data)}
 
 
 _PREDICTION_CACHE = PredictionCache()
@@ -185,10 +204,36 @@ def clear_prediction_cache() -> None:
 
 # LRU of jitted per-skeleton evaluation functions.  Each entry captures a
 # compiled XLA executable plus the closed-over graph, so unlike the
-# lightweight PredictionCache this must stay small and evict.
+# lightweight PredictionCache this must stay small and evict.  Guarded by a
+# lock so thread-parallel sweep workers get one wrapped function per
+# skeleton (jit/pmap wrapping is lazy, so holding the lock is cheap; the
+# actual XLA compile happens at first call, outside the lock).
 _COMPILED: "collections.OrderedDict[tuple, Callable]" = \
     collections.OrderedDict()
 _COMPILED_MAXSIZE = 128
+_COMPILED_LOCK = threading.Lock()
+
+
+def _compiled_get_or_create(store: "collections.OrderedDict", key: tuple,
+                            build: Callable[[], Callable]) -> Callable:
+    with _COMPILED_LOCK:
+        fn = store.get(key)
+        if fn is not None:
+            store.move_to_end(key)
+            return fn
+        fn = build()
+        store[key] = fn
+        while len(store) > _COMPILED_MAXSIZE:
+            store.popitem(last=False)
+        return fn
+
+
+def clear_compiled_caches() -> None:
+    """Drop every cached jitted/pmapped evaluation function (benchmarks use
+    this to measure cold-compile paths; also frees the closed-over graphs)."""
+    with _COMPILED_LOCK:
+        _COMPILED.clear()
+        _BUDGET_COMPILED.clear()
 
 
 def _skeleton_key(graph_fp: str, strategy: Strategy,
@@ -230,39 +275,48 @@ class BatchedEvaluator:
                              self.pod_bw,
                              template.tech.compute.systolic_dims)
 
+    def _scalar_fn(self, template: MicroArch) -> Callable:
+        def scalar(v):
+            arch = unpack_hw(template, v)
+            bd = simulate.predict(
+                arch, self.graph, self.strategy, system=self.system,
+                cfg=self.ppe, overlap=self.overlap,
+                n_microbatches=self.n_microbatches, pod_bw=self.pod_bw)
+            return jnp.stack([
+                jnp.asarray(bd.total_s, dtype=jnp.float32),
+                jnp.asarray(bd.compute_s, dtype=jnp.float32),
+                jnp.asarray(bd.comm_s, dtype=jnp.float32),
+                jnp.asarray(bd.exposed_comm_s, dtype=jnp.float32),
+                jnp.asarray(bd.pipeline_bubble_s, dtype=jnp.float32),
+            ])
+        return scalar
+
     def _compiled(self, template: MicroArch) -> Callable:
         key = self._skeleton(template)
-        fn = _COMPILED.get(key)
-        if fn is not None:
-            _COMPILED.move_to_end(key)
-        else:
-            def scalar(v):
-                arch = unpack_hw(template, v)
-                bd = simulate.predict(
-                    arch, self.graph, self.strategy, system=self.system,
-                    cfg=self.ppe, overlap=self.overlap,
-                    n_microbatches=self.n_microbatches, pod_bw=self.pod_bw)
-                return jnp.stack([
-                    jnp.asarray(bd.total_s, dtype=jnp.float32),
-                    jnp.asarray(bd.compute_s, dtype=jnp.float32),
-                    jnp.asarray(bd.comm_s, dtype=jnp.float32),
-                    jnp.asarray(bd.exposed_comm_s, dtype=jnp.float32),
-                    jnp.asarray(bd.pipeline_bubble_s, dtype=jnp.float32),
-                ])
-            fn = jax.jit(jax.vmap(scalar))
-            _COMPILED[key] = fn
-            while len(_COMPILED) > _COMPILED_MAXSIZE:
-                _COMPILED.popitem(last=False)
-        return fn
+        return _compiled_get_or_create(
+            _COMPILED, key,
+            lambda: jax.jit(jax.vmap(self._scalar_fn(template))))
+
+    def _compiled_sharded(self, template: MicroArch, n_dev: int) -> Callable:
+        key = self._skeleton(template) + ("pmap", n_dev)
+        return _compiled_get_or_create(
+            _COMPILED, key,
+            lambda: jax.pmap(jax.vmap(self._scalar_fn(template))))
 
     # -- public API -------------------------------------------------------
     def evaluate(self, archs: Sequence[MicroArch],
-                 min_batch_jit: int = 2) -> np.ndarray:
+                 min_batch_jit: int = 2,
+                 shard_devices: bool = False,
+                 shard_block: int = 0) -> np.ndarray:
         """Score MicroArch candidates -> (B, 5) rows ordered like METRICS.
 
         Cached points are returned for free; only misses are evaluated, in a
         single vmapped call (or eagerly when fewer than `min_batch_jit`
         misses remain — avoids paying XLA compile time for one-off points).
+        With ``shard_devices`` the miss batch is split across all local JAX
+        devices via `evaluate_matrix` (pmap over the hardware matrix);
+        ``shard_block`` is forwarded as its padding block so sweeps with
+        varying per-call miss counts reuse a few compiled shapes.
         """
         archs = list(archs)
         if not archs:
@@ -288,7 +342,12 @@ class BatchedEvaluator:
                 out[i] = row
         if not misses:
             return out
-        if len(misses) >= min_batch_jit:
+        if shard_devices and len(misses) >= max(min_batch_jit,
+                                                jax.local_device_count()):
+            rows = self.evaluate_matrix(archs[0],
+                                        np.stack([vecs[i] for i in misses]),
+                                        block=shard_block)
+        elif len(misses) >= min_batch_jit:
             fn = self._compiled(archs[0])
             hw = jnp.asarray(np.stack([vecs[i] for i in misses]))
             rows = np.asarray(fn(hw), dtype=np.float64)
@@ -299,6 +358,49 @@ class BatchedEvaluator:
             if self.cache is not None:
                 self.cache.put(keys[i], rows[j])
         return out
+
+    def evaluate_matrix(self, template: MicroArch, hw_matrix,
+                        devices: Optional[int] = None,
+                        block: int = 0) -> np.ndarray:
+        """Score an (N, HW_DIM) struct-of-arrays hardware matrix directly.
+
+        The matrix-native fast path for sweeps at the 10^4-10^6 point scale
+        (repro.core.sweeprunner): no per-point MicroArch objects, no
+        per-point cache keys — the batch enters JAX as one array.  With
+        ``devices`` > 1 (default: every local JAX device) the matrix is
+        sharded row-wise across devices with `jax.pmap`, which on CPU hosts
+        means one XLA executable per device thread running concurrently.
+
+        ``block`` > 0 pads N up to a multiple of ``block`` x devices so
+        successive chunks of a sweep share one compiled shape (jit/pmap
+        specialize per input shape; without padding every distinct chunk
+        size would recompile).  Padding rows replicate the last point and
+        are sliced off the result.
+        """
+        hw = np.asarray(hw_matrix, dtype=np.float32)
+        n = hw.shape[0]
+        if n == 0:
+            return np.zeros((0, len(METRICS)), dtype=np.float64)
+        if hw.ndim != 2 or hw.shape[1] != HW_DIM:
+            raise ValueError(f"hw_matrix must be (N, {HW_DIM}), "
+                             f"got {hw.shape}")
+        n_dev = devices if devices is not None else jax.local_device_count()
+        n_dev = max(min(n_dev, n), 1)
+        quantum = n_dev * max(block, 1)
+        target = -(-n // quantum) * quantum
+        if target != n:
+            hw = np.concatenate(
+                [hw, np.repeat(hw[-1:], target - n, axis=0)])
+        if n_dev > 1:
+            fn = self._compiled_sharded(template, n_dev)
+            rows = fn(jnp.asarray(hw.reshape(n_dev, target // n_dev,
+                                             HW_DIM)))
+            rows = np.asarray(rows, dtype=np.float64).reshape(
+                target, len(METRICS))
+        else:
+            fn = self._compiled(template)
+            rows = np.asarray(fn(jnp.asarray(hw)), dtype=np.float64)
+        return rows[:n]
 
     def _eager_row(self, arch: MicroArch) -> np.ndarray:
         bd = simulate.predict(arch, self.graph, self.strategy,
@@ -328,14 +430,18 @@ class EvalPoint:
 def evaluate_points(points: Sequence[EvalPoint],
                     ppe: PPEConfig = PPEConfig(),
                     cache: Optional[PredictionCache] = _PREDICTION_CACHE,
-                    min_batch_jit: int = 4) -> np.ndarray:
+                    min_batch_jit: int = 4,
+                    shard_devices: bool = False,
+                    shard_block: int = 0) -> np.ndarray:
     """Score a heterogeneous candidate list -> (N, 5) metric matrix.
 
     Points are grouped by skeleton (graph fingerprint, strategy, system,
     ppe); each group is one struct-of-arrays batch.  Hardware-only axes
     (techlib nodes, budget variants) therefore collapse into single vmapped
     calls, while structure-changing axes (strategy, mesh) form their own
-    groups and still benefit from the LRU cache.
+    groups and still benefit from the LRU cache.  ``shard_devices`` fans
+    each group's hardware matrix across local JAX devices (see
+    `BatchedEvaluator.evaluate_matrix`).
     """
     out = np.zeros((len(points), len(METRICS)), dtype=np.float64)
     groups: Dict[tuple, List[int]] = {}
@@ -349,7 +455,9 @@ def evaluate_points(points: Sequence[EvalPoint],
     for key, idxs in groups.items():
         ev = evaluators[key]
         rows = ev.evaluate([points[i].arch for i in idxs],
-                           min_batch_jit=min_batch_jit)
+                           min_batch_jit=min_batch_jit,
+                           shard_devices=shard_devices,
+                           shard_block=shard_block)
         for j, i in enumerate(idxs):
             out[i] = rows[j]
     return out
@@ -382,10 +490,8 @@ def evaluate_budgets(tech: TechConfig, graph: ComputeGraph,
     like = template or Budgets.default()
     key = (tech, graph.fingerprint(), strategy, system, ppe, pod_bw,
            like.node_area_mm2, like.proc_chip_area_mm2, like.power_w)
-    fn = _BUDGET_COMPILED.get(key)
-    if fn is not None:
-        _BUDGET_COMPILED.move_to_end(key)
-    else:
+
+    def build():
         def f(w):
             budgets = Budgets.from_vector(w, like)
             arch = age_lib.generate(tech, budgets, discrete=False)
@@ -393,10 +499,9 @@ def evaluate_budgets(tech: TechConfig, graph: ComputeGraph,
                                   cfg=ppe, pod_bw=pod_bw)
             return bd.total_s
 
-        fn = jax.jit(jax.vmap(f))
-        _BUDGET_COMPILED[key] = fn
-        while len(_BUDGET_COMPILED) > _COMPILED_MAXSIZE:
-            _BUDGET_COMPILED.popitem(last=False)
+        return jax.jit(jax.vmap(f))
+
+    fn = _compiled_get_or_create(_BUDGET_COMPILED, key, build)
     return fn(jnp.asarray(budget_vectors, dtype=jnp.float32))
 
 

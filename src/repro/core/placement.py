@@ -15,6 +15,16 @@ of every communication operation:
 Collectives are modelled as ring algorithms along their parallel axis (the
 paper's DP/KP transformation wires rings/tori), with per-hop distance taken
 from the mapping: time(allreduce, S, p) = 2 (p-1)/p * S / bw_eff + lat terms.
+
+Batched-engine integration (post-PR-1): `place()` and the mapping search
+run host-side NumPy ONCE per skeleton, but `comm_time` /
+`Placement.effective_bw` are pure arithmetic in the MicroArch's numeric
+leaves — they are traced inside `pathfinder.BatchedEvaluator`'s
+`jax.jit(jax.vmap(...))` (and `jax.pmap` in `evaluate_matrix`), so one
+placement serves thousands of vmapped hardware points and stays
+differentiable for the SOE's exact gradients.  `SystemGraph` is frozen /
+hashable because it is part of the compiled-skeleton and prediction-cache
+keys.
 """
 
 from __future__ import annotations

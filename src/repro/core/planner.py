@@ -2,11 +2,18 @@
 
 This is where the paper's pathfinding becomes a *first-class feature* of the
 training framework (DESIGN.md §2): given (arch config, shape cell, physical
-mesh), the planner enumerates the parallelism strategies the runtime supports,
-queries CrossFlow's performance model for each on the TPU-v5e micro-arch,
-and emits the argmin as a `ShardingPlan` that `repro.launch` turns into
-PartitionSpecs. The prediction is recorded so the dry-run can compare it
-against the XLA-derived roofline terms (our validation axis).
+mesh), the planner enumerates the parallelism strategies the runtime
+supports, scores ALL of them in one batched-engine call
+(`pathfinder.evaluate_points`: one struct-of-arrays vmapped evaluation per
+skeleton, LRU prediction cache shared with sweeps and the SOE — a re-planned
+(arch, cell, mesh) is free), and emits the argmin as a `ShardingPlan` that
+`repro.launch` turns into PartitionSpecs. The prediction is recorded so the
+dry-run can compare it against the XLA-derived roofline terms (our
+validation axis).
+
+`candidate_strategies` is also the strategy axis of the sweep engine:
+`sweeprunner.enumerate_labels` calls it per (config, cell, mesh) so sweeps
+only score runtime-realizable points.
 """
 
 from __future__ import annotations

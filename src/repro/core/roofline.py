@@ -241,3 +241,30 @@ def operational_intensity(node: Node) -> float:
     motivation study (paper Fig. 1)."""
     io = node.io_bytes
     return node.flops / io if io else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Memory-capacity pressure (serving scenario hook)
+# ---------------------------------------------------------------------------
+
+CAPACITY_PRESSURE_KNEE = 0.85
+
+
+def capacity_pressure_derate(occupancy: float,
+                             knee: float = CAPACITY_PRESSURE_KNEE) -> float:
+    """Bandwidth derate for main-memory capacity pressure (KV caches).
+
+    The hierarchical roofline above times each kernel against the *clean*
+    main-memory bandwidth; when resident state (weights + KV cache in
+    serving) approaches capacity, allocator fragmentation and lost
+    batching/prefetch headroom erode achievable bandwidth before the
+    capacity wall.  Model: no penalty below ``knee`` occupancy, a quadratic
+    ramp to 1.5x between knee and full, and infeasible (inf) at >= 100%
+    (the workload simply does not fit; `simulate.serving_breakdown` reports
+    feasible=False).
+    """
+    occ = float(occupancy)
+    if occ >= 1.0:
+        return float("inf")
+    over = max(occ - knee, 0.0) / max(1.0 - knee, 1e-9)
+    return 1.0 + 0.5 * over * over

@@ -1,0 +1,347 @@
+"""Scenario registry — named workload scenarios for design-space sweeps.
+
+The paper's §9 studies sweep *training* iteration time; full-stack co-design
+studies (DFModel, COSMIC) also need *inference/serving* workloads, where the
+objectives are latency-SLO attainment and tokens/sec/device rather than
+step time.  A `Scenario` packages, for one named workload:
+
+  * which shape cells an architecture runs (training cell, or a
+    prefill + decode pair for serving),
+  * how one labeled design point expands into batched-engine `EvalPoint`s,
+  * how raw metric rows fold back into a result record, and
+  * the objective fields a Pareto frontier should minimize.
+
+`repro.core.sweeprunner` drives every registered architecture config in
+`src/repro/configs/` through a scenario; the CLI exposes it as
+``python -m repro.pathfind sweep --scenario serving ...``.
+
+The serving scenario is the paper-model's inference mode: the prefill phase
+is a `prefill`-kind graph (TTFT objective), the decode phase a `decode`-kind
+graph (one token per sequence per step), and KV-cache *capacity* pressure —
+weights + KV resident bytes vs per-device main memory — derates decode
+bandwidth via `roofline.capacity_pressure_derate` (the decode graph's
+attention GEMMs already charge KV *bandwidth* per step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, SHAPE_CELLS, get_config
+from repro.core import lmgraph, simulate
+from repro.core.age import MicroArch
+from repro.core.graph import ComputeGraph
+from repro.core.parallelism import Strategy
+from repro.core.pathfinder import EvalPoint
+from repro.core.placement import SystemGraph
+
+DTYPE_BYTES = 2                     # bf16 weights / KV cache
+
+
+def point_key(arch: str, cell: str, mesh: Tuple[int, ...], logic: str,
+              hbm: str, net: str, scale: float, strategy_name: str) -> str:
+    """THE design-point identity string.
+
+    Both `DesignPoint.key` (result records) and
+    `sweeprunner.PointLabel.key` (checkpoint chunk hashes) delegate here —
+    resume correctness depends on the two staying byte-identical, so there
+    is exactly one formatter.
+    """
+    return "|".join([arch, cell, "x".join(map(str, mesh)), logic, hbm,
+                     net, f"{scale:g}", strategy_name])
+
+
+# ---------------------------------------------------------------------------
+# Labeled design points
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """One fully-resolved sweep candidate (labels + live objects)."""
+
+    arch: str                       # model architecture id
+    cell: str                       # cell name, or "prefill+decode" pair id
+    mesh: Tuple[int, ...]
+    logic: str
+    hbm: str
+    net: str
+    scale: float                    # budget-scale variant (1.0 = nominal)
+    strategy: Strategy
+    cfg: ArchConfig
+    hw: MicroArch
+    system: SystemGraph
+
+    def key(self) -> str:
+        """Stable identity used in result records and resume bookkeeping."""
+        return point_key(self.arch, self.cell, self.mesh, self.logic,
+                         self.hbm, self.net, self.scale,
+                         self.strategy.name)
+
+    def label_fields(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "cell": self.cell,
+            "mesh": "x".join(map(str, self.mesh)),
+            "logic": self.logic, "hbm": self.hbm, "net": self.net,
+            "scale": self.scale, "strategy": self.strategy.name,
+            "devices": self.strategy.devices,
+        }
+
+
+# graphs are immutable once built; share them across threads and chunks
+_GRAPH_CACHE: Dict[Tuple[str, str], ComputeGraph] = {}
+_GRAPH_LOCK = threading.Lock()
+
+
+def workload_graph(arch: str, cell_name: str) -> ComputeGraph:
+    key = (arch, cell_name)
+    with _GRAPH_LOCK:
+        g = _GRAPH_CACHE.get(key)
+    if g is None:
+        g = lmgraph.build_graph(get_config(arch), SHAPE_CELLS[cell_name])
+        with _GRAPH_LOCK:
+            g = _GRAPH_CACHE.setdefault(key, g)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Serving memory model
+# ---------------------------------------------------------------------------
+
+
+def weight_bytes(cfg: ArchConfig, dtype_bytes: int = DTYPE_BYTES) -> float:
+    """Resident parameter bytes of one full replica."""
+    return float(cfg.param_count()) * dtype_bytes
+
+
+def kv_cache_bytes(cfg: ArchConfig, kv_len: int, batch: int,
+                   dtype_bytes: int = DTYPE_BYTES) -> float:
+    """Total KV-cache (+ recurrent-state) bytes for `batch` live sequences.
+
+    Attention layers hold K+V per token: global layers over the full
+    context, local layers over min(context, window).  Recurrent blocks
+    (RG-LRU, m/sLSTM) hold O(1)-per-sequence state instead — this is
+    exactly why hybrid archs win the long-context serving sweeps.
+    """
+    hd = cfg.resolved_head_dim
+    if cfg.is_encoder_decoder:
+        # the decoder holds self-KV over the trained decoder length plus
+        # cross-KV over the encoded source sequence; its layers must NOT
+        # also be charged the decoder-only full-context KV below
+        dec = min(cfg.decoder_len, kv_len)
+        per_seq = cfg.n_layers * 2.0 * cfg.n_kv_heads * hd * \
+            (dec + kv_len) * dtype_bytes
+        return per_seq * batch
+    per_seq = 0.0
+    for i in range(cfg.n_layers):
+        bk = cfg.block_kind(i)
+        if bk == "attn":
+            ctx = kv_len
+            if cfg.attn_kind(i) == "local":
+                ctx = min(kv_len, cfg.local_window)
+            per_seq += 2.0 * cfg.n_kv_heads * hd * ctx * dtype_bytes
+        elif bk == "rglru":
+            w = cfg.lru_width or cfg.d_model
+            per_seq += (w + cfg.conv1d_width * w) * 4  # f32 carry state
+        else:                                          # mlstm / slstm
+            per_seq += cfg.n_heads * hd * hd * 4
+    return per_seq * batch
+
+
+def _kv_shard_degree(cfg: ArchConfig, st: Strategy) -> int:
+    """How many ways the KV cache is split: DP/LP always shard batch and
+    layers; the model axis shards KV heads only up to n_kv_heads (GQA
+    floor) unless sequence parallelism shards the context dim instead."""
+    kp_shard = min(st.kp, max(cfg.n_kv_heads, 1))
+    if st.sp > 1:
+        kp_shard = st.kp
+    return st.dp * st.lp * max(kp_shard, 1)
+
+
+# ---------------------------------------------------------------------------
+# Scenarios
+# ---------------------------------------------------------------------------
+
+
+class Scenario:
+    """One named workload: cells, eval-point expansion, record schema."""
+
+    name: str = ""
+    description: str = ""
+    # record fields holding metrics (after the shared label fields)
+    fields: Tuple[str, ...] = ()
+    # record fields a Pareto frontier minimizes
+    objectives: Tuple[str, ...] = ()
+
+    def cells(self, cfg: ArchConfig) -> Tuple[str, ...]:
+        """Shape cells this scenario needs for one architecture."""
+        raise NotImplementedError
+
+    def cell_id(self) -> str:
+        """The label used in point keys / records for this scenario."""
+        return "+".join(self.cells(None))
+
+    def points_per_design(self) -> int:
+        """How many EvalPoints one design point expands to."""
+        raise NotImplementedError
+
+    def applicable(self, cfg: ArchConfig) -> bool:
+        return True
+
+    def eval_points(self, dp: DesignPoint) -> List[EvalPoint]:
+        raise NotImplementedError
+
+    def record(self, dp: DesignPoint, rows: np.ndarray) -> Dict:
+        """Fold the (points_per_design, 5) metric rows into one record."""
+        raise NotImplementedError
+
+
+class TrainScenario(Scenario):
+    """Per-iteration training step time (the paper's Fig. 9 axis)."""
+
+    name = "train"
+    description = "training step time on one shape cell"
+    fields = ("time_s", "compute_s", "comm_s", "exposed_comm_s")
+    objectives = ("time_s", "devices")
+
+    def __init__(self, cell: str = "train_4k", name: str = "train"):
+        self.cell = cell
+        self.name = name
+
+    def cells(self, cfg) -> Tuple[str, ...]:
+        return (self.cell,)
+
+    def cell_id(self) -> str:
+        return self.cell
+
+    def points_per_design(self) -> int:
+        return 1
+
+    def eval_points(self, dp: DesignPoint) -> List[EvalPoint]:
+        g = workload_graph(dp.arch, self.cell)
+        return [EvalPoint(dp.hw, g, dp.strategy, system=dp.system)]
+
+    def record(self, dp: DesignPoint, rows: np.ndarray) -> Dict:
+        row = rows[0]
+        return {**dp.label_fields(),
+                "time_s": float(row[0]), "compute_s": float(row[1]),
+                "comm_s": float(row[2]), "exposed_comm_s": float(row[3])}
+
+
+class ServingScenario(Scenario):
+    """Prefill + decode inference: TTFT / TPOT / tokens-per-sec-per-device
+    with KV-cache memory pressure (see module docstring)."""
+
+    name = "serving"
+    description = "prefill+decode serving: TTFT, tokens/s/device, KV pressure"
+    fields = ("ttft_s", "tpot_s", "tokens_per_s", "tokens_per_s_per_device",
+              "cost_device_s_per_token", "hbm_occupancy", "kv_derate",
+              "feasible", "slo_ok")
+    objectives = ("ttft_s", "cost_device_s_per_token")
+
+    def __init__(self, prefill_cell: str = "prefill_32k",
+                 decode_cell: str = "decode_32k",
+                 slo_s: Optional[float] = None, name: str = "serving"):
+        self.prefill_cell = prefill_cell
+        self.decode_cell = decode_cell
+        self.slo_s = slo_s
+        self.name = name
+
+    def cells(self, cfg) -> Tuple[str, ...]:
+        return (self.prefill_cell, self.decode_cell)
+
+    def cell_id(self) -> str:
+        return f"{self.prefill_cell}+{self.decode_cell}"
+
+    def points_per_design(self) -> int:
+        return 2
+
+    def applicable(self, cfg: ArchConfig) -> bool:
+        if "long" in (self.prefill_cell + self.decode_cell):
+            return cfg.supports_long_context
+        return True
+
+    def eval_points(self, dp: DesignPoint) -> List[EvalPoint]:
+        gp = workload_graph(dp.arch, self.prefill_cell)
+        gd = workload_graph(dp.arch, self.decode_cell)
+        return [EvalPoint(dp.hw, gp, dp.strategy, system=dp.system),
+                EvalPoint(dp.hw, gd, dp.strategy, system=dp.system)]
+
+    def record(self, dp: DesignPoint, rows: np.ndarray) -> Dict:
+        prefill = simulate.TimeBreakdown(
+            total_s=rows[0][0], compute_s=rows[0][1], comm_s=rows[0][2],
+            exposed_comm_s=rows[0][3])
+        decode = simulate.TimeBreakdown(
+            total_s=rows[1][0], compute_s=rows[1][1], comm_s=rows[1][2],
+            exposed_comm_s=rows[1][3])
+        cell = SHAPE_CELLS[self.decode_cell]
+        st = dp.strategy
+        w_dev = weight_bytes(dp.cfg) / max(st.kp * st.lp, 1)
+        kv_dev = kv_cache_bytes(dp.cfg, cell.seq_len, cell.global_batch) \
+            / _kv_shard_degree(dp.cfg, st)
+        bd = simulate.serving_breakdown(
+            prefill, decode, batch=cell.global_batch, devices=st.devices,
+            weight_bytes_per_device=w_dev, kv_bytes_per_device=kv_dev,
+            dram_capacity=float(dp.hw.dram_capacity), slo_s=self.slo_s)
+        return {**dp.label_fields(),
+                "ttft_s": bd.ttft_s, "tpot_s": bd.tpot_s,
+                "tokens_per_s": bd.tokens_per_s,
+                "tokens_per_s_per_device": bd.tokens_per_s_per_device,
+                "cost_device_s_per_token": bd.cost_device_s_per_token,
+                "kv_bytes_per_device": bd.kv_bytes_per_device,
+                "weight_bytes_per_device": bd.weight_bytes_per_device,
+                "hbm_occupancy": bd.hbm_occupancy,
+                "kv_derate": bd.kv_derate,
+                "feasible": bd.feasible, "slo_ok": bd.slo_ok}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario, replace: bool = False) -> Scenario:
+    if scenario.name in _REGISTRY and not replace:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str, slo_s: Optional[float] = None,
+                 cells: Sequence[str] = ()) -> Scenario:
+    """Look up a scenario; optional per-call overrides (SLO, train cell)."""
+    base = _REGISTRY.get(name)
+    if base is None:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}")
+    if isinstance(base, TrainScenario) and cells:
+        return TrainScenario(cell=tuple(cells)[0], name=base.name)
+    if isinstance(base, ServingScenario) and (slo_s is not None or cells):
+        pc, dc = base.prefill_cell, base.decode_cell
+        if cells:
+            if len(tuple(cells)) != 2:
+                raise ValueError("serving scenario takes exactly two cells "
+                                 "(prefill, decode)")
+            pc, dc = tuple(cells)
+        return ServingScenario(prefill_cell=pc, decode_cell=dc, slo_s=slo_s,
+                               name=base.name)
+    return base
+
+
+def scenario_names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+register_scenario(TrainScenario())
+register_scenario(ServingScenario())
+# long-context serving: recurrent/hybrid archs only (O(1) state is the win)
+register_scenario(ServingScenario(prefill_cell="prefill_32k",
+                                  decode_cell="long_500k",
+                                  name="serving-long"))

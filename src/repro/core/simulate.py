@@ -14,6 +14,12 @@ scheduler; CrossFlow's validation in the paper included overlapped NCCL).
 
 Everything is `jnp`-friendly: with a fixed schedule order the accumulated
 times are differentiable w.r.t. MicroArch parameters (used by the SOE).
+
+Serving (inference) mode: `serving_breakdown` combines a prefill-graph and
+a decode-graph prediction into TTFT / TPOT / tokens-per-sec-per-device with
+KV-cache memory-pressure derating; the scenario registry in
+`repro.core.scenarios` builds the phase graphs and drives it through the
+batched pathfinding engine.
 """
 
 from __future__ import annotations
@@ -197,3 +203,69 @@ def _stage_boundary_bytes(g: ComputeGraph, s: Strategy) -> float:
             best = max(best, float(node.b) * node.m * node.n
                        * node.dtype_bytes)
     return best
+
+
+# ---------------------------------------------------------------------------
+# Serving (inference) phase model — prefill + decode
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingBreakdown:
+    """Inference-mode prediction: one prefill pass + steady-state decode.
+
+    TTFT (time to first token) is the prefill makespan; TPOT (time per
+    output token) is one decode step over the whole concurrent batch,
+    derated for KV-cache memory pressure
+    (`roofline.capacity_pressure_derate`).  ``cost_device_s_per_token`` =
+    devices * TPOT / batch is the Pareto cost axis paired with TTFT in the
+    serving scenario (repro.core.scenarios).
+    """
+
+    ttft_s: float
+    tpot_s: float
+    tokens_per_s: float
+    tokens_per_s_per_device: float
+    cost_device_s_per_token: float
+    weight_bytes_per_device: float
+    kv_bytes_per_device: float
+    hbm_occupancy: float
+    kv_derate: float
+    feasible: bool
+    slo_ok: Optional[bool] = None
+
+
+def serving_breakdown(prefill: TimeBreakdown, decode: TimeBreakdown, *,
+                      batch: int, devices: int,
+                      weight_bytes_per_device: float,
+                      kv_bytes_per_device: float,
+                      dram_capacity: float,
+                      slo_s: Optional[float] = None) -> ServingBreakdown:
+    """Combine per-phase CrossFlow predictions into serving metrics.
+
+    The decode graph's attention GEMMs already charge the per-step KV-cache
+    *bandwidth* (reading the whole context each token); this combinator
+    adds the *capacity* dimension: per-device resident bytes (weights +
+    KV) against main-memory capacity, with decode bandwidth derated near
+    the wall and the point marked infeasible beyond it.
+    """
+    from repro.core import roofline as roofline_lib
+    import math
+    occ = ((weight_bytes_per_device + kv_bytes_per_device)
+           / max(float(dram_capacity), 1.0))
+    derate = roofline_lib.capacity_pressure_derate(occ)
+    ttft = float(prefill.total_s)
+    tpot = float(decode.total_s) * derate
+    # both phases must produce a finite prediction (guards NaN too)
+    feasible = math.isfinite(tpot) and math.isfinite(ttft)
+    tokens_per_s = batch / tpot if feasible and tpot > 0 else 0.0
+    per_dev = tokens_per_s / max(devices, 1)
+    cost = (devices * tpot / batch) if feasible and batch else float("inf")
+    return ServingBreakdown(
+        ttft_s=ttft, tpot_s=tpot, tokens_per_s=tokens_per_s,
+        tokens_per_s_per_device=per_dev, cost_device_s_per_token=cost,
+        weight_bytes_per_device=float(weight_bytes_per_device),
+        kv_bytes_per_device=float(kv_bytes_per_device),
+        hbm_occupancy=float(occ), kv_derate=float(derate),
+        feasible=feasible,
+        slo_ok=None if slo_s is None else bool(ttft <= slo_s))

@@ -26,6 +26,12 @@ points across calls are free.
 The discrete parallelism-strategy dimension is co-optimized by exhaustive
 enumeration around the GD loop (`co_optimize`), matching the paper's §9.2
 "parallelism-strategy + architecture" studies.
+
+One-shot batched budget scans (no GD) go through
+`pathfinder.evaluate_budgets`, which memoizes a jitted vmapped objective
+per skeleton; `rank_strategies` shares the same LRU prediction cache as
+the sweep engine (`repro.core.sweeprunner`), so strategy rankings repeated
+across SOE calls, planner calls, and sweeps cost nothing.
 """
 
 from __future__ import annotations

@@ -1,0 +1,624 @@
+"""Sharded, chunked, resumable design-space sweep engine.
+
+`pathfinder.sweep()` scores one in-memory cross-product; the co-design
+studies the paper automates (§7, §9) — and the sweep sizes DFModel/COSMIC
+report — need 10^4-10^6 points, hours of wall time, and fault tolerance.
+This module scales the batched engine into a *sweep runner*:
+
+  * the (arch x cell x mesh x tech x budget-scale x strategy) cross-product
+    is enumerated deterministically and partitioned into fixed-size
+    **chunks** of design points;
+  * chunks are fanned out across local resources — `jax.pmap` over the
+    struct-of-arrays hardware matrix when multiple JAX devices exist
+    (`backend="device"`), thread- or process-parallel `BatchedEvaluator`
+    calls otherwise (`backend="thread"` / `"process"`);
+  * results **stream** to ``results.jsonl`` as chunks complete (plus a CSV
+    view via `to_csv`), so a crashed sweep loses at most one chunk;
+  * an append-only ``checkpoint.jsonl`` records every finished chunk keyed
+    on the sweep-spec fingerprint and a hash of the chunk's point keys (the
+    same identity scheme as `PredictionCache`); `run(resume=True)` skips
+    checkpointed chunks with **zero re-evaluation** and drops partial rows
+    from an interrupted chunk.
+
+Workload semantics (training step time vs prefill+decode serving) come from
+the scenario registry in `repro.core.scenarios`.  The CLI front-end is
+``python -m repro.pathfind sweep [--scenario serving] [--out DIR]
+[--resume]``; `benchmarks/sweep_shard.py` measures sharded-vs-single-stream
+throughput and asserts resumability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+import time
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor, \
+    as_completed
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.core import age as age_lib
+from repro.core import pathfinder, scenarios, techlib
+from repro.core.age import Budgets
+from repro.core.parallelism import Strategy
+from repro.core.placement import mesh_system
+from repro.core.roofline import PPEConfig
+
+SPEC_VERSION = 1
+
+
+def json_safe(obj):
+    """Replace non-finite floats with None so the streamed JSONL stays
+    RFC-8259 valid (json.dumps would otherwise emit the non-standard
+    ``Infinity`` token for infeasible serving points, which jq /
+    JSON.parse / strict parsers reject).  In-memory records keep their
+    real inf values; only the serialized form is sanitized."""
+    if isinstance(obj, dict):
+        return {k: json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_safe(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# Sweep specification (fully serializable — the resume identity)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Everything that determines a sweep's point set, JSON-serializable.
+
+    The fingerprint of the canonical JSON form keys the checkpoint: a
+    resumed run must present the identical spec, and any change to the
+    enumerated cross-product changes the per-chunk hashes too.
+    """
+
+    arches: Tuple[str, ...]
+    mesh_shapes: Tuple[Tuple[int, ...], ...]
+    scenario: str = "train"
+    cells: Tuple[str, ...] = ()            # scenario cell override
+    logic_nodes: Tuple[str, ...] = ("N7",)
+    hbms: Tuple[str, ...] = ("HBM2E",)
+    nets: Tuple[str, ...] = ("IB-NDR-X8",)
+    budget_scales: Tuple[float, ...] = (1.0,)
+    area_mm2: Optional[float] = None
+    power_w: Optional[float] = None
+    slo_s: Optional[float] = None
+    n_tilings: int = 8
+    chunk_size: int = 32
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["mesh_shapes"] = [list(m) for m in self.mesh_shapes]
+        for k in ("arches", "cells", "logic_nodes", "hbms", "nets",
+                  "budget_scales"):
+            d[k] = list(d[k])
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict) -> "SweepSpec":
+        d = dict(d)
+        d["arches"] = tuple(d["arches"])
+        d["mesh_shapes"] = tuple(tuple(int(x) for x in m)
+                                 for m in d["mesh_shapes"])
+        for k in ("cells", "logic_nodes", "hbms", "nets"):
+            d[k] = tuple(d.get(k) or ())
+        d["budget_scales"] = tuple(float(s)
+                                   for s in d.get("budget_scales") or (1.0,))
+        return SweepSpec(**d)
+
+    def fingerprint(self) -> str:
+        blob = json.dumps(self.to_dict(), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def resolved_arches(self) -> Tuple[str, ...]:
+        out: List[str] = []
+        for a in self.arches:
+            if a == "all":
+                out.extend(ARCH_IDS)
+            else:
+                out.append(a)
+        return tuple(dict.fromkeys(out))
+
+    def budgets(self, scale: float = 1.0) -> Budgets:
+        b = Budgets.default()
+        if self.area_mm2 is not None:
+            b = dataclasses.replace(b, proc_chip_area_mm2=self.area_mm2)
+        if self.power_w is not None:
+            b = dataclasses.replace(b, power_w=self.power_w)
+        if scale != 1.0:
+            b = dataclasses.replace(
+                b, power_w=b.power_w * scale,
+                proc_chip_area_mm2=b.proc_chip_area_mm2 * scale,
+                node_area_mm2=b.node_area_mm2 * scale)
+        return b
+
+
+@dataclasses.dataclass(frozen=True)
+class PointLabel:
+    """One enumerated design point, strings-only (checkpointable)."""
+
+    arch: str
+    cell: str                       # cell name, or "prefill+decode" pair id
+    mesh: Tuple[int, ...]
+    logic: str
+    hbm: str
+    net: str
+    scale: float
+    strategy: str                   # Strategy.name notation
+
+    def key(self) -> str:
+        return scenarios.point_key(self.arch, self.cell, self.mesh,
+                                   self.logic, self.hbm, self.net,
+                                   self.scale, self.strategy)
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    index: int
+    labels: Tuple[PointLabel, ...]
+
+    def hash(self, spec_fp: str) -> str:
+        blob = spec_fp + ":" + str(self.index) + ":" + \
+            ",".join(lb.key() for lb in self.labels)
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def _scenario_for(spec: SweepSpec, cell_id: str) -> scenarios.Scenario:
+    return scenarios.get_scenario(spec.scenario, slo_s=spec.slo_s,
+                                  cells=tuple(cell_id.split("+")))
+
+
+def enumerate_labels(spec: SweepSpec) -> List[PointLabel]:
+    """Deterministic cross-product of the sweep axes.
+
+    Strategy candidates come from `planner.candidate_strategies` on the
+    scenario's primary (last) cell, so the point set matches what the
+    runtime can realize on each mesh.  A train-kind scenario with several
+    `spec.cells` sweeps each cell as its own axis value (serving scenarios
+    consume their cell pair as one unit).
+    """
+    from repro.configs.base import SHAPE_CELLS
+    from repro.core import planner
+
+    base = scenarios.get_scenario(spec.scenario, slo_s=spec.slo_s,
+                                  cells=spec.cells)
+    if isinstance(base, scenarios.TrainScenario) and len(spec.cells) > 1:
+        variants = [scenarios.get_scenario(spec.scenario, cells=(c,))
+                    for c in spec.cells]
+    else:
+        variants = [base]
+    labels: List[PointLabel] = []
+    for arch in spec.resolved_arches():
+        cfg = get_config(arch)
+        for scn in variants:
+            if not scn.applicable(cfg):
+                continue
+            primary = SHAPE_CELLS[scn.cells(cfg)[-1]]
+            cell_id = scn.cell_id()
+            for mesh in spec.mesh_shapes:
+                for st in planner.candidate_strategies(cfg, primary,
+                                                       tuple(mesh)):
+                    for logic in spec.logic_nodes:
+                        for hbm in spec.hbms:
+                            for net in spec.nets:
+                                for scale in spec.budget_scales:
+                                    labels.append(PointLabel(
+                                        arch=arch, cell=cell_id,
+                                        mesh=tuple(mesh), logic=logic,
+                                        hbm=hbm, net=net,
+                                        scale=float(scale),
+                                        strategy=st.name))
+    return labels
+
+
+def make_chunks(labels: Sequence[PointLabel], size: int) -> List[Chunk]:
+    size = max(int(size), 1)
+    return [Chunk(i // size, tuple(labels[i:i + size]))
+            for i in range(0, len(labels), size)]
+
+
+# ---------------------------------------------------------------------------
+# Chunk evaluation (shared by every backend; used by worker processes)
+# ---------------------------------------------------------------------------
+
+# AGE'd hardware points are immutable; memoize per process.
+_HW_CACHE: Dict[tuple, object] = {}
+_HW_LOCK = threading.Lock()
+
+
+def _hardware(spec: SweepSpec, logic: str, hbm: str, net: str,
+              scale: float):
+    key = (logic, hbm, net, scale, spec.area_mm2, spec.power_w)
+    with _HW_LOCK:
+        hw = _HW_CACHE.get(key)
+    if hw is None:
+        tech = techlib.make_tech_config(logic, hbm, net)
+        hw = age_lib.generate(tech, spec.budgets(scale))
+        with _HW_LOCK:
+            hw = _HW_CACHE.setdefault(key, hw)
+    return hw
+
+
+def _resolve(spec: SweepSpec, lb: PointLabel) -> scenarios.DesignPoint:
+    return scenarios.DesignPoint(
+        arch=lb.arch, cell=lb.cell, mesh=lb.mesh, logic=lb.logic,
+        hbm=lb.hbm, net=lb.net, scale=lb.scale,
+        strategy=Strategy.parse(lb.strategy), cfg=get_config(lb.arch),
+        hw=_hardware(spec, lb.logic, lb.hbm, lb.net, lb.scale),
+        system=mesh_system(lb.mesh))
+
+
+# pmap padding quantum for the device backend: per-skeleton miss counts
+# vary chunk to chunk (cache hits, mixed scenarios), so pad each batch to a
+# multiple of SHARD_BLOCK x devices and reuse a handful of compiled shapes
+# instead of recompiling per distinct count.
+SHARD_BLOCK = 8
+
+
+def eval_labels(spec: SweepSpec, labels: Sequence[PointLabel],
+                cache=pathfinder.prediction_cache(),
+                shard_devices: bool = False) -> List[Dict]:
+    """Score one chunk of labels -> result records (one batched call)."""
+    ppe = PPEConfig(n_tilings=spec.n_tilings)
+    dps, scns, spans = [], [], []
+    points: List[pathfinder.EvalPoint] = []
+    for lb in labels:
+        dp = _resolve(spec, lb)
+        scn = _scenario_for(spec, lb.cell)
+        eps = scn.eval_points(dp)
+        spans.append((len(points), len(points) + len(eps)))
+        points.extend(eps)
+        dps.append(dp)
+        scns.append(scn)
+    rows = pathfinder.evaluate_points(points, ppe=ppe, cache=cache,
+                                      shard_devices=shard_devices,
+                                      shard_block=SHARD_BLOCK)
+    out = []
+    for dp, scn, (lo, hi) in zip(dps, scns, spans):
+        rec = scn.record(dp, rows[lo:hi])
+        rec["key"] = dp.key()
+        out.append(rec)
+    return out
+
+
+def _process_eval(spec_dict: Dict, chunk_index: int,
+                  labels: Tuple[PointLabel, ...]) -> Tuple[int, List[Dict]]:
+    """Worker-process entry.  The chunk's labels travel with the task
+    (plain string dataclasses pickle cheaply) — re-enumerating the whole
+    cross-product per chunk would cost O(n_chunks x n_points)."""
+    return chunk_index, eval_labels(SweepSpec.from_dict(spec_dict), labels)
+
+
+# ---------------------------------------------------------------------------
+# The runner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunStats:
+    """What one `SweepRunner.run` call did (resume accounting included)."""
+
+    n_points_total: int
+    n_chunks_total: int
+    n_chunks_skipped: int
+    n_chunks_evaluated: int
+    n_points_evaluated: int
+    elapsed_s: float
+    backend: str
+    out_dir: Optional[str]
+    records: Optional[List[Dict]] = None
+
+    @property
+    def complete(self) -> bool:
+        return (self.n_chunks_skipped + self.n_chunks_evaluated
+                == self.n_chunks_total)
+
+
+def pick_backend(backend: str = "auto") -> str:
+    if backend != "auto":
+        return backend
+    import jax
+    return "device" if jax.local_device_count() > 1 else "thread"
+
+
+class SweepRunner:
+    """Chunked, fanned-out, checkpointed executor for one `SweepSpec`.
+
+    Layout of ``out_dir`` (all appends flushed per chunk):
+
+      spec.json         {"version", "fingerprint", "spec": {...}}
+      results.jsonl     one record per design point, tagged with its chunk
+      checkpoint.jsonl  one line per *finished* chunk: {"chunk","hash","n"}
+
+    The done-line is written after the chunk's rows, so a crash can only
+    leave rows from an unfinished chunk behind; resume compacts them away
+    before continuing.
+    """
+
+    def __init__(self, spec: SweepSpec, out_dir: Optional[str] = None,
+                 backend: str = "auto", workers: Optional[int] = None,
+                 cache=pathfinder.prediction_cache()):
+        self.spec = spec
+        self.out_dir = out_dir
+        self.backend = pick_backend(backend)
+        self.workers = workers or min(4, os.cpu_count() or 1)
+        self.cache = cache
+        self._fp = spec.fingerprint()
+
+    # -- persistence ------------------------------------------------------
+    @staticmethod
+    def from_dir(out_dir: str, **kwargs) -> "SweepRunner":
+        """Rebuild a runner from a previous run's spec.json (CLI --resume
+        does this, so a resumed sweep needs no re-specified axes)."""
+        with open(os.path.join(out_dir, "spec.json")) as fh:
+            head = json.load(fh)
+        spec = SweepSpec.from_dict(head["spec"])
+        return SweepRunner(spec, out_dir=out_dir, **kwargs)
+
+    def _paths(self):
+        d = self.out_dir
+        return (os.path.join(d, "spec.json"),
+                os.path.join(d, "results.jsonl"),
+                os.path.join(d, "checkpoint.jsonl"))
+
+    def _write_spec(self, spec_path: str):
+        tmp = spec_path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump({"version": SPEC_VERSION, "fingerprint": self._fp,
+                       "spec": self.spec.to_dict()}, fh, indent=2)
+        os.replace(tmp, spec_path)
+
+    def _load_done(self, spec_path: str, ckpt_path: str,
+                   chunks: List[Chunk]) -> Dict[int, str]:
+        """Finished chunks from a previous run, hash-verified against the
+        current enumeration (a stale/corrupt line is just re-evaluated)."""
+        if not os.path.exists(spec_path):
+            raise FileNotFoundError(
+                f"cannot resume: {spec_path} does not exist")
+        with open(spec_path) as fh:
+            head = json.load(fh)
+        if head.get("fingerprint") != self._fp:
+            raise ValueError(
+                f"cannot resume: sweep spec changed "
+                f"(checkpoint {head.get('fingerprint')}, now {self._fp})")
+        done: Dict[int, str] = {}
+        if os.path.exists(ckpt_path):
+            by_index = {c.index: c for c in chunks}
+            with open(ckpt_path) as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except json.JSONDecodeError:
+                        continue            # torn tail line from a crash
+                    c = by_index.get(rec.get("chunk"))
+                    if c is not None and rec.get("hash") == c.hash(self._fp):
+                        done[c.index] = rec["hash"]
+        return done
+
+    def _compact_results(self, res_path: str, done: Dict[int, str]):
+        """Drop rows from unfinished chunks (crash between row append and
+        done-line append) so resumed output has no duplicates."""
+        if not os.path.exists(res_path):
+            return
+        tmp = res_path + ".tmp"
+        with open(res_path) as src, open(tmp, "w") as dst:
+            for line in src:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if rec.get("chunk") in done:
+                    dst.write(line + "\n")
+        os.replace(tmp, res_path)
+
+    def read_results(self) -> List[Dict]:
+        """All records currently streamed to results.jsonl."""
+        _, res_path, _ = self._paths()
+        out = []
+        with open(res_path) as fh:
+            for line in fh:
+                line = line.strip()
+                if line:
+                    out.append(json.loads(line))
+        return out
+
+    # -- execution --------------------------------------------------------
+    def run(self, resume: bool = False, max_chunks: Optional[int] = None,
+            collect: bool = True, verbose: bool = False) -> RunStats:
+        """Execute (or continue) the sweep.
+
+        resume      skip chunks recorded in checkpoint.jsonl (zero
+                    re-evaluation); requires the identical spec.
+        max_chunks  stop after N chunks (benchmarks/tests simulate an
+                    interrupted sweep with this).
+        collect     return the accumulated records on RunStats.records.
+        """
+        t0 = time.perf_counter()
+        labels = enumerate_labels(self.spec)
+        chunks = make_chunks(labels, self.spec.chunk_size)
+        done: Dict[int, str] = {}
+        res_fh = ckpt_fh = None
+        memory_rows: List[Dict] = []
+
+        if self.out_dir is not None:
+            os.makedirs(self.out_dir, exist_ok=True)
+            spec_path, res_path, ckpt_path = self._paths()
+            if resume:
+                done = self._load_done(spec_path, ckpt_path, chunks)
+                self._compact_results(res_path, done)
+            elif os.path.exists(ckpt_path):
+                # never silently destroy a previous sweep's checkpoints: a
+                # forgotten --resume must not cost hours of finished chunks
+                raise FileExistsError(
+                    f"{self.out_dir} already holds a checkpointed sweep; "
+                    f"pass resume=True (CLI: --resume) to continue it, or "
+                    f"point --out at a fresh directory")
+            self._write_spec(spec_path)
+            res_fh = open(res_path, "a")
+            ckpt_fh = open(ckpt_path, "a")
+        elif resume:
+            raise ValueError("resume=True requires an out_dir")
+
+        pending = [c for c in chunks if c.index not in done]
+        if max_chunks is not None:
+            pending = pending[:max_chunks]
+
+        n_eval_points = 0
+
+        def commit(chunk: Chunk, records: List[Dict]):
+            nonlocal n_eval_points
+            n_eval_points += len(records)
+            if res_fh is not None:
+                for rec in records:
+                    res_fh.write(json.dumps(
+                        json_safe({"chunk": chunk.index, **rec})) + "\n")
+                res_fh.flush()
+                ckpt_fh.write(json.dumps(
+                    {"chunk": chunk.index, "hash": chunk.hash(self._fp),
+                     "n": len(records)}) + "\n")
+                ckpt_fh.flush()
+            else:
+                memory_rows.extend(records)
+            if verbose:
+                print(f"# chunk {chunk.index} done "
+                      f"({len(records)} points)", flush=True)
+
+        try:
+            self._execute(pending, commit)
+        finally:
+            if res_fh is not None:
+                res_fh.close()
+                ckpt_fh.close()
+
+        records: Optional[List[Dict]] = None
+        if collect:
+            if self.out_dir is not None:
+                records = [{k: v for k, v in r.items() if k != "chunk"}
+                           for r in self.read_results()]
+            else:
+                records = memory_rows
+        return RunStats(
+            n_points_total=len(labels), n_chunks_total=len(chunks),
+            n_chunks_skipped=len(done), n_chunks_evaluated=len(pending),
+            n_points_evaluated=n_eval_points,
+            elapsed_s=time.perf_counter() - t0, backend=self.backend,
+            out_dir=self.out_dir, records=records)
+
+    def _execute(self, pending: List[Chunk], commit):
+        spec = self.spec
+        if self.backend in ("serial", "device"):
+            shard = self.backend == "device"
+            for c in pending:
+                commit(c, eval_labels(spec, c.labels, cache=self.cache,
+                                      shard_devices=shard))
+        elif self.backend == "thread":
+            with ThreadPoolExecutor(self.workers) as ex:
+                futs = {ex.submit(eval_labels, spec, c.labels,
+                                  self.cache): c
+                        for c in pending}
+                for f in as_completed(futs):
+                    commit(futs[f], f.result())
+        elif self.backend == "process":
+            import multiprocessing as mp
+            ctx = mp.get_context("spawn")     # fork deadlocks under JAX
+            spec_dict = spec.to_dict()
+            by_index = {c.index: c for c in pending}
+            with ProcessPoolExecutor(self.workers, mp_context=ctx) as ex:
+                futs = [ex.submit(_process_eval, spec_dict, c.index,
+                                  c.labels)
+                        for c in pending]
+                for f in as_completed(futs):
+                    idx, records = f.result()
+                    commit(by_index[idx], records)
+        else:
+            raise ValueError(f"unknown backend {self.backend!r}; expected "
+                             "serial|thread|process|device|auto")
+
+
+# ---------------------------------------------------------------------------
+# Output helpers
+# ---------------------------------------------------------------------------
+
+LABEL_FIELDS = ("arch", "cell", "mesh", "logic", "hbm", "net", "scale",
+                "strategy", "devices")
+
+
+def csv_fields(scenario: scenarios.Scenario) -> Tuple[str, ...]:
+    return LABEL_FIELDS + tuple(scenario.fields)
+
+
+def to_csv(records: Sequence[Dict], scenario: scenarios.Scenario) -> str:
+    fields = csv_fields(scenario)
+
+    def fmt(v):
+        if isinstance(v, bool) or v is None:
+            return str(v)
+        if isinstance(v, float):
+            return f"{v:.6e}" if (v and abs(v) < 1e-2) else f"{v:g}"
+        return str(v)
+
+    lines = [",".join(fields)]
+    for r in records:
+        lines.append(",".join(fmt(r.get(f)) for f in fields))
+    return "\n".join(lines)
+
+
+def pareto_records(records: Sequence[Dict],
+                   objectives: Sequence[str]) -> List[Dict]:
+    """Non-dominated subset of result records over numeric objective
+    fields, in input order.
+
+    Infeasible serving points (``feasible: false``) and records whose
+    objective values are missing/None (what `json_safe` writes for
+    non-finite metrics) or non-finite are excluded up front — an unusable
+    design can otherwise survive the frontier on its one finite objective
+    (e.g. best TTFT with infinite cost).  The dominance check is a sorted
+    incremental skyline over NumPy rows (each candidate is compared only
+    against the running frontier, which transitivity makes sufficient), so
+    runner-scale record sets (10^4-10^6 points) do not pay the O(n^2)
+    pure-Python loop of `pathfinder.pareto_front`.
+    """
+    def objvals(r) -> Optional[List[float]]:
+        try:
+            vs = [float(r[k]) for k in objectives]
+        except (KeyError, TypeError, ValueError):
+            return None
+        return vs if all(np.isfinite(v) for v in vs) else None
+
+    recs, rows = [], []
+    for r in records:
+        if not r.get("feasible", True):
+            continue
+        vs = objvals(r)
+        if vs is not None:
+            recs.append(r)
+            rows.append(vs)
+    if not recs:
+        return []
+    vals = np.asarray(rows, dtype=np.float64)
+    order = np.lexsort(vals.T[::-1])       # by first objective, then rest
+    front = np.empty((0, vals.shape[1]))
+    keep: List[int] = []
+    for i in order:
+        v = vals[i]
+        if front.size and bool(np.any(
+                np.all(front <= v, axis=1) & np.any(front < v, axis=1))):
+            continue
+        keep.append(int(i))
+        front = np.vstack([front, v])
+    return [recs[i] for i in sorted(keep)]

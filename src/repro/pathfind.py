@@ -11,6 +11,24 @@ Subcommands:
                   --mesh 8x8 --mesh 16x16 \
                   --logic N7,N5,N3 --hbm HBM2E,HBM3 --csv sweep.csv
 
+          With --out DIR the sweep runs on the sharded, chunked, resumable
+          engine (repro.core.sweeprunner): results stream to
+          DIR/results.jsonl, finished chunks are checkpointed, and an
+          interrupted sweep continues with ZERO re-evaluation via:
+
+              PYTHONPATH=src python -m repro.pathfind sweep \
+                  --out sweeps/serve --resume
+
+          --scenario picks the workload semantics (scenario registry,
+          repro.core.scenarios): "train" = step time; "serving" =
+          prefill+decode TTFT / tokens-per-sec-per-device with KV-cache
+          memory pressure; "serving-long" = 500k-token decode (recurrent /
+          hybrid archs).  --arch all sweeps every registered config:
+
+              PYTHONPATH=src python -m repro.pathfind sweep \
+                  --scenario serving --arch all --mesh 16x16 \
+                  --logic N7,N5 --slo 10 --out sweeps/serve
+
   plan    the CrossFlow -> runtime bridge: best runtime-realizable strategy
           for one (arch, cell, mesh) on the TPU-v5e micro-arch:
 
@@ -53,11 +71,12 @@ def _parser() -> argparse.ArgumentParser:
     sub = p.add_subparsers(dest="cmd", required=True)
 
     sw = sub.add_parser("sweep", help="batched design-space sweep")
-    sw.add_argument("--arch", action="append", required=True,
-                    help="model arch id (repeatable)")
-    sw.add_argument("--cell", action="append", required=True,
-                    help="shape cell name (repeatable)")
-    sw.add_argument("--mesh", action="append", type=_mesh, required=True,
+    sw.add_argument("--arch", action="append", default=None,
+                    help="model arch id (repeatable; 'all' = every config)")
+    sw.add_argument("--cell", action="append", default=None,
+                    help="shape cell name (repeatable; default from the "
+                         "scenario, e.g. train_4k / prefill_32k+decode_32k)")
+    sw.add_argument("--mesh", action="append", type=_mesh, default=None,
                     help="mesh shape like 16x16 (repeatable)")
     sw.add_argument("--logic", type=_csv_list, default=["N7"],
                     help="comma-separated logic nodes (default N7)")
@@ -69,12 +88,41 @@ def _parser() -> argparse.ArgumentParser:
                     help="proc chip area budget (mm^2)")
     sw.add_argument("--power", type=float, default=None,
                     help="node power budget (W)")
+    sw.add_argument("--scale", type=_csv_list, default=None,
+                    metavar="S1,S2,...",
+                    help="budget-scale variants (e.g. 0.8,1.0,1.2) "
+                         "multiplying area+power per hardware point")
     sw.add_argument("--tilings", type=int, default=8,
                     help="PPE tiling samples per level")
     sw.add_argument("--pareto", type=_csv_list, default=None, metavar="OBJS",
                     help="print only the Pareto frontier over these "
-                         "objectives (e.g. time_s,devices)")
+                         "objectives (default: the scenario's, e.g. "
+                         "time_s,devices)")
     sw.add_argument("--csv", default=None, help="also write CSV here")
+    # sharded resumable engine (repro.core.sweeprunner)
+    sw.add_argument("--scenario", default="train",
+                    help="workload scenario: train | serving | serving-long")
+    sw.add_argument("--slo", type=float, default=None,
+                    help="serving TTFT SLO in seconds (tags slo_ok)")
+    sw.add_argument("--out", default=None,
+                    help="stream results + checkpoints into this directory "
+                         "(enables --resume)")
+    sw.add_argument("--resume", action="store_true",
+                    help="continue an interrupted sweep from --out "
+                         "(spec loaded from DIR/spec.json; zero "
+                         "re-evaluation of finished chunks)")
+    sw.add_argument("--chunk-size", type=int, default=32,
+                    help="design points per chunk (checkpoint granularity)")
+    sw.add_argument("--workers", type=int, default=None,
+                    help="parallel chunk workers (thread/process backends)")
+    sw.add_argument("--backend", default="auto",
+                    choices=["auto", "serial", "thread", "process",
+                             "device"],
+                    help="chunk fan-out: auto = device-sharded pmap when "
+                         ">1 JAX device, else threads")
+    sw.add_argument("--max-chunks", type=int, default=None,
+                    help="stop after N chunks (testing/benchmarks; "
+                         "combine with --resume to continue)")
 
     pl = sub.add_parser("plan", help="runtime sharding plan for one point")
     pl.add_argument("--arch", required=True)
@@ -97,18 +145,33 @@ def _parser() -> argparse.ArgumentParser:
 
 
 def _cmd_sweep(args) -> int:
+    # every flag the chunked engine owns must route there — a runner-only
+    # flag silently dropped by the in-memory path is a footgun
+    use_runner = bool(args.out or args.resume or args.scenario != "train"
+                      or args.scale or args.max_chunks is not None
+                      or args.backend != "auto" or args.slo is not None
+                      or args.workers is not None or args.chunk_size != 32
+                      or (args.arch and "all" in args.arch))
+    if use_runner:
+        return _cmd_sweep_runner(args)
+
     import dataclasses
     from repro.core import pathfinder
     from repro.core.age import Budgets
     from repro.core.roofline import PPEConfig
 
+    if not (args.arch and args.mesh):
+        print("error: sweep needs --arch and --mesh (or --resume with "
+              "--out)", file=sys.stderr)
+        return 2
+    cells = args.cell or ["train_4k"]
     budgets = Budgets.default()
     if args.area is not None:
         budgets = dataclasses.replace(budgets, proc_chip_area_mm2=args.area)
     if args.power is not None:
         budgets = dataclasses.replace(budgets, power_w=args.power)
     result = pathfinder.sweep(
-        args.arch, args.cell, args.mesh, logic_nodes=args.logic,
+        args.arch, cells, args.mesh, logic_nodes=args.logic,
         hbms=args.hbm, nets=args.net, budgets=budgets,
         ppe=PPEConfig(n_tilings=args.tilings))
     points = result.points
@@ -125,6 +188,90 @@ def _cmd_sweep(args) -> int:
           f"{'x'.join(map(str, best.mesh))} {best.logic}/{best.hbm}/"
           f"{best.net} {best.strategy.name} -> {best.time_s*1e3:.2f} ms",
           file=sys.stderr)
+    return 0
+
+
+def _cmd_sweep_runner(args) -> int:
+    """Sharded / chunked / resumable path (repro.core.sweeprunner)."""
+    from repro.core import scenarios, sweeprunner
+
+    kwargs = dict(backend=args.backend, workers=args.workers)
+    if args.resume:
+        if not args.out:
+            print("error: --resume requires --out DIR", file=sys.stderr)
+            return 2
+        # the spec comes from DIR/spec.json; axis/scenario flags on the
+        # command line would be silently contradicted, so refuse them
+        ignored = [name for name, val, default in (
+            ("--arch", args.arch, None), ("--cell", args.cell, None),
+            ("--mesh", args.mesh, None), ("--logic", args.logic, ["N7"]),
+            ("--hbm", args.hbm, ["HBM2E"]),
+            ("--net", args.net, ["IB-NDR-X8"]),
+            ("--scale", args.scale, None), ("--area", args.area, None),
+            ("--power", args.power, None), ("--slo", args.slo, None),
+            ("--scenario", args.scenario, "train"),
+            ("--chunk-size", args.chunk_size, 32),
+            ("--tilings", args.tilings, 8),
+        ) if val != default]
+        if ignored:
+            print(f"error: --resume loads the sweep spec from "
+                  f"{args.out}/spec.json; drop these flags (they would "
+                  f"be ignored): {', '.join(ignored)}", file=sys.stderr)
+            return 2
+        runner = sweeprunner.SweepRunner.from_dir(args.out, **kwargs)
+    else:
+        if not (args.arch and args.mesh):
+            print("error: sweep needs --arch and --mesh (or --resume with "
+                  "--out)", file=sys.stderr)
+            return 2
+        spec = sweeprunner.SweepSpec(
+            arches=tuple(args.arch),
+            mesh_shapes=tuple(tuple(m) for m in args.mesh),
+            scenario=args.scenario, cells=tuple(args.cell or ()),
+            logic_nodes=tuple(args.logic), hbms=tuple(args.hbm),
+            nets=tuple(args.net),
+            budget_scales=tuple(float(s) for s in args.scale) if args.scale
+            else (1.0,),
+            area_mm2=args.area, power_w=args.power, slo_s=args.slo,
+            n_tilings=args.tilings, chunk_size=args.chunk_size)
+        runner = sweeprunner.SweepRunner(spec, out_dir=args.out, **kwargs)
+
+    stats = runner.run(resume=args.resume, max_chunks=args.max_chunks)
+    scn = scenarios.get_scenario(
+        runner.spec.scenario, slo_s=runner.spec.slo_s,
+        cells=runner.spec.cells)
+    records = stats.records or []
+    shown = records
+    objectives = args.pareto or list(scn.objectives)
+    if args.pareto:
+        shown = sweeprunner.pareto_records(records, objectives)
+    csv_text = sweeprunner.to_csv(shown, scn)
+    print(csv_text)
+    if args.csv:
+        with open(args.csv, "w") as fh:
+            fh.write(csv_text + "\n")
+        print(f"# wrote {len(shown)} points to {args.csv}", file=sys.stderr)
+    print(f"# sweep[{scn.name}] backend={stats.backend}: "
+          f"{stats.n_points_total} points in {stats.n_chunks_total} chunks; "
+          f"skipped {stats.n_chunks_skipped} checkpointed, evaluated "
+          f"{stats.n_chunks_evaluated} "
+          f"({stats.n_points_evaluated} points) in {stats.elapsed_s:.1f}s",
+          file=sys.stderr)
+    if not stats.complete:
+        if stats.out_dir:
+            print(f"# incomplete: resume with `python -m repro.pathfind "
+                  f"sweep --out {stats.out_dir} --resume`", file=sys.stderr)
+        else:
+            print("# incomplete (no --out directory: nothing was "
+                  "checkpointed)", file=sys.stderr)
+    feasible = [r for r in records
+                if r.get("feasible", True)
+                and r.get(objectives[0]) is not None
+                and float(r[objectives[0]]) > 0.0]
+    if feasible:
+        best = min(feasible, key=lambda r: float(r[objectives[0]]))
+        print(f"# best[{objectives[0]}]: {best['key']} -> "
+              f"{float(best[objectives[0]]):.4g}", file=sys.stderr)
     return 0
 
 
@@ -176,7 +323,7 @@ def main(argv=None) -> int:
               file=sys.stderr)
     except KeyError as e:
         print(f"error: unknown name: {e}", file=sys.stderr)
-    except (ValueError, AttributeError) as e:
+    except (ValueError, AttributeError, OSError) as e:
         print(f"error: {e}", file=sys.stderr)
     return 2
 

@@ -1,0 +1,222 @@
+"""Scenario registry + serving-scenario pathfinding tests (ISSUE-2).
+
+The serving scenario must produce sane prefill/decode phase metrics across
+model families: dense (qwen1.5-0.5b), MoE (qwen2-moe-a2.7b), and recurrent
+hybrid (recurrentgemma-2b).  Also covers the KV-cache memory model, the
+capacity-pressure derate, SLO tagging, and registry semantics.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPE_CELLS, get_config
+from repro.core import roofline, scenarios, simulate, sweeprunner
+from repro.core.sweeprunner import SweepRunner, SweepSpec
+
+SERVING_ARCHS = ("qwen1.5-0.5b", "qwen2-moe-a2.7b", "recurrentgemma-2b")
+
+
+@pytest.fixture(scope="module")
+def serving_records():
+    """One serving sweep over the three families on a 16x16 mesh."""
+    spec = SweepSpec(arches=SERVING_ARCHS, mesh_shapes=((16, 16),),
+                     scenario="serving", n_tilings=4, chunk_size=8)
+    stats = SweepRunner(spec, backend="serial").run()
+    assert stats.complete
+    return stats.records
+
+
+def _for_arch(records, arch):
+    rows = [r for r in records if r["arch"] == arch]
+    assert rows, f"no serving records for {arch}"
+    return rows
+
+
+# ------------------------------------------------------------ phase model
+@pytest.mark.parametrize("arch", SERVING_ARCHS)
+def test_serving_metrics_sane_per_family(serving_records, arch):
+    decode_cell = SHAPE_CELLS["decode_32k"]
+    for r in _for_arch(serving_records, arch):
+        assert r["cell"] == "prefill_32k+decode_32k"
+        assert r["ttft_s"] > 0
+        assert r["tpot_s"] > 0
+        # prefill scores 32k tokens/seq, decode one: TTFT >> TPOT
+        assert r["ttft_s"] > r["tpot_s"]
+        assert r["hbm_occupancy"] > 0
+        assert r["kv_bytes_per_device"] > 0
+        assert r["weight_bytes_per_device"] > 0
+        if r["feasible"]:
+            np.testing.assert_allclose(
+                r["tokens_per_s"], decode_cell.global_batch / r["tpot_s"],
+                rtol=1e-6)
+            np.testing.assert_allclose(
+                r["tokens_per_s_per_device"],
+                r["tokens_per_s"] / r["devices"], rtol=1e-6)
+            np.testing.assert_allclose(
+                r["cost_device_s_per_token"],
+                r["devices"] * r["tpot_s"] / decode_cell.global_batch,
+                rtol=1e-6)
+        else:
+            assert math.isinf(r["tpot_s"])
+            assert r["tokens_per_s"] == 0.0
+
+
+def test_moe_gets_expert_parallel_candidate(serving_records):
+    strategies = {r["strategy"]
+                  for r in _for_arch(serving_records, "qwen2-moe-a2.7b")}
+    assert any("-e" in s for s in strategies), strategies
+
+
+def test_recurrent_kv_footprint_far_below_dense():
+    cell = SHAPE_CELLS["decode_32k"]
+    dense = scenarios.kv_cache_bytes(get_config("qwen1.5-0.5b"),
+                                     cell.seq_len, cell.global_batch)
+    rec = scenarios.kv_cache_bytes(get_config("recurrentgemma-2b"),
+                                   cell.seq_len, cell.global_batch)
+    # 2/3 recurrent blocks (O(1) state) + windowed attention vs 32k dense KV
+    assert rec < 0.05 * dense
+
+
+# ----------------------------------------------------------- memory model
+def test_kv_cache_bytes_dense_scales_with_context():
+    cfg = get_config("qwen1.5-0.5b")
+    b1 = scenarios.kv_cache_bytes(cfg, 1024, 1)
+    b2 = scenarios.kv_cache_bytes(cfg, 2048, 1)
+    np.testing.assert_allclose(b2, 2 * b1, rtol=1e-6)
+    hd = cfg.resolved_head_dim
+    expect = cfg.n_layers * 2 * cfg.n_kv_heads * hd * 1024 * 2
+    np.testing.assert_allclose(b1, expect, rtol=1e-6)
+
+
+def test_kv_cache_bytes_local_window_caps_context():
+    cfg = get_config("gemma3-27b")              # local/global attn pattern
+    short = scenarios.kv_cache_bytes(cfg, cfg.local_window, 1)
+    long = scenarios.kv_cache_bytes(cfg, 64 * cfg.local_window, 1)
+    # local layers stop growing past the window: far sublinear growth
+    assert long < 16 * short
+
+
+def test_kv_cache_bytes_recurrent_state_constant_in_context():
+    cfg = get_config("recurrentgemma-2b")
+    window = cfg.local_window
+    b1 = scenarios.kv_cache_bytes(cfg, 8 * window, 1)
+    b2 = scenarios.kv_cache_bytes(cfg, 64 * window, 1)
+    np.testing.assert_allclose(b1, b2, rtol=1e-6)   # state is O(1) in ctx
+
+
+def test_kv_cache_bytes_encoder_decoder_not_double_counted():
+    cfg = get_config("whisper-large-v3")
+    kv_len = 1500
+    hd = cfg.resolved_head_dim
+    dec = min(cfg.decoder_len, kv_len)
+    # exactly one charge per decoder layer: self-KV (dec) + cross-KV (src)
+    expect = cfg.n_layers * 2 * cfg.n_kv_heads * hd * (dec + kv_len) * 2
+    np.testing.assert_allclose(scenarios.kv_cache_bytes(cfg, kv_len, 1),
+                               expect, rtol=1e-6)
+
+
+def test_capacity_pressure_derate_shape():
+    assert roofline.capacity_pressure_derate(0.2) == 1.0
+    assert roofline.capacity_pressure_derate(0.85) == 1.0
+    mid = roofline.capacity_pressure_derate(0.95)
+    assert 1.0 < mid < 1.5
+    assert roofline.capacity_pressure_derate(0.99) > mid
+    assert math.isinf(roofline.capacity_pressure_derate(1.0))
+    assert math.isinf(roofline.capacity_pressure_derate(1.5))
+
+
+def test_serving_breakdown_infeasible_and_slo():
+    prefill = simulate.TimeBreakdown(2.0, 1.5, 0.5, 0.2)
+    decode = simulate.TimeBreakdown(0.01, 0.008, 0.002, 0.0)
+    ok = simulate.serving_breakdown(
+        prefill, decode, batch=64, devices=16,
+        weight_bytes_per_device=1e9, kv_bytes_per_device=1e9,
+        dram_capacity=16e9, slo_s=3.0)
+    assert ok.feasible and ok.slo_ok
+    np.testing.assert_allclose(ok.tokens_per_s, 64 / 0.01, rtol=1e-6)
+    late = simulate.serving_breakdown(
+        prefill, decode, batch=64, devices=16,
+        weight_bytes_per_device=1e9, kv_bytes_per_device=1e9,
+        dram_capacity=16e9, slo_s=1.0)
+    assert late.feasible and late.slo_ok is False
+    full = simulate.serving_breakdown(
+        prefill, decode, batch=64, devices=16,
+        weight_bytes_per_device=9e9, kv_bytes_per_device=9e9,
+        dram_capacity=16e9)
+    assert not full.feasible
+    assert math.isinf(full.tpot_s) and full.tokens_per_s == 0.0
+    assert full.slo_ok is None
+    near = simulate.serving_breakdown(
+        prefill, decode, batch=64, devices=16,
+        weight_bytes_per_device=7e9, kv_bytes_per_device=8e9,
+        dram_capacity=16e9)
+    assert near.feasible and near.kv_derate > 1.0
+    assert near.tpot_s > float(decode.total_s)
+    # a non-finite prefill prediction must not be reported feasible
+    bad_prefill = simulate.serving_breakdown(
+        simulate.TimeBreakdown(float("inf"), 0.0, 0.0, 0.0), decode,
+        batch=64, devices=16, weight_bytes_per_device=1e9,
+        kv_bytes_per_device=1e9, dram_capacity=16e9)
+    assert not bad_prefill.feasible
+
+
+def test_infeasible_points_stream_as_strict_json(tmp_path):
+    """Serving points with inf metrics must not leak `Infinity` tokens
+    into results.jsonl (RFC 8259: jq / JSON.parse reject them)."""
+    spec = SweepSpec(arches=("qwen1.5-0.5b",), mesh_shapes=((2, 2),),
+                     scenario="serving", n_tilings=4, chunk_size=4)
+    stats = SweepRunner(spec, out_dir=str(tmp_path),
+                        backend="serial").run()
+    assert any(not r["feasible"] for r in stats.records)
+    text = (tmp_path / "results.jsonl").read_text()
+    assert "Infinity" not in text and "NaN" not in text
+
+    def no_constants(_):
+        raise AssertionError("non-standard JSON constant in stream")
+
+    for line in text.strip().splitlines():
+        rec = json.loads(line, parse_constant=no_constants)
+        if not rec["feasible"]:
+            assert rec["tpot_s"] is None         # sanitized, not Infinity
+
+
+# --------------------------------------------------------------- registry
+def test_registry_lookup_and_overrides():
+    assert set(scenarios.scenario_names()) >= {"train", "serving",
+                                               "serving-long"}
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scenarios.get_scenario("nope")
+    train = scenarios.get_scenario("train", cells=("prefill_32k",))
+    assert train.cell_id() == "prefill_32k"
+    serve = scenarios.get_scenario("serving", slo_s=2.5)
+    assert serve.slo_s == 2.5
+    with pytest.raises(ValueError, match="two cells"):
+        scenarios.get_scenario("serving", cells=("decode_32k",))
+
+
+def test_register_scenario_conflicts_and_custom():
+    class Custom(scenarios.TrainScenario):
+        pass
+
+    with pytest.raises(ValueError, match="already registered"):
+        scenarios.register_scenario(scenarios.TrainScenario())
+    c = Custom(cell="prefill_32k", name="custom-prefill")
+    try:
+        scenarios.register_scenario(c)
+        assert scenarios.get_scenario("custom-prefill") is c
+    finally:
+        scenarios._REGISTRY.pop("custom-prefill", None)
+
+
+def test_serving_long_requires_long_context_support():
+    long_scn = scenarios.get_scenario("serving-long")
+    assert long_scn.applicable(get_config("recurrentgemma-2b"))
+    assert not long_scn.applicable(get_config("qwen1.5-0.5b"))
+    spec = SweepSpec(arches=("qwen1.5-0.5b", "recurrentgemma-2b"),
+                     mesh_shapes=((16, 16),), scenario="serving-long")
+    labels = sweeprunner.enumerate_labels(spec)
+    assert labels and all(lb.arch == "recurrentgemma_2b" or
+                          lb.arch == "recurrentgemma-2b" for lb in labels)

@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Docs link checker — fails CI on broken intra-repo references.
+
+Scans every tracked markdown file for:
+
+  * inline links/images  [text](target)  — external (http/https/mailto)
+    and pure-anchor (#...) targets are skipped; everything else must
+    resolve to an existing file or directory relative to the file (or the
+    repo root for absolute-style `/path` links);
+  * anchors on internal links (file.md#section) — the heading must exist
+    in the target file (GitHub-style slugs);
+  * inline code spans that look like repo paths (`src/.../file.py`) in the
+    docs/ tree — these are the "file pointers" the architecture page
+    promises, so they must stay valid.
+
+Usage: python tools/check_docs.py [root]   (exit 1 on any broken link)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_PATH_RE = re.compile(
+    r"`((?:src|tests|benchmarks|docs|tools|examples)/[A-Za-z0-9_./-]+)`")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", "__pycache__", ".github", "node_modules", ".claude",
+             ".pytest_cache"}
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for fn in filenames:
+            if fn.endswith(".md"):
+                yield os.path.join(dirpath, fn)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (close enough for our headings)."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set:
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    return {slugify(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(path: str, root: str) -> list:
+    errors = []
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    # strip fenced code blocks: diagrams/snippets aren't links
+    prose = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for m in LINK_RE.finditer(prose):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        target, _, anchor = target.partition("#")
+        if not target:
+            continue
+        if target.startswith("/"):
+            resolved = os.path.join(root, target.lstrip("/"))
+        else:
+            resolved = os.path.join(os.path.dirname(path), target)
+        resolved = os.path.normpath(resolved)
+        if not os.path.exists(resolved):
+            errors.append(f"{path}: broken link -> {m.group(1)}")
+        elif anchor and resolved.endswith(".md"):
+            if slugify(anchor) not in anchors_of(resolved):
+                errors.append(f"{path}: missing anchor -> {m.group(1)}")
+    # file pointers in docs/ prose must resolve
+    if os.sep + "docs" + os.sep in path or path.endswith("README.md"):
+        for m in CODE_PATH_RE.finditer(prose):
+            p = os.path.normpath(os.path.join(root, m.group(1)))
+            if not os.path.exists(p):
+                errors.append(f"{path}: dangling file pointer `{m.group(1)}`")
+    return errors
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1
+                           else os.path.join(os.path.dirname(__file__),
+                                             os.pardir))
+    files = sorted(md_files(root))
+    errors = []
+    for path in files:
+        errors.extend(check_file(path, root))
+    rel = [os.path.relpath(f, root) for f in files]
+    print(f"checked {len(files)} markdown files: {', '.join(rel)}")
+    if errors:
+        print(f"\n{len(errors)} broken reference(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("all intra-repo links and file pointers resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
