@@ -107,6 +107,15 @@ def _bench_sweep_shard() -> BenchResult:
             f"resume_ok={int(r['resume_ok'])}"), r
 
 
+def _bench_cooptimize() -> BenchResult:
+    """Sweep -> refine cross-stack co-optimization (ISSUE-3 tentpole)."""
+    from benchmarks import cooptimize_refine
+    r = cooptimize_refine.main(verbose=False)
+    return (";".join(
+        f"{s}:dom={v['n_dominating']}/{v['n_refined']}"
+        f",gain={v['best_gain']:.2f}x" for s, v in r.items()), r)
+
+
 def _bench_crossflow_query() -> BenchResult:
     """Paper §8: CrossFlow query latency (ms .. 20 s on their machine)."""
     from repro.configs.base import SHAPE_CELLS, get_config
@@ -135,6 +144,7 @@ BENCHES: Dict[str, Callable[[], BenchResult]] = {
     "fig11_package": _bench_fig11,
     "sweep_scale": _bench_sweep_scale,
     "sweep_shard": _bench_sweep_shard,
+    "cooptimize_refine": _bench_cooptimize,
     "crossflow_query_latency": _bench_crossflow_query,
     "roofline": _bench_roofline,
     "perf_variants": _bench_perf_variants,

@@ -15,13 +15,16 @@ DeepFlow (search on top of CrossFlow):
     scenarios   workload-scenario registry (train / prefill+decode serving)
     sweeprunner sharded, chunked, resumable sweep engine (JSONL streaming,
                 checkpoint/resume, thread/process/pmap-device fan-out)
+    cooptimize  cross-stack sweep -> refine engine: batched GD over hardware
+                budgets (eq. 6) + continuous technology knobs (DVFS voltage,
+                HBM bw/capacity) with a discrete strategy/mesh outer loop
     planner     CrossFlow -> runtime ShardingPlan bridge (this repo's closing
                 of the loop: pathfinding drives the real pjit configuration)
 """
 
-from repro.core import age, graph, lmgraph, parallelism, pathfinder, \
-    placement, roofline, scenarios, simulate, soe, sweeprunner, techlib, \
-    transform
+from repro.core import age, cooptimize, graph, lmgraph, parallelism, \
+    pathfinder, placement, roofline, scenarios, simulate, soe, sweeprunner, \
+    techlib, transform
 from repro.core.age import Budgets, MicroArch
 from repro.core.graph import ComputeGraph
 from repro.core.parallelism import Strategy

@@ -514,14 +514,23 @@ def pareto_front(points: Sequence, objectives: Sequence[Callable]) -> List:
     """Non-dominated subset minimizing every objective (callables on points).
 
     O(n^2); returns points in input order.  A point is kept iff no other
-    point is <= on all objectives and < on at least one.
+    point is <= on all objectives and < on at least one.  Tie semantics:
+    points exactly equal on ALL objectives do not dominate each other, so
+    every copy of a non-dominated point survives, independent of input
+    order (same contract as `sweeprunner.pareto_records`; regression tests
+    pin the two to each other).  Points with any non-finite objective are
+    excluded — NaN compares false against everything, so such a point can
+    never be dominated and would otherwise pollute the frontier.
     """
     vals = [tuple(float(obj(p)) for obj in objectives) for p in points]
+    finite = [all(np.isfinite(v) for v in vi) for vi in vals]
     keep = []
     for i, vi in enumerate(vals):
+        if not finite[i]:
+            continue
         dominated = False
         for j, vj in enumerate(vals):
-            if j == i:
+            if j == i or not finite[j]:
                 continue
             if all(a <= b for a, b in zip(vj, vi)) \
                     and any(a < b for a, b in zip(vj, vi)):

@@ -107,12 +107,41 @@ def _reg_traffic(flops, nx, ny, reuse):
 _GEMM_CACHE: dict = {}
 
 
+def _resolve_tracer_type() -> tuple:
+    """The public home of the Tracer base class has moved across JAX
+    releases (``jax.core.Tracer`` is deprecated in favour of
+    ``jax.extend.core`` / internal homes, and the deprecated alias is
+    removed on recent versions).  Probe the known locations once at import
+    and fall back to an empty tuple (-> duck-typed check) if none exist."""
+    import importlib
+    for mod_name in ("jax.core", "jax.extend.core", "jax._src.core"):
+        try:
+            t = getattr(importlib.import_module(mod_name), "Tracer", None)
+        except Exception:               # deprecation shims may raise
+            continue
+        if isinstance(t, type):
+            return (t,)
+    return ()
+
+
+_TRACER_TYPES = _resolve_tracer_type()
+
+
+def is_tracer(v) -> bool:
+    """True if ``v`` is an abstract JAX tracer (robust across JAX versions;
+    used to disable host-side caching under `jax.jit` / `jax.grad`)."""
+    if _TRACER_TYPES:
+        return isinstance(v, _TRACER_TYPES)
+    # last-resort duck typing: tracers carry an abstract value but no
+    # addressable device buffer
+    return hasattr(v, "aval") and not hasattr(v, "unsafe_buffer_pointer")
+
+
 def _cache_key(arch: MicroArch, m, n, k, b, dtype_bytes, cfg: PPEConfig):
-    import jax
     vals = (arch.compute_throughput, arch.dram_bw, *arch.mem_bw,
             *arch.mem_capacity)
-    if any(isinstance(v, jax.core.Tracer) for v in vals):
-        return None                     # under SOE grad tracing: no caching
+    if any(is_tracer(v) for v in vals):
+        return None                     # under jit/grad tracing: no caching
     return (tuple(float(v) for v in vals), m, n, k, b, dtype_bytes,
             cfg.n_tilings, cfg.seed, cfg.kernel_overhead_s)
 
@@ -268,3 +297,17 @@ def capacity_pressure_derate(occupancy: float,
         return float("inf")
     over = max(occ - knee, 0.0) / max(1.0 - knee, 1e-9)
     return 1.0 + 0.5 * over * over
+
+
+def capacity_pressure_derate_soft(occupancy,
+                                  knee: float = CAPACITY_PRESSURE_KNEE):
+    """Differentiable (jnp, tracer-safe) variant of
+    `capacity_pressure_derate` for gradient-based refinement
+    (`repro.core.cooptimize`): same quadratic ramp between ``knee`` and
+    full occupancy, but the hard infeasibility wall at >= 100% becomes a
+    steep quadratic barrier so gradients keep pointing back toward the
+    feasible region instead of vanishing into inf."""
+    occ = jnp.asarray(occupancy)
+    over = jnp.maximum(occ - knee, 0.0) / max(1.0 - knee, 1e-9)
+    wall = jnp.maximum(occ - 1.0, 0.0)
+    return 1.0 + 0.5 * over * over + 1e3 * wall * wall

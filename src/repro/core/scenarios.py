@@ -162,6 +162,17 @@ def _kv_shard_degree(cfg: ArchConfig, st: Strategy) -> int:
     return st.dp * st.lp * max(kp_shard, 1)
 
 
+def serving_bytes_per_device(cfg: ArchConfig, st: Strategy,
+                             cell) -> Tuple[float, float]:
+    """(weight bytes, KV-cache bytes) resident per device for one decode
+    cell under one strategy — the serving capacity model shared by
+    `ServingScenario.record` and the cooptimize refinement objective."""
+    w_dev = weight_bytes(cfg) / max(st.kp * st.lp, 1)
+    kv_dev = kv_cache_bytes(cfg, cell.seq_len, cell.global_batch) \
+        / _kv_shard_degree(cfg, st)
+    return w_dev, kv_dev
+
+
 # ---------------------------------------------------------------------------
 # Scenarios
 # ---------------------------------------------------------------------------
@@ -176,6 +187,9 @@ class Scenario:
     fields: Tuple[str, ...] = ()
     # record fields a Pareto frontier minimizes
     objectives: Tuple[str, ...] = ()
+    # the continuous subset of `objectives` that `refine_objectives` folds
+    # (discrete objectives like device count are fixed within a refinement)
+    refine_objective_fields: Tuple[str, ...] = ()
 
     def cells(self, cfg: ArchConfig) -> Tuple[str, ...]:
         """Shape cells this scenario needs for one architecture."""
@@ -199,6 +213,31 @@ class Scenario:
         """Fold the (points_per_design, 5) metric rows into one record."""
         raise NotImplementedError
 
+    def objective_values(self, rec: Dict) -> Optional[Tuple[float, ...]]:
+        """This scenario's Pareto objective tuple for one result record,
+        or None if the record is infeasible / has missing or non-finite
+        objectives (mirrors the `sweeprunner.pareto_records` filter)."""
+        if not rec.get("feasible", True):
+            return None
+        try:
+            vs = tuple(float(rec[k]) for k in self.objectives)
+        except (KeyError, TypeError, ValueError):
+            return None
+        return vs if all(np.isfinite(v) for v in vs) else None
+
+    def refine_objectives(self, dp: DesignPoint):
+        """Differentiable objective fold for cross-stack refinement
+        (`repro.core.cooptimize`).
+
+        Returns ``fold(totals, dram_capacity) -> tuple`` mapping the
+        per-eval-point predicted totals (one jnp scalar per
+        `eval_points` entry) and the candidate's (theta-dependent)
+        main-memory capacity to this scenario's *continuous* objective
+        scalars, ordered like `objectives` (discrete objectives such as
+        device count are omitted — they are fixed within one refinement).
+        """
+        raise NotImplementedError
+
 
 class TrainScenario(Scenario):
     """Per-iteration training step time (the paper's Fig. 9 axis)."""
@@ -207,6 +246,7 @@ class TrainScenario(Scenario):
     description = "training step time on one shape cell"
     fields = ("time_s", "compute_s", "comm_s", "exposed_comm_s")
     objectives = ("time_s", "devices")
+    refine_objective_fields = ("time_s",)
 
     def __init__(self, cell: str = "train_4k", name: str = "train"):
         self.cell = cell
@@ -231,6 +271,11 @@ class TrainScenario(Scenario):
                 "time_s": float(row[0]), "compute_s": float(row[1]),
                 "comm_s": float(row[2]), "exposed_comm_s": float(row[3])}
 
+    def refine_objectives(self, dp: DesignPoint):
+        def fold(totals, dram_capacity):
+            return (totals[0],)                    # step time; devices fixed
+        return fold
+
 
 class ServingScenario(Scenario):
     """Prefill + decode inference: TTFT / TPOT / tokens-per-sec-per-device
@@ -242,6 +287,7 @@ class ServingScenario(Scenario):
               "cost_device_s_per_token", "hbm_occupancy", "kv_derate",
               "feasible", "slo_ok")
     objectives = ("ttft_s", "cost_device_s_per_token")
+    refine_objective_fields = ("ttft_s", "cost_device_s_per_token")
 
     def __init__(self, prefill_cell: str = "prefill_32k",
                  decode_cell: str = "decode_32k",
@@ -280,9 +326,7 @@ class ServingScenario(Scenario):
             exposed_comm_s=rows[1][3])
         cell = SHAPE_CELLS[self.decode_cell]
         st = dp.strategy
-        w_dev = weight_bytes(dp.cfg) / max(st.kp * st.lp, 1)
-        kv_dev = kv_cache_bytes(dp.cfg, cell.seq_len, cell.global_batch) \
-            / _kv_shard_degree(dp.cfg, st)
+        w_dev, kv_dev = serving_bytes_per_device(dp.cfg, st, cell)
         bd = simulate.serving_breakdown(
             prefill, decode, batch=cell.global_batch, devices=st.devices,
             weight_bytes_per_device=w_dev, kv_bytes_per_device=kv_dev,
@@ -297,6 +341,21 @@ class ServingScenario(Scenario):
                 "hbm_occupancy": bd.hbm_occupancy,
                 "kv_derate": bd.kv_derate,
                 "feasible": bd.feasible, "slo_ok": bd.slo_ok}
+
+    def refine_objectives(self, dp: DesignPoint):
+        from repro.core import roofline
+        import jax.numpy as jnp
+        cell = SHAPE_CELLS[self.decode_cell]
+        w_dev, kv_dev = serving_bytes_per_device(dp.cfg, dp.strategy, cell)
+        devices = dp.strategy.devices
+        batch = max(cell.global_batch, 1)
+
+        def fold(totals, dram_capacity):
+            occ = (w_dev + kv_dev) / jnp.maximum(dram_capacity, 1.0)
+            tpot = totals[1] * roofline.capacity_pressure_derate_soft(occ)
+            ttft = totals[0]
+            return (ttft, devices * tpot / batch)   # (ttft_s, cost/token)
+        return fold
 
 
 # ---------------------------------------------------------------------------

@@ -97,6 +97,28 @@ def _project_simplexes(w: jnp.ndarray, min_frac: float) -> jnp.ndarray:
     return jnp.concatenate([proj(a), proj(p), proj(r)])
 
 
+def eq6_update(W: jnp.ndarray, M: jnp.ndarray, G: jnp.ndarray, lr: float,
+               beta: float, project: Callable) -> Tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
+    """One batched eq.-6 step: normalized-gradient descent, W-space
+    normalization, parameter-space EMA, projection.
+
+    ``W``, ``M``, ``G`` are (S, D) stacks (S starts advancing together);
+    ``project`` maps an (S, D) parameter stack onto the constraint set.
+    Returns (projected parameters, new EMA state).  Shared by both SOE
+    optimization paths and by the cross-stack refinement engine
+    (`repro.core.cooptimize`), which applies it to the budget block of its
+    joint (budget, technology-knob) parameter vector.
+    """
+    G = jnp.nan_to_num(G, nan=0.0, posinf=0.0, neginf=0.0)
+    gnorm = jnp.linalg.norm(G, axis=1, keepdims=True)
+    G = jnp.where(gnorm > 0, G / (gnorm + 1e-12), G)
+    W_new = W - lr * G                                   # W_t = W_{t-1} - η g
+    W_hat = W_new / (jnp.linalg.norm(W_new, axis=1, keepdims=True) + 1e-12)
+    M_new = beta * M + (1.0 - beta) * W_hat              # EMA in W-space
+    return project(M_new), M_new
+
+
 def make_objective(tech: TechConfig, graph: ComputeGraph, strategy: Strategy,
                    system: Optional[SystemGraph] = None,
                    template: Optional[Budgets] = None,
@@ -116,19 +138,23 @@ def make_objective(tech: TechConfig, graph: ComputeGraph, strategy: Strategy,
 
 
 def _initial_starts(cfg: SOEConfig, like: Budgets) -> List[jnp.ndarray]:
-    """Start 0 is the (projected) template; the rest Dirichlet draws."""
+    """Start 0 is the template; the rest Dirichlet draws.  Every start is
+    routed through `_project_simplexes` — a raw Dirichlet draw sums to 1
+    but its smallest components routinely sit below the `min_frac` floor
+    the iterates are projected onto, so unprojected starts would begin
+    outside the constraint set start 0 is in."""
     rng = np.random.default_rng(cfg.seed)
-    starts = [_project_simplexes(like.as_vector(), cfg.min_frac)]
+    starts = [like.as_vector()]
     for _ in range(1, cfg.starts):
         starts.append(jnp.asarray(rng.dirichlet(np.ones(_NC)).tolist()
                                   + rng.dirichlet(np.ones(_NC)).tolist()
                                   + rng.dirichlet(np.ones(_NP)).tolist(),
                                   dtype=jnp.float32))
-    return starts
+    return [_project_simplexes(w, cfg.min_frac) for w in starts]
 
 
-def _optimize_sequential(objective: Callable, cfg: SOEConfig,
-                         like: Budgets) -> SOEResult:
+def _optimize_sequential(objective: Callable, cfg: SOEConfig, like: Budgets,
+                         on_step: Optional[Callable] = None) -> SOEResult:
     """One start at a time; supports the paper-style FD gradient mode and
     arbitrary (non-traceable) objectives."""
     n_queries = 0
@@ -153,6 +179,8 @@ def _optimize_sequential(objective: Callable, cfg: SOEConfig,
             val, g = vg(w)
             return g, float(val)
 
+    project = jax.vmap(functools.partial(_project_simplexes,
+                                         min_frac=cfg.min_frac))
     best_w, best_t, history = None, float("inf"), []
     for w in _initial_starts(cfg, like):
         m = w
@@ -162,13 +190,11 @@ def _optimize_sequential(objective: Callable, cfg: SOEConfig,
             history.append(val)
             if val < best_t:
                 best_t, best_w = val, w
-            g = jnp.nan_to_num(g, nan=0.0, posinf=0.0, neginf=0.0)
-            gnorm = jnp.linalg.norm(g)
-            g = jnp.where(gnorm > 0, g / (gnorm + 1e-12), g)
-            w_new = w - cfg.lr * g                       # W_t = W_{t-1} - η g
-            w_hat = w_new / (jnp.linalg.norm(w_new) + 1e-12)   # normalize
-            m = cfg.beta * m + (1.0 - cfg.beta) * w_hat        # EMA in W-space
-            w = _project_simplexes(m, cfg.min_frac)            # project
+            W, M = eq6_update(w[None, :], m[None, :], g[None, :],
+                              cfg.lr, cfg.beta, project)
+            w, m = W[0], M[0]
+            if on_step is not None:
+                on_step(t, np.asarray(W))
             if abs(last - val) < 1e-7 * max(val, 1e-12):
                 break
             last = val
@@ -180,8 +206,8 @@ def _optimize_sequential(objective: Callable, cfg: SOEConfig,
                      history=history, n_queries=n_queries)
 
 
-def _optimize_batched(objective: Callable, cfg: SOEConfig,
-                      like: Budgets) -> SOEResult:
+def _optimize_batched(objective: Callable, cfg: SOEConfig, like: Budgets,
+                      on_step: Optional[Callable] = None) -> SOEResult:
     """All S starting points advance together: one vmapped value_and_grad
     plus one vectorized eq.-6 update per step (jit-compiled).  Converged
     starts are frozen by mask so per-start early stopping matches the
@@ -195,14 +221,7 @@ def _optimize_batched(objective: Callable, cfg: SOEConfig,
     @jax.jit
     def step(W, M, done, last):
         vals, G = vg(W)
-        G = jnp.nan_to_num(G, nan=0.0, posinf=0.0, neginf=0.0)
-        gnorm = jnp.linalg.norm(G, axis=1, keepdims=True)
-        G = jnp.where(gnorm > 0, G / (gnorm + 1e-12), G)
-        W_new = W - lr * G                               # W_t = W_{t-1} - η g
-        W_hat = W_new / (jnp.linalg.norm(W_new, axis=1,
-                                         keepdims=True) + 1e-12)
-        M_new = beta * M + (1.0 - beta) * W_hat          # EMA in W-space
-        W_proj = proj(M_new)                             # project
+        W_proj, M_new = eq6_update(W, M, G, lr, beta, proj)
         conv = jnp.abs(last - vals) < 1e-7 * jnp.maximum(vals, 1e-12)
         frozen = done[:, None]
         W_out = jnp.where(frozen, W, W_proj)
@@ -223,11 +242,16 @@ def _optimize_batched(objective: Callable, cfg: SOEConfig,
         n_queries += cfg.starts
         W_before = W
         W, M, done, vals = step(W, M, done, last)
+        if on_step is not None:
+            on_step(t, np.asarray(W))
         vals_np = np.asarray(vals, dtype=np.float64)
         history.extend(float(v) for v in vals_np)
-        i = int(np.argmin(vals_np))
-        if vals_np[i] < best_t:
-            best_t, best_w = float(vals_np[i]), W_before[i]
+        # nan-safe argmin: one diverged start (nan objective) must not
+        # blind the best-so-far tracking for the healthy starts
+        finite = np.where(np.isfinite(vals_np), vals_np, np.inf)
+        i = int(np.argmin(finite))
+        if finite[i] < best_t:
+            best_t, best_w = float(finite[i]), W_before[i]
         last = vals
     final_t = float(objective(best_w))
     if final_t < best_t:
@@ -238,23 +262,27 @@ def _optimize_batched(objective: Callable, cfg: SOEConfig,
 
 
 def optimize(objective: Callable, cfg: SOEConfig = SOEConfig(),
-             template: Optional[Budgets] = None) -> SOEResult:
+             template: Optional[Budgets] = None,
+             on_step: Optional[Callable] = None) -> SOEResult:
     """Projected GD with parameter-space exponential averaging (eq. 6).
 
     grad_mode="auto" runs the batched multi-start path (one vmapped update
     advances every start); "fd" or a non-traceable objective falls back to
-    the sequential paper-style loop.
+    the sequential paper-style loop.  ``on_step(t, W)`` (host-side, W an
+    (S, DIM) np array of the post-projection iterates) is invoked after
+    every update — tests use it to check the constraint invariants.
     """
     like = template or Budgets.default()
     if cfg.grad_mode == "fd":
-        return _optimize_sequential(objective, cfg, like)
+        return _optimize_sequential(objective, cfg, like, on_step=on_step)
     try:
-        return _optimize_batched(objective, cfg, like)
+        return _optimize_batched(objective, cfg, like, on_step=on_step)
     except (jax.errors.TracerArrayConversionError,
             jax.errors.ConcretizationTypeError, TypeError):
         # objective not jax-traceable (true black box): paper-style FD loop
         return _optimize_sequential(
-            objective, dataclasses.replace(cfg, grad_mode="fd"), like)
+            objective, dataclasses.replace(cfg, grad_mode="fd"), like,
+            on_step=on_step)
 
 
 def rank_strategies(tech: TechConfig, graph: ComputeGraph,

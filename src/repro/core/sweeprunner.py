@@ -52,6 +52,24 @@ from repro.core.roofline import PPEConfig
 SPEC_VERSION = 1
 
 
+def _iter_jsonl(path: str):
+    """Parsed records of a JSONL file, skipping blank lines and the
+    crash-torn tail line an interrupted writer can leave behind.  THE one
+    reader shared by `read_results`, resume compaction, and `load_sweep`
+    — torn-line semantics must not diverge between them."""
+    if not os.path.exists(path):
+        return
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                yield json.loads(line)
+            except json.JSONDecodeError:
+                continue
+
+
 def json_safe(obj):
     """Replace non-finite floats with None so the streamed JSONL stays
     RFC-8259 valid (json.dumps would otherwise emit the non-standard
@@ -172,9 +190,13 @@ class Chunk:
         return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
 
-def _scenario_for(spec: SweepSpec, cell_id: str) -> scenarios.Scenario:
+def scenario_for(spec: SweepSpec, cell_id: str) -> scenarios.Scenario:
+    """The scenario instance scoring one enumerated cell id of a spec."""
     return scenarios.get_scenario(spec.scenario, slo_s=spec.slo_s,
                                   cells=tuple(cell_id.split("+")))
+
+
+_scenario_for = scenario_for
 
 
 def enumerate_labels(spec: SweepSpec) -> List[PointLabel]:
@@ -248,7 +270,10 @@ def _hardware(spec: SweepSpec, logic: str, hbm: str, net: str,
     return hw
 
 
-def _resolve(spec: SweepSpec, lb: PointLabel) -> scenarios.DesignPoint:
+def resolve_label(spec: SweepSpec, lb: PointLabel) -> scenarios.DesignPoint:
+    """Resolve one enumerated label into a live `DesignPoint` (AGE'd
+    hardware memoized per process; used by chunk evaluation and by the
+    cooptimize refinement engine when re-seeding from sweep records)."""
     return scenarios.DesignPoint(
         arch=lb.arch, cell=lb.cell, mesh=lb.mesh, logic=lb.logic,
         hbm=lb.hbm, net=lb.net, scale=lb.scale,
@@ -272,7 +297,7 @@ def eval_labels(spec: SweepSpec, labels: Sequence[PointLabel],
     dps, scns, spans = [], [], []
     points: List[pathfinder.EvalPoint] = []
     for lb in labels:
-        dp = _resolve(spec, lb)
+        dp = resolve_label(spec, lb)
         scn = _scenario_for(spec, lb.cell)
         eps = scn.eval_points(dp)
         spans.append((len(points), len(points) + len(eps)))
@@ -391,20 +416,11 @@ class SweepRunner:
                 f"cannot resume: sweep spec changed "
                 f"(checkpoint {head.get('fingerprint')}, now {self._fp})")
         done: Dict[int, str] = {}
-        if os.path.exists(ckpt_path):
-            by_index = {c.index: c for c in chunks}
-            with open(ckpt_path) as fh:
-                for line in fh:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        rec = json.loads(line)
-                    except json.JSONDecodeError:
-                        continue            # torn tail line from a crash
-                    c = by_index.get(rec.get("chunk"))
-                    if c is not None and rec.get("hash") == c.hash(self._fp):
-                        done[c.index] = rec["hash"]
+        by_index = {c.index: c for c in chunks}
+        for rec in _iter_jsonl(ckpt_path):
+            c = by_index.get(rec.get("chunk"))
+            if c is not None and rec.get("hash") == c.hash(self._fp):
+                done[c.index] = rec["hash"]
         return done
 
     def _compact_results(self, res_path: str, done: Dict[int, str]):
@@ -413,29 +429,16 @@ class SweepRunner:
         if not os.path.exists(res_path):
             return
         tmp = res_path + ".tmp"
-        with open(res_path) as src, open(tmp, "w") as dst:
-            for line in src:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = json.loads(line)
-                except json.JSONDecodeError:
-                    continue
+        with open(tmp, "w") as dst:
+            for rec in _iter_jsonl(res_path):
                 if rec.get("chunk") in done:
-                    dst.write(line + "\n")
+                    dst.write(json.dumps(rec) + "\n")
         os.replace(tmp, res_path)
 
     def read_results(self) -> List[Dict]:
         """All records currently streamed to results.jsonl."""
         _, res_path, _ = self._paths()
-        out = []
-        with open(res_path) as fh:
-            for line in fh:
-                line = line.strip()
-                if line:
-                    out.append(json.loads(line))
-        return out
+        return list(_iter_jsonl(res_path))
 
     # -- execution --------------------------------------------------------
     def run(self, resume: bool = False, max_chunks: Optional[int] = None,
@@ -558,6 +561,36 @@ LABEL_FIELDS = ("arch", "cell", "mesh", "logic", "hbm", "net", "scale",
                 "strategy", "devices")
 
 
+def label_from_record(rec: Dict) -> PointLabel:
+    """Rebuild the enumerated `PointLabel` of one result record (the
+    inverse of `DesignPoint.label_fields`); `repro.core.cooptimize` uses
+    this to re-resolve frontier records into live design points."""
+    return PointLabel(
+        arch=str(rec["arch"]), cell=str(rec["cell"]),
+        mesh=tuple(int(x) for x in str(rec["mesh"]).split("x")),
+        logic=str(rec["logic"]), hbm=str(rec["hbm"]), net=str(rec["net"]),
+        scale=float(rec["scale"]), strategy=str(rec["strategy"]))
+
+
+def load_sweep(out_dir: str) -> Tuple[SweepSpec, List[Dict]]:
+    """Load a checkpointed sweep's (spec, finished-chunk records).
+
+    Only rows belonging to hash-verified finished chunks are returned (a
+    crash-torn partial chunk is dropped exactly as `run(resume=True)`
+    would), so consumers like ``pathfind cooptimize --from DIR`` seed from
+    already-scored points with zero re-evaluation.
+    """
+    runner = SweepRunner.from_dir(out_dir, backend="serial")
+    spec_path, res_path, ckpt_path = runner._paths()
+    chunks = make_chunks(enumerate_labels(runner.spec),
+                         runner.spec.chunk_size)
+    done = runner._load_done(spec_path, ckpt_path, chunks)
+    records = [{k: v for k, v in rec.items() if k != "chunk"}
+               for rec in _iter_jsonl(res_path)
+               if rec.get("chunk") in done]
+    return runner.spec, records
+
+
 def csv_fields(scenario: scenarios.Scenario) -> Tuple[str, ...]:
     return LABEL_FIELDS + tuple(scenario.fields)
 
@@ -592,6 +625,12 @@ def pareto_records(records: Sequence[Dict],
     against the running frontier, which transitivity makes sufficient), so
     runner-scale record sets (10^4-10^6 points) do not pay the O(n^2)
     pure-Python loop of `pathfinder.pareto_front`.
+
+    Tie semantics: records exactly equal on ALL objectives do not dominate
+    each other — every copy of a non-dominated point is kept, and the
+    result order (input order) is deterministic regardless of how the
+    lexsort breaks ties.  Regression tests pin this contract to
+    `pathfinder.pareto_front`.
     """
     def objvals(r) -> Optional[List[float]]:
         try:

@@ -142,13 +142,26 @@ class TechConfig:
 
 # ---------------------------------------------------------------------------
 # Voltage/frequency scaling (paper §4.4: "standard V-F-P scaling methodology")
+#
+# `freq_at_voltage` / `dynamic_energy_scale` are traceable (jnp inputs OK):
+# the cross-stack refinement engine (repro.core.cooptimize) differentiates
+# through them when its continuous DVFS knob rides along the SOE budget
+# vector.  `solve_voltage_for_power` is the host-side inverse (bisection)
+# used when a refined operating point is re-scored discretely.
 # ---------------------------------------------------------------------------
 
 
-def freq_at_voltage(v: float, tech_vnom: float, tech_fnom: float,
-                    vth: float) -> float:
-    """Alpha-power-law (alpha=1) frequency model: f ∝ (V - Vth)."""
-    return tech_fnom * max(v - vth, 0.0) / max(tech_vnom - vth, 1e-9)
+def freq_at_voltage(v, tech_vnom: float, tech_fnom: float, vth: float):
+    """Alpha-power-law (alpha=1) frequency model: f ∝ (V - Vth).
+
+    Python floats in -> float out; jnp tracers in -> jnp scalar out.
+    """
+    headroom = v - vth
+    denom = max(tech_vnom - vth, 1e-9)
+    if isinstance(headroom, (int, float)):
+        return tech_fnom * max(headroom, 0.0) / denom
+    import jax.numpy as jnp
+    return tech_fnom * jnp.maximum(headroom, 0.0) / denom
 
 
 def dynamic_energy_scale(v: float, vnom: float) -> float:

@@ -41,6 +41,18 @@ Subcommands:
               PYTHONPATH=src python -m repro.pathfind soe \
                   --arch qwen1.5-0.5b --cell train_4k --devices 64 \
                   --steps 10 --starts 4
+
+  cooptimize  cross-stack sweep -> refine: load a checkpointed sweep's
+          Pareto frontier and run batched gradient refinement around each
+          frontier point, jointly over continuous technology knobs (DVFS
+          voltage, HBM bandwidth/capacity scaling), the hardware budget
+          vector (eq.-6 SOE update), and the discrete strategy/mesh axis
+          (ranked from the sweep's own records — scored points are never
+          re-evaluated).  Refined records stream to DIR/refined.jsonl in
+          the sweep's JSONL schema:
+
+              PYTHONPATH=src python -m repro.pathfind cooptimize \
+                  --from sweeps/serve --top-k 4 --steps 24
 """
 
 from __future__ import annotations
@@ -128,6 +140,30 @@ def _parser() -> argparse.ArgumentParser:
     pl.add_argument("--arch", required=True)
     pl.add_argument("--cell", required=True)
     pl.add_argument("--mesh", type=_mesh, required=True)
+
+    co = sub.add_parser("cooptimize",
+                        help="sweep -> refine cross-stack co-optimization")
+    co.add_argument("--from", dest="from_dir", required=True, metavar="DIR",
+                    help="checkpointed sweep directory (spec.json + "
+                         "results.jsonl); seeds are read, never re-scored")
+    co.add_argument("--scenario", default=None,
+                    help="must match the sweep's scenario if given "
+                         "(the spec in DIR is authoritative)")
+    co.add_argument("--top-k", type=int, default=4,
+                    help="frontier points to refine (default 4)")
+    co.add_argument("--candidates", type=int, default=2,
+                    help="discrete (mesh, strategy) candidates per seed, "
+                         "ranked from the sweep's own records (default 2)")
+    co.add_argument("--steps", type=int, default=24,
+                    help="refinement GD steps (default 24)")
+    co.add_argument("--starts", type=int, default=4,
+                    help="multi-start batch size (default 4)")
+    co.add_argument("--lr", type=float, default=0.05)
+    co.add_argument("--seed", type=int, default=0)
+    co.add_argument("--out", default=None, metavar="FILE",
+                    help="refined-records JSONL path "
+                         "(default DIR/refined.jsonl)")
+    co.add_argument("--csv", default=None, help="also write CSV here")
 
     so = sub.add_parser("soe", help="strategy x budget co-optimization")
     so.add_argument("--arch", required=True)
@@ -275,6 +311,48 @@ def _cmd_sweep_runner(args) -> int:
     return 0
 
 
+def _cmd_cooptimize(args) -> int:
+    """Sweep -> refine pipeline (repro.core.cooptimize)."""
+    import os
+
+    from repro.core import cooptimize, scenarios, sweeprunner
+
+    spec, records = sweeprunner.load_sweep(args.from_dir)
+    if args.scenario is not None and args.scenario != spec.scenario:
+        print(f"error: --scenario {args.scenario} contradicts the sweep "
+              f"spec in {args.from_dir} (scenario={spec.scenario}); the "
+              f"spec is authoritative — drop the flag", file=sys.stderr)
+        return 2
+    cfg = cooptimize.RefineConfig(
+        top_k=args.top_k, candidates_per_seed=args.candidates,
+        steps=args.steps, starts=args.starts, lr=args.lr, seed=args.seed)
+    out_path = args.out or os.path.join(args.from_dir, "refined.jsonl")
+    stats = cooptimize.refine_sweep((spec, records), cfg=cfg,
+                                    out_path=out_path, verbose=False)
+    scn = scenarios.get_scenario(spec.scenario, slo_s=spec.slo_s,
+                                 cells=spec.cells)
+    csv_text = sweeprunner.to_csv(stats.records, scn)
+    print(csv_text)
+    if args.csv:
+        with open(args.csv, "w") as fh:
+            fh.write(csv_text + "\n")
+        print(f"# wrote {len(stats.records)} refined points to {args.csv}",
+              file=sys.stderr)
+    print(f"# cooptimize[{stats.scenario}]: {stats.n_records} sweep "
+          f"records -> frontier {stats.n_frontier}; refined "
+          f"{stats.n_candidates} candidates around {stats.n_seeds} seeds "
+          f"({stats.n_objective_evals} objective evals, "
+          f"{stats.n_unimproved} unimproved) in {stats.elapsed_s:.1f}s",
+          file=sys.stderr)
+    print(f"# {stats.n_dominating}/{stats.n_refined} refined points "
+          f"dominate >=1 sweep frontier point; refined records -> "
+          f"{stats.out_path}", file=sys.stderr)
+    if stats.n_refined and not stats.n_dominating:
+        print("# warning: no refined point dominates the sweep frontier "
+              "(try more --steps/--starts)", file=sys.stderr)
+    return 0
+
+
 def _cmd_plan(args) -> int:
     from repro.configs.base import SHAPE_CELLS, get_config
     from repro.core import planner
@@ -317,7 +395,8 @@ def main(argv=None) -> int:
     args = _parser().parse_args(argv)
     try:
         return {"sweep": _cmd_sweep, "plan": _cmd_plan,
-                "soe": _cmd_soe}[args.cmd](args)
+                "soe": _cmd_soe,
+                "cooptimize": _cmd_cooptimize}[args.cmd](args)
     except ModuleNotFoundError as e:
         print(f"error: unknown arch (no config module): {e.name}",
               file=sys.stderr)

@@ -1,0 +1,286 @@
+"""Cross-stack co-optimization engine tests (ISSUE-3 tentpole).
+
+Covers: the technology-knob transform (identity at nominal, DVFS/HBM
+scaling, power-feasibility clamp via `solve_voltage_for_power`), the
+sweep -> refine pipeline (refined records dominate the sweep frontier,
+stream in the sweep JSONL schema, compose with `pareto_records`), the
+zero-re-evaluation contract (seeds and unimproved candidates are never
+re-scored), and the `load_sweep` / `label_from_record` loading API.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import age, cooptimize, pathfinder, scenarios, sweeprunner, \
+    techlib
+from repro.core.age import Budgets
+from repro.core.cooptimize import RefineConfig
+from repro.core.sweeprunner import SweepRunner, SweepSpec
+
+SPEC = SweepSpec(arches=("qwen1.5-0.5b",), mesh_shapes=((2, 2), (4, 4)),
+                 scenario="train", logic_nodes=("N7",), n_tilings=4,
+                 chunk_size=8)
+TECH = techlib.make_tech_config("N7", "HBM2E", "IB-NDR-X8")
+CFG = RefineConfig(top_k=2, candidates_per_seed=1, steps=10, starts=2)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def sweep_dir(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("sweep"))
+    SweepRunner(SPEC, out_dir=d, backend="serial").run()
+    return d
+
+
+@pytest.fixture(scope="module")
+def refined(sweep_dir):
+    return cooptimize.refine_sweep(sweep_dir, CFG)
+
+
+# ------------------------------------------------------- technology knobs
+def test_apply_tech_knobs_identity_at_nominal():
+    arch = age.generate(TECH, Budgets.default())
+    v, sb, sc = cooptimize.nominal_knobs(TECH)
+    out = cooptimize.apply_tech_knobs(arch, TECH, v, sb, sc)
+    np.testing.assert_allclose(float(out.compute_throughput),
+                               float(arch.compute_throughput), rtol=1e-6)
+    np.testing.assert_allclose(float(out.dram_bw), float(arch.dram_bw),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(out.dram_capacity),
+                               float(arch.dram_capacity), rtol=1e-6)
+
+
+def test_apply_tech_knobs_scaling_directions():
+    arch = age.generate(TECH, Budgets.default())
+    c = TECH.compute
+    hi = cooptimize.apply_tech_knobs(arch, TECH, c.maximum_voltage, 1.5, 2.0)
+    lo = cooptimize.apply_tech_knobs(arch, TECH, c.minimum_voltage, 0.5, 0.5)
+    assert float(hi.compute_throughput) > float(arch.compute_throughput) \
+        > float(lo.compute_throughput)
+    np.testing.assert_allclose(float(hi.dram_bw),
+                               1.5 * float(arch.dram_bw), rtol=1e-6)
+    np.testing.assert_allclose(float(hi.dram_capacity),
+                               2.0 * float(arch.dram_capacity), rtol=1e-6)
+    # DVFS follows the alpha-power law: f ∝ (V - Vth)
+    want = techlib.freq_at_voltage(c.maximum_voltage, c.nominal_voltage,
+                                   1.0, c.threshold_voltage)
+    np.testing.assert_allclose(
+        float(hi.compute_throughput) / float(arch.compute_throughput),
+        want, rtol=1e-6)
+
+
+def test_power_excess_zero_at_nominal_positive_when_overclocked():
+    w = Budgets.default().as_vector()
+    v, sb, sc = cooptimize.nominal_knobs(TECH)
+    assert float(cooptimize.power_excess(w, TECH, v, sb, sc)) == 0.0
+    over = float(cooptimize.power_excess(
+        w, TECH, TECH.compute.maximum_voltage, 2.0, 2.0))
+    assert over > 0.0
+    # spending the simplex's unused mass is free: shrink every power frac
+    # so the headroom covers a mild overclock
+    b = Budgets.default()
+    small = Budgets(area_frac=b.area_frac,
+                    power_frac={k: v * 0.25
+                                for k, v in b.power_frac.items()},
+                    perim_frac=b.perim_frac)
+    mild = float(cooptimize.power_excess(
+        small.as_vector(), TECH, TECH.compute.nominal_voltage + 0.02,
+        1.05, 1.0))
+    assert mild == 0.0
+
+
+def test_feasible_voltage_clamps_to_power_budget():
+    c = TECH.compute
+    b = Budgets.default()
+    # default budgets: power simplex has headroom (sums to 1) -> nominal
+    # request passes through, absurd request is clamped below Vmax
+    assert cooptimize.feasible_voltage(TECH, b, c.nominal_voltage) \
+        == pytest.approx(c.nominal_voltage)
+    full = Budgets(area_frac=b.area_frac,
+                   power_frac={**b.power_frac,
+                               "core": 1.0 - sum(v for k, v in
+                                                 b.power_frac.items()
+                                                 if k != "core")},
+                   perim_frac=b.perim_frac)
+    v = cooptimize.feasible_voltage(TECH, full, c.maximum_voltage)
+    assert v == pytest.approx(c.nominal_voltage, abs=1e-3)
+    # free headroom affords real overclock
+    loose = Budgets(area_frac=b.area_frac,
+                    power_frac={k: v * 0.5
+                                for k, v in b.power_frac.items()},
+                    perim_frac=b.perim_frac)
+    v2 = cooptimize.feasible_voltage(TECH, loose, c.maximum_voltage)
+    assert c.nominal_voltage < v2 <= c.maximum_voltage
+
+
+def test_feasible_knobs_never_overdraw_power():
+    """Regression: the realized knobs must not spend the power headroom
+    twice (once on HBM, once on the core) — with zero headroom the joint
+    clamp shrinks the HBM bandwidth scale to pay for capacity and refuses
+    any overclock, keeping total relative power within budget."""
+    b = Budgets.default()               # power simplex sums to 1.0 exactly
+    c = TECH.compute
+    v, s_bw, s_cap = cooptimize.feasible_knobs(TECH, b, c.maximum_voltage,
+                                               2.0, 2.0)
+    f_ratio = techlib.freq_at_voltage(v, c.nominal_voltage, 1.0,
+                                      c.threshold_voltage)
+    core_scale = techlib.dynamic_energy_scale(v, c.nominal_voltage) * f_ratio
+    dram_scale = 0.8 * s_bw + 0.2 * s_cap
+    pf = b.power_frac
+    total = (sum(pf.values()) + pf["core"] * (core_scale - 1.0)
+             + pf["dram"] * (dram_scale - 1.0))
+    assert total <= 1.0 + 1e-5
+    assert v <= c.nominal_voltage + 1e-4      # no headroom -> no overclock
+    assert s_bw < 2.0                          # bandwidth paid for capacity
+    # identity request stays the identity
+    assert cooptimize.feasible_knobs(TECH, b, c.nominal_voltage, 1.0, 1.0) \
+        == pytest.approx((c.nominal_voltage, 1.0, 1.0))
+
+
+def test_knob_unit_roundtrip():
+    cfg = RefineConfig()
+    vals = (0.7, 1.3, 0.8)
+    u = cooptimize.unit_from_knobs(vals, TECH, cfg)
+    back = cooptimize.knobs_from_unit(u, TECH, cfg)
+    np.testing.assert_allclose(back, vals, rtol=1e-5)
+
+
+# ------------------------------------------------------- sweep -> refine
+def test_refined_frontier_dominates_sweep_frontier(refined):
+    assert refined.n_refined >= 1
+    assert refined.n_dominating >= 1
+    scn = scenarios.get_scenario("train")
+    for rec in refined.records:
+        if not rec["dominates_seed"]:
+            continue
+        rv = scn.objective_values(rec)
+        assert any(cooptimize.dominates(rv, scn.objective_values(s))
+                   for s in refined.frontier)
+
+
+def test_refined_records_keep_sweep_schema_and_stream(refined):
+    scn = scenarios.get_scenario("train")
+    base_fields = set(sweeprunner.LABEL_FIELDS) | set(scn.fields) | {"key"}
+    for rec in refined.records:
+        assert base_fields <= set(rec)
+        assert rec["refined"] is True
+        assert set(rec["knobs"]) == set(cooptimize.KNOBS)
+        assert rec["seed_key"] in {r["key"] for r in refined.frontier}
+    # streamed JSONL round-trips and composes with pareto_records
+    lines = [json.loads(ln) for ln in open(refined.out_path)]
+    assert [r["key"] for r in lines] == [r["key"] for r in refined.records]
+    joint = sweeprunner.pareto_records(refined.frontier + lines,
+                                       scn.objectives)
+    assert any(r.get("refined") for r in joint)
+    # the CSV view works unchanged on refined records
+    csv = sweeprunner.to_csv(refined.records, scn)
+    assert len(csv.splitlines()) == len(refined.records) + 1
+
+
+def test_refinement_never_reevaluates_scored_points(sweep_dir, monkeypatch):
+    """The zero-re-evaluation contract: every hardware point handed to the
+    evaluator during refinement is novel (not the seed hardware any sweep
+    record was scored on)."""
+    spec, records = sweeprunner.load_sweep(sweep_dir)
+    seed_hw = {pathfinder.pack_hw(sweeprunner._hardware(
+        spec, lb.logic, lb.hbm, lb.net, lb.scale)).tobytes()
+        for lb in (sweeprunner.label_from_record(r) for r in records)}
+    evaluated = []
+    real = pathfinder.evaluate_points
+
+    def spy(points, **kw):
+        evaluated.extend(pathfinder.pack_hw(p.arch).tobytes()
+                         for p in points)
+        return real(points, **kw)
+
+    monkeypatch.setattr(cooptimize.pathfinder, "evaluate_points", spy)
+    res = cooptimize.refine_sweep(
+        sweep_dir, dataclasses.replace(CFG, top_k=1, steps=6),
+        out_path=os.devnull)
+    assert res.n_refined + res.n_unimproved == res.n_candidates
+    assert evaluated, "refined points should be re-scored"
+    assert not (set(evaluated) & seed_hw), \
+        "refinement re-evaluated an already-scored sweep hardware point"
+
+
+def test_unimproved_candidates_are_not_rescored(sweep_dir, tmp_path):
+    out = str(tmp_path / "refined.jsonl")
+    res = cooptimize.refine_sweep(
+        sweep_dir, dataclasses.replace(CFG, steps=0), out_path=out)
+    assert res.n_refined == 0
+    assert res.n_unimproved == res.n_candidates > 0
+    assert open(out).read() == ""
+
+
+def test_refine_accepts_in_memory_records():
+    stats = SweepRunner(SPEC, backend="serial").run()
+    res = cooptimize.refine_sweep(
+        (SPEC, stats.records),
+        dataclasses.replace(CFG, top_k=1, steps=6))
+    assert res.out_path is None
+    assert res.n_candidates >= 1
+
+
+# -------------------------------------------------------- loading helpers
+def test_load_sweep_returns_only_finished_chunks(sweep_dir, tmp_path):
+    import shutil
+    d = str(tmp_path / "sweep")
+    shutil.copytree(sweep_dir, d)
+    # crash-torn rows: appended results without a checkpoint line
+    with open(os.path.join(d, "results.jsonl"), "a") as fh:
+        fh.write(json.dumps({"chunk": 99, "key": "torn"}) + "\n")
+        fh.write("{torn mid-wri")
+    spec, records = sweeprunner.load_sweep(d)
+    assert spec == SPEC
+    assert sorted(r["key"] for r in records) == sorted(
+        lb.key() for lb in sweeprunner.enumerate_labels(SPEC))
+
+
+def test_label_from_record_roundtrip():
+    for lb in sweeprunner.enumerate_labels(SPEC):
+        dp = sweeprunner.resolve_label(SPEC, lb)
+        rec = dp.label_fields()
+        back = sweeprunner.label_from_record(rec)
+        assert back == lb
+        assert back.key() == lb.key()
+
+
+# ----------------------------------------------------------------- CLI
+@pytest.mark.slow
+def test_cli_sweep_then_cooptimize(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    out = str(tmp_path / "sweep")
+    sw = subprocess.run(
+        [sys.executable, "-m", "repro.pathfind", "sweep",
+         "--arch", "qwen1.5-0.5b", "--mesh", "2x2", "--tilings", "4",
+         "--backend", "serial", "--out", out],
+        env=env, capture_output=True, text=True, cwd=REPO, timeout=420)
+    assert sw.returncode == 0, sw.stderr
+    # a contradicting --scenario must be refused (the spec in DIR rules)
+    refused = subprocess.run(
+        [sys.executable, "-m", "repro.pathfind", "cooptimize",
+         "--from", out, "--scenario", "serving"],
+        env=env, capture_output=True, text=True, cwd=REPO, timeout=420)
+    assert refused.returncode == 2
+    assert "--scenario" in refused.stderr
+    co = subprocess.run(
+        [sys.executable, "-m", "repro.pathfind", "cooptimize",
+         "--from", out, "--top-k", "1", "--candidates", "1",
+         "--steps", "10", "--starts", "2"],
+        env=env, capture_output=True, text=True, cwd=REPO, timeout=560)
+    assert co.returncode == 0, co.stderr
+    assert "cooptimize[train]" in co.stderr
+    recs = [json.loads(ln)
+            for ln in open(os.path.join(out, "refined.jsonl"))]
+    assert recs and all(r["refined"] for r in recs)
+    assert co.stdout.splitlines()[0].startswith("arch,cell,mesh,")

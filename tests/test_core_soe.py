@@ -32,6 +32,41 @@ def test_projection_respects_simplex():
     assert float(jnp.min(p)) >= 1e-3 - 1e-6
 
 
+def test_initial_starts_all_respect_constraints():
+    """Regression: Dirichlet starts used to be returned unprojected, so a
+    draw with a tiny component began below the min_frac floor that start 0
+    (and every projected iterate) honours."""
+    cfg = soe.SOEConfig(starts=16, seed=123, min_frac=1e-3)
+    starts = soe._initial_starts(cfg, Budgets.default())
+    assert len(starts) == 16
+    nc = soe._NC
+    for w in starts:
+        assert float(jnp.min(w)) >= cfg.min_frac - 1e-6
+        assert float(jnp.sum(w[:nc])) <= 1.0 + 1e-5
+        assert float(jnp.sum(w[nc:2 * nc])) <= 1.0 + 1e-5
+        assert float(jnp.sum(w[2 * nc:])) <= 1.0 + 1e-5
+
+
+def test_eq6_update_projects_every_start():
+    import functools
+    rng = np.random.default_rng(7)
+    S = 5
+    W = jnp.asarray(rng.uniform(0.0, 1.0, (S, soe._DIM)), jnp.float32)
+    M = jnp.asarray(rng.uniform(0.0, 1.0, (S, soe._DIM)), jnp.float32)
+    G = jnp.asarray(rng.normal(0.0, 3.0, (S, soe._DIM)), jnp.float32)
+    G = G.at[1].set(jnp.nan)                    # poisoned gradient row
+    proj = jax.vmap(functools.partial(soe._project_simplexes,
+                                      min_frac=1e-3))
+    W2, M2 = soe.eq6_update(W, M, G, lr=0.05, beta=0.7, project=proj)
+    nc = soe._NC
+    assert bool(jnp.all(jnp.isfinite(W2)))
+    for s in range(S):
+        assert float(jnp.min(W2[s])) >= 1e-3 - 1e-6
+        assert float(jnp.sum(W2[s, :nc])) <= 1.0 + 1e-5
+        assert float(jnp.sum(W2[s, nc:2 * nc])) <= 1.0 + 1e-5
+        assert float(jnp.sum(W2[s, 2 * nc:])) <= 1.0 + 1e-5
+
+
 def test_objective_differentiable(objective):
     w = Budgets.default().as_vector()
     val, g = jax.value_and_grad(objective)(w)

@@ -134,6 +134,49 @@ def test_graph_fingerprint_stable_and_sensitive():
     assert g1.fingerprint() != g3.fingerprint()
 
 
+# ------------------------------------------------------------ tracer guard
+def test_gemm_tiling_path_traces_under_jit(toy):
+    """The roofline cache guard must recognize tracers on current JAX
+    (`jax.core.Tracer` is deprecated/moved): tracing the tiling path under
+    `jax.jit` must neither crash nor poison the host-side GEMM cache."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import roofline
+    _, _, archs = toy
+    template = archs[0]
+    roofline.clear_cache()
+
+    def f(v):
+        return roofline.gemm_time(pathfinder.unpack_hw(template, v),
+                                  512, 384, 256, cfg=PPE)
+
+    v = jnp.asarray(pathfinder.pack_hw(template))
+    jitted = float(jax.jit(f)(v))
+    assert len(roofline._GEMM_CACHE) == 0      # tracers never cached
+    eager = float(f(v))                         # concrete: cached
+    assert len(roofline._GEMM_CACHE) == 1
+    np.testing.assert_allclose(jitted, eager, rtol=1e-5)
+    g = jax.grad(f)(v)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_is_tracer_detects_tracers_and_concretes():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import roofline
+    seen = []
+
+    def probe(x):
+        seen.append(roofline.is_tracer(x))
+        return x * 2.0
+
+    jax.jit(probe)(jnp.asarray(1.0))
+    assert seen == [True]
+    assert not roofline.is_tracer(jnp.ones(3))
+    assert not roofline.is_tracer(1.0)
+    assert not roofline.is_tracer(np.float32(2.0))
+
+
 # ----------------------------------------------------------------- pareto
 def test_pareto_front_toy():
     pts = [(1.0, 5.0), (2.0, 2.0), (5.0, 1.0),     # frontier
@@ -146,6 +189,29 @@ def test_pareto_front_keeps_duplicates_of_nondominated():
     pts = [(1.0, 1.0), (1.0, 1.0), (2.0, 2.0)]
     front = pathfinder.pareto_front(pts, [lambda p: p[0], lambda p: p[1]])
     assert front == [(1.0, 1.0), (1.0, 1.0)]
+
+
+def test_pareto_front_exact_ties_order_independent():
+    """Points equal on ALL objectives never dominate each other: every
+    copy survives regardless of input order (deterministic frontier)."""
+    import itertools
+    base = [(1.0, 5.0), (1.0, 5.0), (5.0, 1.0), (3.0, 3.0), (3.0, 3.0),
+            (4.0, 4.0)]
+    objs = [lambda p: p[0], lambda p: p[1]]
+    for perm in itertools.permutations(range(len(base))):
+        pts = [base[i] for i in perm]
+        front = pathfinder.pareto_front(pts, objs)
+        assert sorted(front) == sorted(
+            [(1.0, 5.0), (1.0, 5.0), (5.0, 1.0), (3.0, 3.0), (3.0, 3.0)])
+        # input order preserved
+        assert front == [p for p in pts if p != (4.0, 4.0)]
+
+
+def test_pareto_front_excludes_nonfinite_points():
+    pts = [(float("nan"), 1.0), (1.0, float("inf")), (2.0, 2.0),
+           (3.0, 3.0)]
+    front = pathfinder.pareto_front(pts, [lambda p: p[0], lambda p: p[1]])
+    assert front == [(2.0, 2.0)]
 
 
 def test_sweep_toy_cross_product_and_frontier():

@@ -75,6 +75,36 @@ def test_allreduce_geq_reducescatter(size, p):
     assert ar >= rs * 1.8                      # ring AR ~= RS + AG
 
 
+@given(seed=st.integers(0, 10_000), mode=st.sampled_from(["auto", "fd"]),
+       lr=st.floats(0.01, 0.5))
+@settings(max_examples=8, deadline=None)
+def test_soe_iterates_stay_in_constraint_set(seed, mode, lr):
+    """SOE constraint invariant (paper §7): after EVERY eq.-6 update, all
+    three simplex constraints (ΣA <= 1, ΣP <= 1, ΣR <= 1) and the
+    min_frac floor hold for every start — in both the batched "auto" path
+    and the paper-style "fd" fallback."""
+    from repro.core import soe
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.uniform(0.0, 1.0, soe._DIM), jnp.float32)
+
+    def objective(w):
+        return jnp.sum((jnp.asarray(w) - target) ** 2)
+
+    seen = []
+    soe.optimize(objective,
+                 soe.SOEConfig(steps=4, starts=3, seed=seed, lr=lr,
+                               grad_mode=mode, min_frac=1e-3),
+                 on_step=lambda t, W: seen.append(np.array(W)))
+    assert seen, "on_step never fired"
+    nc = soe._NC
+    for W in seen:
+        for w in W:
+            assert w.min() >= 1e-3 - 1e-6
+            assert w[:nc].sum() <= 1.0 + 1e-4
+            assert w[nc:2 * nc].sum() <= 1.0 + 1e-4
+            assert w[2 * nc:].sum() <= 1.0 + 1e-4
+
+
 @given(data=st.data())
 @settings(max_examples=15, deadline=None)
 def test_budget_projection_idempotent_and_feasible(data):

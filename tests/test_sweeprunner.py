@@ -225,6 +225,30 @@ def test_csv_and_pareto_helpers():
     assert [r["key"] for r in front] == [r["key"] for r in ref]
 
 
+def test_pareto_records_exact_ties_kept_and_order_independent():
+    """Regression: records equal on ALL objectives must not dominate each
+    other — every copy of a non-dominated point survives, in input order,
+    however the records are permuted (deterministic frontier)."""
+    import itertools
+    base = [{"key": "a1", "x": 1.0, "y": 5.0},
+            {"key": "a2", "x": 1.0, "y": 5.0},   # exact duplicate of a1
+            {"key": "b", "x": 5.0, "y": 1.0},
+            {"key": "c1", "x": 3.0, "y": 3.0},
+            {"key": "c2", "x": 3.0, "y": 3.0},   # exact duplicate of c1
+            {"key": "dom", "x": 4.0, "y": 4.0}]  # dominated by c1/c2
+    for perm in itertools.permutations(range(len(base))):
+        rows = [base[i] for i in perm]
+        front = sweeprunner.pareto_records(rows, ("x", "y"))
+        assert sorted(r["key"] for r in front) == \
+            ["a1", "a2", "b", "c1", "c2"]
+        assert [r["key"] for r in front] == \
+            [r["key"] for r in rows if r["key"] != "dom"]
+        # the skyline agrees with the O(n^2) reference on ties
+        ref = pathfinder.pareto_front(rows,
+                                      [lambda r: r["x"], lambda r: r["y"]])
+        assert [r["key"] for r in front] == [r["key"] for r in ref]
+
+
 def test_pareto_records_excludes_infeasible_points():
     rows = [
         {"key": "a", "ttft_s": 1.0, "cost": float("inf"),
