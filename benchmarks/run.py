@@ -116,6 +116,16 @@ def _bench_cooptimize() -> BenchResult:
         f",gain={v['best_gain']:.2f}x" for s, v in r.items()), r)
 
 
+def _bench_calibration() -> BenchResult:
+    """Measured GEMM calibration -> strict MRE gain (ISSUE-4 tentpole)."""
+    from benchmarks import calibration_gain
+    r = calibration_gain.main(verbose=False)
+    return (f"mre={r['mre_uncalibrated'] * 100:.0f}%->"
+            f"{r['mre_calibrated'] * 100:.0f}%"
+            f"({r['mre_improvement']:.1f}x);"
+            f"corr={r['corr_calibrated']:.3f}"), r
+
+
 def _bench_crossflow_query() -> BenchResult:
     """Paper §8: CrossFlow query latency (ms .. 20 s on their machine)."""
     from repro.configs.base import SHAPE_CELLS, get_config
@@ -145,6 +155,7 @@ BENCHES: Dict[str, Callable[[], BenchResult]] = {
     "sweep_scale": _bench_sweep_scale,
     "sweep_shard": _bench_sweep_shard,
     "cooptimize_refine": _bench_cooptimize,
+    "calibration_gain": _bench_calibration,
     "crossflow_query_latency": _bench_crossflow_query,
     "roofline": _bench_roofline,
     "perf_variants": _bench_perf_variants,
@@ -182,6 +193,70 @@ def _write_json(json_dir: str, name: str, us: float, derived: str,
                    "ok": ok, "data": _jsonable(data)}, fh, indent=2)
 
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _current_pr_tag() -> str:
+    """Derive the trajectory tag from CHANGES.md (highest `PR N:` line),
+    so a full-suite run after a new PR lands in its own BENCH_<tag>.json
+    instead of silently overwriting the previous PR's committed entry."""
+    import re
+    path = os.path.join(REPO_ROOT, "CHANGES.md")
+    best = 0
+    try:
+        with open(path) as fh:
+            for line in fh:
+                m = re.match(r"PR (\d+):", line)
+                if m:
+                    best = max(best, int(m.group(1)))
+    except OSError:
+        pass
+    return f"PR{best}" if best else "dev"
+
+# headline ratio per benchmark: (result-dict path, trajectory label)
+_KEY_RATIOS = {
+    "fig6_gemm_validation": (("rel_err",), "fig6_rel_err"),
+    "fig8_lm_validation": (("rel_err",), "fig8_rel_err"),
+    "sweep_scale": (("speedup_warm",), "sweep_scale_speedup"),
+    "sweep_shard": (("speedup_vs_single",), "sweep_shard_speedup"),
+    "calibration_gain": (("mre_improvement",), "calibration_mre_gain"),
+}
+
+
+def _dig(data, path):
+    cur = data
+    for k in path:
+        if not isinstance(cur, dict) or k not in cur:
+            return None
+        cur = cur[k]
+    try:
+        return float(cur)
+    except (TypeError, ValueError):
+        return None
+
+
+def _write_trajectory(tag: str, rows: Dict[str, Dict]) -> str:
+    """Repo-root ``BENCH_<tag>.json``: suite timings + key speedup ratios
+    (the perf-trajectory entry per PR — per-bench JSONs under --json-dir
+    never land at the root, so without this the trajectory stays empty)."""
+    ratios = {}
+    for name, row in rows.items():
+        spec = _KEY_RATIOS.get(name)
+        if spec and row.get("data") is not None:
+            v = _dig(row["data"], spec[0])
+            if v is not None:
+                ratios[spec[1]] = v
+    entry = {"tag": tag,
+             "suite": {name: {"us_per_call": row["us_per_call"],
+                              "ok": row["ok"], "derived": row["derived"]}
+                       for name, row in rows.items()},
+             "ratios": ratios}
+    path = os.path.join(REPO_ROOT, f"BENCH_{tag}.json")
+    with open(path, "w") as fh:
+        json.dump(_jsonable(entry), fh, indent=2, sort_keys=True)
+    return path
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="benchmarks.run", description=__doc__)
     ap.add_argument("names", nargs="*",
@@ -189,10 +264,21 @@ def main(argv=None) -> int:
     ap.add_argument("--json-dir", default=None,
                     help="also write a machine-readable <name>.json per "
                          "benchmark into this directory")
+    ap.add_argument("--tag", default=None,
+                    help="perf-trajectory tag: the suite summary is "
+                         "written to the repo root as BENCH_<tag>.json. "
+                         "Default: the current PR from CHANGES.md when "
+                         "running the FULL suite, disabled for subset "
+                         "runs (so a one-benchmark check never clobbers "
+                         "the committed trajectory entry); --tag '' "
+                         "disables entirely")
     args = ap.parse_args(argv)
+    if args.tag is None:
+        args.tag = "" if args.names else _current_pr_tag()
     wanted = args.names or list(BENCHES)
     print("name,us_per_call,derived")
     failed = []
+    rows: Dict[str, Dict] = {}
     for name in wanted:
         keys = [k for k in BENCHES if k.startswith(name)] or [name]
         for key in keys:
@@ -210,8 +296,13 @@ def main(argv=None) -> int:
                 failed.append(key)
             dt = (time.perf_counter() - t0) * 1e6
             print(f"{key},{dt:.0f},{derived}", flush=True)
+            rows[key] = {"us_per_call": dt, "derived": derived, "ok": ok,
+                         "data": data}
             if args.json_dir:
                 _write_json(args.json_dir, key, dt, derived, ok, data)
+    if args.tag:
+        path = _write_trajectory(args.tag, rows)
+        print(f"# trajectory -> {path}", file=sys.stderr)
     if failed:
         # a raising benchmark must fail the CI smoke job, not just print
         print(f"FAILED: {','.join(failed)}", file=sys.stderr)

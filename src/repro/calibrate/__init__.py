@@ -1,0 +1,46 @@
+"""Measurement-driven calibration & validation (DeepFlow paper §8).
+
+The paper's credibility claim is validation against *measured* hardware;
+this package closes the techlib <- kernels loop for the repo:
+
+  microbench.py  times real executables already in the repo — jit'd GEMMs
+                 and the Pallas kernels, `bucketed_psum` collectives under
+                 forced multi-device shard_map, end-to-end train/prefill
+                 steps of the model families — streaming measurements to
+                 JSONL with the sweep runner's fingerprint/resume
+                 discipline;
+  fitting.py     treats techlib/PPE efficiency + overhead parameters as a
+                 batched vector and fits them to the measurements by
+                 multi-start gradient descent through the traced
+                 `roofline.gemm_time` / `simulate.predict` paths;
+  profiles.py    serialized calibration profiles (JSON) that the sweep /
+                 pathfind / cooptimize engines consume via ``--profile``;
+  report.py      paper-style correlation / mean-relative-error validation
+                 tables per kernel & model, plus drift detection against a
+                 stored baseline report.
+
+CLI: ``python -m repro.pathfind calibrate --out DIR`` and
+``python -m repro.pathfind validate --out DIR``; downstream consumption is
+``python -m repro.pathfind sweep --profile DIR/profile.json``.
+"""
+
+from repro.calibrate.fitting import (FitConfig, FitResult, PARAM_NAMES,
+                                     default_params, fit,
+                                     predict_measurements, scale_microarch)
+from repro.calibrate.microbench import (MeasureSpec, MicrobenchRunner,
+                                        default_spec, enumerate_points,
+                                        load_measurements)
+from repro.calibrate.profiles import (CalibrationProfile, apply_profile,
+                                      load_profile, ppe_with_profile,
+                                      save_profile)
+from repro.calibrate.report import (check_drift, format_report,
+                                    validation_report)
+
+__all__ = [
+    "CalibrationProfile", "FitConfig", "FitResult", "MeasureSpec",
+    "MicrobenchRunner", "PARAM_NAMES", "apply_profile", "check_drift",
+    "default_params", "default_spec", "enumerate_points", "fit",
+    "format_report", "load_measurements", "load_profile",
+    "ppe_with_profile", "predict_measurements", "save_profile",
+    "scale_microarch", "validation_report",
+]

@@ -235,12 +235,16 @@ def feasible_voltage(tech: TechConfig, budgets: Budgets,
 def make_refine_objective(tech: TechConfig, like: Budgets,
                           scn: scenarios.Scenario,
                           dp: scenarios.DesignPoint, ppe: PPEConfig,
-                          norms: Sequence[float], cfg: RefineConfig):
+                          norms: Sequence[float], cfg: RefineConfig,
+                          profile: Optional[Dict] = None):
     """f(theta) -> scalar: the differentiable cross-stack objective.
 
     Sums this scenario's continuous objectives, each normalized by the
     seed record's value (so multi-objective scenarios trade off at the
     seed's operating point), and multiplies in the power-excess penalty.
+    ``profile`` (a calibration-profile dict embedded in the sweep spec)
+    anchors every candidate MicroArch to measured efficiencies, so the
+    refinement optimizes the calibrated model, not the nominal one.
     """
     eps = scn.eval_points(dp)
     fold = scn.refine_objectives(dp)
@@ -252,6 +256,9 @@ def make_refine_objective(tech: TechConfig, like: Budgets,
         budgets = Budgets.from_vector(w, like)
         arch = age_lib.generate(tech, budgets, discrete=False)
         arch = apply_tech_knobs(arch, tech, v, s_bw, s_cap)
+        if profile is not None:
+            from repro.calibrate import profiles as profiles_lib
+            arch = profiles_lib.apply_profile(arch, profile)
         totals = [simulate.predict(arch, ep.graph, ep.strategy,
                                    system=ep.system, cfg=ppe,
                                    pod_bw=ep.pod_bw).total_s for ep in eps]
@@ -351,11 +358,12 @@ def refine_theta(objective, theta0s: np.ndarray, cfg: RefineConfig
 
 
 def realize_theta(tech: TechConfig, like: Budgets, theta: np.ndarray,
-                  cfg: RefineConfig):
+                  cfg: RefineConfig, profile: Optional[Dict] = None):
     """Re-materialize a refined theta as concrete hardware: discrete AGE
     (floors applied) + the knob transform, with the knobs jointly clamped
     to the power budget via `feasible_knobs`.  Returns (MicroArch,
-    Budgets, knob dict)."""
+    Budgets, knob dict).  ``profile`` applies the same calibration the
+    continuous objective optimized, so re-scoring stays consistent."""
     w = np.asarray(theta[:BUDGET_DIM], dtype=np.float64)
     budgets = Budgets.from_vector(w, like)
     v_req, s_bw, s_cap = knobs_from_unit(theta[BUDGET_DIM:], tech, cfg)
@@ -363,6 +371,9 @@ def realize_theta(tech: TechConfig, like: Budgets, theta: np.ndarray,
                                     float(s_bw), float(s_cap), cfg)
     arch = age_lib.generate(tech, budgets, discrete=True)
     arch = apply_tech_knobs(arch, tech, v, float(s_bw), float(s_cap))
+    if profile is not None:
+        from repro.calibrate import profiles as profiles_lib
+        arch = profiles_lib.apply_profile(arch, profile)
     knobs = {"voltage": float(v), "hbm_bw_scale": float(s_bw),
              "hbm_cap_scale": float(s_cap)}
     return arch, budgets, knobs
@@ -423,7 +434,7 @@ def refine_sweep(src: Union[str, Tuple[SweepSpec, List[Dict]]],
     frontier = sweeprunner.pareto_records(records, scn.objectives)
     seeds = sorted(frontier, key=lambda r: scn.objective_values(r))
     seeds = seeds[:max(cfg.top_k, 0)]
-    ppe = PPEConfig(n_tilings=spec.n_tilings)
+    ppe = sweeprunner.spec_ppe(spec)
     seed_vals = [scn.objective_values(r) for r in frontier]
 
     out_fh = None
@@ -456,7 +467,8 @@ def refine_sweep(src: Union[str, Tuple[SweepSpec, List[Dict]]],
                 norms = [float(cand[f])
                          for f in scn_pt.refine_objective_fields]
                 f = make_refine_objective(tech, like, scn_pt, dp, ppe,
-                                          norms, cfg)
+                                          norms, cfg,
+                                          profile=spec.profile)
                 theta0s = initial_thetas(tech, like, cfg)
                 theta, val, evals = refine_theta(f, theta0s, cfg)
                 n_evals += evals
@@ -466,7 +478,8 @@ def refine_sweep(src: Union[str, Tuple[SweepSpec, List[Dict]]],
                     # re-evaluate an already-scored sweep point
                     n_unimproved += 1
                     continue
-                arch, budgets, knobs = realize_theta(tech, like, theta, cfg)
+                arch, budgets, knobs = realize_theta(tech, like, theta, cfg,
+                                                     profile=spec.profile)
                 dp_r = dataclasses.replace(dp, hw=arch)
                 rows = pathfinder.evaluate_points(scn_pt.eval_points(dp_r),
                                                   ppe=ppe)

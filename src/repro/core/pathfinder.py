@@ -610,13 +610,15 @@ def sweep(arches: Sequence[str], cells: Sequence[str],
           budgets: Optional[Budgets] = None,
           ppe: PPEConfig = PPEConfig(n_tilings=8),
           strategies_fn: Optional[Callable] = None,
-          cache: Optional[PredictionCache] = _PREDICTION_CACHE
-          ) -> SweepResult:
+          cache: Optional[PredictionCache] = _PREDICTION_CACHE,
+          profile=None) -> SweepResult:
     """Cross-product design-space sweep (the paper's §9 studies, batched).
 
     arches x cells define workload graphs, mesh_shapes define systems and
     candidate strategies, (logic, hbm, net) triples define AGE'd hardware.
     All hardware points sharing a skeleton are scored in one vmapped call.
+    ``profile`` (a `repro.calibrate` profile / dict / path) anchors every
+    hardware point and the PPE kernel overhead to measured efficiencies.
     """
     from repro.configs.base import SHAPE_CELLS, get_config
     from repro.core import lmgraph, techlib
@@ -624,13 +626,20 @@ def sweep(arches: Sequence[str], cells: Sequence[str],
 
     budgets = budgets or Budgets.default()
     strategies_fn = strategies_fn or _default_strategies
+    if profile is not None:
+        from repro.calibrate import profiles as profiles_lib
+        profile = profiles_lib.coerce(profile)
+        ppe = profiles_lib.ppe_with_profile(ppe, profile)
 
     tech_axis = list(itertools.product(logic_nodes, hbms, nets))
     hw_axis = []
     for logic, hbm, net in tech_axis:
         tech = techlib.make_tech_config(logic, hbm, net)
-        hw_axis.append(((logic, hbm, net),
-                        age_lib.generate(tech, budgets)))
+        hw = age_lib.generate(tech, budgets)
+        if profile is not None:
+            from repro.calibrate import profiles as profiles_lib
+            hw = profiles_lib.apply_profile(hw, profile)
+        hw_axis.append(((logic, hbm, net), hw))
 
     points: List[EvalPoint] = []
     labels: List[tuple] = []

@@ -21,8 +21,10 @@ L1(VMEM) -> L0(vregs); the L1 tile triple doubles as the Pallas BlockSpec
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import threading
 from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -104,7 +106,18 @@ def _reg_traffic(flops, nx, ny, reuse):
     return accesses          # in elements; caller multiplies dtype bytes
 
 
-_GEMM_CACHE: dict = {}
+# LRU-bounded cache of scalar gemm_time results.  Mirrors the pathfinder
+# PredictionCache discipline: long resumable sweeps stream millions of
+# distinct (arch, shape) keys through this module, and an unbounded dict
+# only got flushed wholesale at 200k entries — an eviction cliff that
+# threw away every hot key too.  OrderedDict move-to-end keeps the working
+# set; the cap evicts one-shot keys oldest-first.  All bookkeeping happens
+# under a lock: the sweep runner's thread backend reaches the eager
+# concrete path from worker threads, and an LRU (unlike the old
+# insert-only dict) mutates on every *read* too.
+_GEMM_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_GEMM_CACHE_MAXSIZE = 65536
+_GEMM_CACHE_LOCK = threading.Lock()
 
 
 def _resolve_tracer_type() -> tuple:
@@ -147,7 +160,8 @@ def _cache_key(arch: MicroArch, m, n, k, b, dtype_bytes, cfg: PPEConfig):
 
 
 def clear_cache() -> None:
-    _GEMM_CACHE.clear()
+    with _GEMM_CACHE_LOCK:
+        _GEMM_CACHE.clear()
 
 
 def gemm_time(arch: MicroArch, m: int, n: int, k: int, b: int = 1,
@@ -158,8 +172,13 @@ def gemm_time(arch: MicroArch, m: int, n: int, k: int, b: int = 1,
     key = None
     if not return_tiling:
         key = _cache_key(arch, m, n, k, b, dtype_bytes, cfg)
-        if key is not None and key in _GEMM_CACHE:
-            return _GEMM_CACHE[key]
+        if key is not None:
+            with _GEMM_CACHE_LOCK:
+                hit = _GEMM_CACHE.get(key)
+                if hit is not None:
+                    _GEMM_CACHE.move_to_end(key)
+            if hit is not None:
+                return hit
     tilings = _sample_nested_tilings(m, n, k, cfg.n_tilings,
                                      seed=cfg.seed + m * 7 + n * 31 + k * 101)
     b, m, n, k = float(b), float(m), float(n), float(k)  # jnp f32 safety
@@ -215,9 +234,11 @@ def gemm_time(arch: MicroArch, m: int, n: int, k: int, b: int = 1,
     if return_tiling:
         return t_best, np.asarray(tilings[int(best)], dtype=np.int64)
     if key is not None:
-        _GEMM_CACHE[key] = t_best
-        if len(_GEMM_CACHE) > 200_000:
-            _GEMM_CACHE.clear()
+        with _GEMM_CACHE_LOCK:
+            _GEMM_CACHE[key] = t_best
+            _GEMM_CACHE.move_to_end(key)
+            while len(_GEMM_CACHE) > _GEMM_CACHE_MAXSIZE:
+                _GEMM_CACHE.popitem(last=False)
     return t_best
 
 

@@ -112,6 +112,10 @@ class SweepSpec:
     slo_s: Optional[float] = None
     n_tilings: int = 8
     chunk_size: int = 32
+    # embedded calibration profile dict (repro.calibrate.profiles) — part
+    # of the spec so the fingerprint (= resume identity) changes with the
+    # calibration; None keys byte-identical specs to pre-profile sweeps
+    profile: Optional[Dict] = None
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -119,6 +123,8 @@ class SweepSpec:
         for k in ("arches", "cells", "logic_nodes", "hbms", "nets",
                   "budget_scales"):
             d[k] = list(d[k])
+        if d.get("profile") is None:      # keep old fingerprints stable
+            d.pop("profile", None)
         return d
 
     @staticmethod
@@ -131,6 +137,7 @@ class SweepSpec:
             d[k] = tuple(d.get(k) or ())
         d["budget_scales"] = tuple(float(s)
                                    for s in d.get("budget_scales") or (1.0,))
+        d.setdefault("profile", None)
         return SweepSpec(**d)
 
     def fingerprint(self) -> str:
@@ -257,17 +264,48 @@ _HW_CACHE: Dict[tuple, object] = {}
 _HW_LOCK = threading.Lock()
 
 
+def _profile_key(spec: SweepSpec) -> Optional[str]:
+    """Digest of the embedded profile for hardware-cache keys.
+
+    `_hardware` runs once per resolved point, so the digest is memoized
+    on the (frozen, but __dict__-carrying) spec instance — re-serializing
+    the profile dict per point would put json+sha1 in the hot chunk loop.
+    """
+    if spec.profile is None:
+        return None
+    cached = spec.__dict__.get("_profile_digest")
+    if cached is None:
+        cached = hashlib.sha1(json.dumps(spec.profile, sort_keys=True)
+                              .encode()).hexdigest()[:12]
+        object.__setattr__(spec, "_profile_digest", cached)
+    return cached
+
+
 def _hardware(spec: SweepSpec, logic: str, hbm: str, net: str,
               scale: float):
-    key = (logic, hbm, net, scale, spec.area_mm2, spec.power_w)
+    key = (logic, hbm, net, scale, spec.area_mm2, spec.power_w,
+           _profile_key(spec))
     with _HW_LOCK:
         hw = _HW_CACHE.get(key)
     if hw is None:
         tech = techlib.make_tech_config(logic, hbm, net)
         hw = age_lib.generate(tech, spec.budgets(scale))
+        if spec.profile is not None:
+            from repro.calibrate import profiles as profiles_lib
+            hw = profiles_lib.apply_profile(hw, spec.profile)
         with _HW_LOCK:
             hw = _HW_CACHE.setdefault(key, hw)
     return hw
+
+
+def spec_ppe(spec: SweepSpec) -> PPEConfig:
+    """The PPE config a spec's points are scored with: tiling samples from
+    the spec, kernel overhead from the embedded calibration profile."""
+    ppe = PPEConfig(n_tilings=spec.n_tilings)
+    if spec.profile is not None:
+        from repro.calibrate import profiles as profiles_lib
+        ppe = profiles_lib.ppe_with_profile(ppe, spec.profile)
+    return ppe
 
 
 def resolve_label(spec: SweepSpec, lb: PointLabel) -> scenarios.DesignPoint:
@@ -293,7 +331,7 @@ def eval_labels(spec: SweepSpec, labels: Sequence[PointLabel],
                 cache=pathfinder.prediction_cache(),
                 shard_devices: bool = False) -> List[Dict]:
     """Score one chunk of labels -> result records (one batched call)."""
-    ppe = PPEConfig(n_tilings=spec.n_tilings)
+    ppe = spec_ppe(spec)
     dps, scns, spans = [], [], []
     points: List[pathfinder.EvalPoint] = []
     for lb in labels:

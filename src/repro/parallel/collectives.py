@@ -18,23 +18,47 @@ import jax.numpy as jnp
 def flatten_to_buckets(tree: Any, bucket_bytes: int = 4 << 20
                        ) -> Tuple[List[jax.Array], Any]:
     """Flatten a grad tree into ~bucket_bytes 1-D buckets; returns
-    (buckets, spec) where spec reassembles the tree."""
+    (buckets, spec) where spec reassembles the tree.
+
+    Leaves are grouped **per dtype** (first-seen order): concatenating a
+    mixed bf16/f32 tree directly would silently upcast every bf16 leaf to
+    f32 — doubling the reduced bytes AND changing the round-tripped leaf
+    dtypes.  An empty tree yields no buckets (not a spurious f32 zero
+    bucket), and `unflatten_buckets` restores every leaf's exact dtype
+    and shape.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     flat = [l.reshape(-1) for l in leaves]
-    sizes = [f.size for f in flat]
-    big = jnp.concatenate(flat) if flat else jnp.zeros((0,))
-    per = max(bucket_bytes // max(big.dtype.itemsize, 1), 1)
-    buckets = [big[i:i + per] for i in range(0, big.size, per)] or [big]
-    return buckets, (treedef, sizes, [l.shape for l in leaves], big.size)
+    # leaf indices per dtype, first-seen order
+    by_dtype: dict = {}
+    for i, f in enumerate(flat):
+        by_dtype.setdefault(jnp.dtype(f.dtype), []).append(i)
+    buckets: List[jax.Array] = []
+    groups = []
+    for dtype, idxs in by_dtype.items():
+        big = jnp.concatenate([flat[i] for i in idxs])
+        per = max(bucket_bytes // max(big.dtype.itemsize, 1), 1)
+        n_buckets = max(-(-big.size // per), 1)
+        buckets.extend(big[i:i + per] for i in range(0, big.size, per))
+        if big.size == 0:           # zero-size leaves still need a bucket
+            buckets.append(big)
+        groups.append((idxs, [flat[i].size for i in idxs],
+                       [leaves[i].shape for i in idxs], big.size,
+                       n_buckets))
+    return buckets, (treedef, len(leaves), groups)
 
 
 def unflatten_buckets(buckets: List[jax.Array], spec) -> Any:
-    treedef, sizes, shapes, total = spec
-    big = jnp.concatenate(buckets)[:total]
-    leaves, off = [], 0
-    for n, shp in zip(sizes, shapes):
-        leaves.append(big[off:off + n].reshape(shp))
-        off += n
+    treedef, n_leaves, groups = spec
+    leaves: List[Any] = [None] * n_leaves
+    pos = 0
+    for idxs, sizes, shapes, total, n_buckets in groups:
+        big = jnp.concatenate(buckets[pos:pos + n_buckets])[:total]
+        pos += n_buckets
+        off = 0
+        for i, n, shp in zip(idxs, sizes, shapes):
+            leaves[i] = big[off:off + n].reshape(shp)
+            off += n
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -42,6 +42,23 @@ Subcommands:
                   --arch qwen1.5-0.5b --cell train_4k --devices 64 \
                   --steps 10 --starts 4
 
+  calibrate  measurement-driven calibration (repro.calibrate): run the
+          microbenchmark suite on THIS machine (jit'd GEMMs, optionally
+          Pallas kernels, forced-multi-device collectives, model-family
+          steps), fit the techlib/PPE efficiency+overhead vector to the
+          measurements by multi-start GD through the traced performance
+          model, and write DIR/profile.json + DIR/report.json (the drift
+          baseline).  Resumable like a sweep (--resume skips measured
+          points):
+
+              PYTHONPATH=src python -m repro.pathfind calibrate \
+                  --out calib --suite quick
+
+  validate  re-measure (or reuse) the suite and diff the validation
+          report against the stored baseline — non-zero exit on drift:
+
+              PYTHONPATH=src python -m repro.pathfind validate --out calib
+
   cooptimize  cross-stack sweep -> refine: load a checkpointed sweep's
           Pareto frontier and run batched gradient refinement around each
           frontier point, jointly over continuous technology knobs (DVFS
@@ -135,6 +152,10 @@ def _parser() -> argparse.ArgumentParser:
     sw.add_argument("--max-chunks", type=int, default=None,
                     help="stop after N chunks (testing/benchmarks; "
                          "combine with --resume to continue)")
+    sw.add_argument("--profile", default=None, metavar="FILE",
+                    help="calibration profile JSON (pathfind calibrate); "
+                         "every hardware point is evaluated on the "
+                         "measurement-anchored MicroArch")
 
     pl = sub.add_parser("plan", help="runtime sharding plan for one point")
     pl.add_argument("--arch", required=True)
@@ -165,6 +186,49 @@ def _parser() -> argparse.ArgumentParser:
                          "(default DIR/refined.jsonl)")
     co.add_argument("--csv", default=None, help="also write CSV here")
 
+    ca = sub.add_parser("calibrate",
+                        help="measure this machine and fit a calibration "
+                             "profile")
+    ca.add_argument("--out", required=True, metavar="DIR",
+                    help="measurement + profile output directory")
+    ca.add_argument("--suite", default="quick", choices=["quick", "full"],
+                    help="microbenchmark suite (quick = GEMM-only)")
+    ca.add_argument("--reps", type=int, default=3,
+                    help="timing repetitions per point (best-of)")
+    ca.add_argument("--resume", action="store_true",
+                    help="skip points already in DIR/measurements.jsonl")
+    ca.add_argument("--tech", default="cpu_host", choices=["cpu_host",
+                                                           "tpu_v5e"],
+                    help="techlib entry the profile anchors")
+    ca.add_argument("--steps", type=int, default=80,
+                    help="fit GD steps (default 80)")
+    ca.add_argument("--starts", type=int, default=6,
+                    help="fit multi-start batch (default 6)")
+    ca.add_argument("--tilings", type=int, default=8,
+                    help="PPE tiling samples during fit/validation")
+    ca.add_argument("--seed", type=int, default=0)
+
+    va = sub.add_parser("validate",
+                        help="validation report + drift vs stored baseline")
+    va.add_argument("--out", required=True, metavar="DIR",
+                    help="calibration directory (measurements + profile)")
+    va.add_argument("--profile", default=None, metavar="FILE",
+                    help="profile JSON (default DIR/profile.json)")
+    va.add_argument("--baseline", default=None, metavar="FILE",
+                    help="stored baseline report (default DIR/report.json)")
+    va.add_argument("--remeasure", action="store_true",
+                    help="re-run the microbenchmark suite instead of "
+                         "reusing DIR/measurements.jsonl")
+    va.add_argument("--update-baseline", action="store_true",
+                    help="overwrite the baseline with this report")
+    va.add_argument("--drift-tol", type=float, default=0.25,
+                    help="allowed absolute MRE worsening per group "
+                         "(default 0.25 = 25 points)")
+    va.add_argument("--tilings", type=int, default=None,
+                    help="PPE tiling samples (default: the profile's "
+                         "fit-time value, so the drift gate compares "
+                         "like with like)")
+
     so = sub.add_parser("soe", help="strategy x budget co-optimization")
     so.add_argument("--arch", required=True)
     so.add_argument("--cell", required=True)
@@ -187,6 +251,7 @@ def _cmd_sweep(args) -> int:
                       or args.scale or args.max_chunks is not None
                       or args.backend != "auto" or args.slo is not None
                       or args.workers is not None or args.chunk_size != 32
+                      or args.profile is not None
                       or (args.arch and "all" in args.arch))
     if use_runner:
         return _cmd_sweep_runner(args)
@@ -248,6 +313,7 @@ def _cmd_sweep_runner(args) -> int:
             ("--scenario", args.scenario, "train"),
             ("--chunk-size", args.chunk_size, 32),
             ("--tilings", args.tilings, 8),
+            ("--profile", args.profile, None),
         ) if val != default]
         if ignored:
             print(f"error: --resume loads the sweep spec from "
@@ -260,6 +326,12 @@ def _cmd_sweep_runner(args) -> int:
             print("error: sweep needs --arch and --mesh (or --resume with "
                   "--out)", file=sys.stderr)
             return 2
+        profile_dict = None
+        if args.profile is not None:
+            from repro.calibrate import profiles as profiles_lib
+            profile_dict = profiles_lib.load_profile(args.profile).to_dict()
+            print(f"# profile: {args.profile} "
+                  f"(tech={profile_dict.get('tech')})", file=sys.stderr)
         spec = sweeprunner.SweepSpec(
             arches=tuple(args.arch),
             mesh_shapes=tuple(tuple(m) for m in args.mesh),
@@ -269,7 +341,8 @@ def _cmd_sweep_runner(args) -> int:
             budget_scales=tuple(float(s) for s in args.scale) if args.scale
             else (1.0,),
             area_mm2=args.area, power_w=args.power, slo_s=args.slo,
-            n_tilings=args.tilings, chunk_size=args.chunk_size)
+            n_tilings=args.tilings, chunk_size=args.chunk_size,
+            profile=profile_dict)
         runner = sweeprunner.SweepRunner(spec, out_dir=args.out, **kwargs)
 
     stats = runner.run(resume=args.resume, max_chunks=args.max_chunks)
@@ -353,6 +426,108 @@ def _cmd_cooptimize(args) -> int:
     return 0
 
 
+def _template_arch(tech: str):
+    from repro.core import age
+    return age.cpu_host_microarch() if tech == "cpu_host" \
+        else age.tpu_v5e_microarch()
+
+
+def _cmd_calibrate(args) -> int:
+    """Measure -> fit -> profile.json + report.json (repro.calibrate)."""
+    import os
+
+    from repro.calibrate import fitting, microbench, profiles, report
+    from repro.core.roofline import PPEConfig
+
+    spec = microbench.default_spec(args.suite, reps=args.reps)
+    runner = microbench.MicrobenchRunner(spec, out_dir=args.out)
+    stats = runner.run(resume=args.resume, verbose=True)
+    print(f"# measured {stats.n_measured} points "
+          f"(skipped {stats.n_skipped} existing) in {stats.elapsed_s:.1f}s",
+          file=sys.stderr)
+    if not stats.records:
+        print("error: no measurements", file=sys.stderr)
+        return 2
+
+    template = _template_arch(args.tech)
+    ppe = PPEConfig(n_tilings=args.tilings)
+    res = fitting.fit(stats.records, template, ppe=ppe,
+                      cfg=fitting.FitConfig(steps=args.steps,
+                                            starts=args.starts,
+                                            seed=args.seed))
+    base_rep = report.validation_report(stats.records, template, ppe=ppe)
+    cal_rep = report.validation_report(stats.records, template,
+                                       params=res.params, ppe=ppe)
+    profile = profiles.CalibrationProfile(
+        tech=args.tech, params=res.params,
+        measure_fingerprint=spec.fingerprint(),
+        fit={"mre": res.mre, "mre_uncalibrated": res.mre_identity,
+             "loss": res.loss, "loss_uncalibrated": res.loss_identity,
+             "selected": res.selected, "n_evals": res.n_evals,
+             "n_measurements": len(stats.records),
+             "n_tilings": args.tilings},
+        validation={"uncalibrated": base_rep["overall"],
+                    "calibrated": cal_rep["overall"]})
+    ppath = os.path.join(args.out, "profile.json")
+    profiles.save_profile(profile, ppath)
+    report.save_baseline(cal_rep, os.path.join(args.out, "report.json"))
+
+    print(report.format_report(cal_rep, baseline=base_rep))
+    print(f"# fit[{res.selected}]: MRE {res.mre_identity * 100:.1f}% -> "
+          f"{res.mre * 100:.1f}% over {res.n_evals} objective evals",
+          file=sys.stderr)
+    print(f"# profile -> {ppath}; baseline report -> "
+          f"{os.path.join(args.out, 'report.json')}", file=sys.stderr)
+    if not res.improved:
+        print("# warning: calibration did not improve on the "
+              "uncalibrated techlib entry", file=sys.stderr)
+    return 0
+
+
+def _cmd_validate(args) -> int:
+    """Fresh validation report + drift detection vs the stored baseline."""
+    import os
+
+    from repro.calibrate import microbench, profiles, report
+    from repro.core.roofline import PPEConfig
+
+    ppath = args.profile or os.path.join(args.out, "profile.json")
+    bpath = args.baseline or os.path.join(args.out, "report.json")
+    profile = profiles.load_profile(ppath)
+    if args.remeasure:
+        runner = microbench.MicrobenchRunner.from_dir(args.out)
+        spec = runner.spec
+        records = microbench.MicrobenchRunner(spec).run().records
+    else:
+        records = microbench.load_measurements(args.out)
+    if not records:
+        print(f"error: no measurements in {args.out}", file=sys.stderr)
+        return 2
+    template = _template_arch(profile.tech)
+    # tilings must match the fit-time sampling or every group's MRE
+    # shifts and the drift gate fires with nothing actually changed
+    tilings = args.tilings if args.tilings is not None \
+        else int(profile.fit.get("n_tilings", 8))
+    ppe = PPEConfig(n_tilings=tilings)
+    cal_rep = report.validation_report(records, template,
+                                       params=profile.params, ppe=ppe)
+    base_rep = report.validation_report(records, template, ppe=ppe)
+    print(report.format_report(cal_rep, baseline=base_rep))
+    stored = report.load_baseline(bpath) if os.path.exists(bpath) else None
+    if args.update_baseline or stored is None:
+        report.save_baseline(cal_rep, bpath)
+        print(f"# baseline written -> {bpath}", file=sys.stderr)
+        return 0
+    drift = report.check_drift(cal_rep, stored, tol=args.drift_tol)
+    if drift:
+        for msg in drift:
+            print(f"# DRIFT: {msg}", file=sys.stderr)
+        return 1
+    print(f"# no drift vs {bpath} (tol "
+          f"{args.drift_tol * 100:.0f} points)", file=sys.stderr)
+    return 0
+
+
 def _cmd_plan(args) -> int:
     from repro.configs.base import SHAPE_CELLS, get_config
     from repro.core import planner
@@ -395,7 +570,8 @@ def main(argv=None) -> int:
     args = _parser().parse_args(argv)
     try:
         return {"sweep": _cmd_sweep, "plan": _cmd_plan,
-                "soe": _cmd_soe,
+                "soe": _cmd_soe, "calibrate": _cmd_calibrate,
+                "validate": _cmd_validate,
                 "cooptimize": _cmd_cooptimize}[args.cmd](args)
     except ModuleNotFoundError as e:
         print(f"error: unknown arch (no config module): {e.name}",

@@ -72,6 +72,36 @@ def test_bucketed_roundtrip():
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+def test_bucketed_roundtrip_mixed_dtype_tree():
+    """Regression: a mixed bf16/f32 tree must round-trip with leaf dtypes
+    intact — `jnp.concatenate` over mixed leaves used to silently upcast
+    every bf16 leaf to f32 (doubling reduced bytes and changing dtypes)."""
+    tree = {"w": jnp.ones((4, 3), jnp.bfloat16) * 0.5,
+            "b": jnp.arange(6, dtype=jnp.float32),
+            "m": {"x": jnp.full((5,), 2.0, jnp.bfloat16)}}
+    buckets, spec = collectives.flatten_to_buckets(tree, bucket_bytes=8)
+    # buckets are dtype-pure: nothing was upcast
+    assert {b.dtype for b in buckets} == {jnp.dtype(jnp.bfloat16),
+                                          jnp.dtype(jnp.float32)}
+    back = collectives.unflatten_buckets(buckets, spec)
+    for k in ("w", "b"):
+        assert back[k].dtype == tree[k].dtype
+        assert back[k].shape == tree[k].shape
+    assert back["m"]["x"].dtype == jnp.bfloat16
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(
+            np.asarray(x, dtype=np.float32), np.asarray(y, np.float32))
+
+
+def test_bucketed_roundtrip_empty_tree():
+    """Regression: an empty tree used to yield a spurious f32 zero bucket;
+    now it yields no buckets and round-trips to the same empty tree."""
+    for tree in ({}, [], {"a": {}}):
+        buckets, spec = collectives.flatten_to_buckets(tree)
+        assert buckets == []
+        assert collectives.unflatten_buckets(buckets, spec) == tree
+
+
 def test_pipeline_single_stage_matches_direct():
     """With S=1 the GPipe wrapper must be an exact no-op wrapper.
     (Multi-stage numerics are covered in test_distributed.py.)"""

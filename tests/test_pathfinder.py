@@ -160,6 +160,33 @@ def test_gemm_tiling_path_traces_under_jit(toy):
     assert bool(jnp.all(jnp.isfinite(g)))
 
 
+def test_gemm_cache_lru_bounded_eviction(toy, monkeypatch):
+    """The host-side GEMM cache is LRU-capped: long resumable sweeps must
+    not grow it without bound, and recently-hit keys survive eviction."""
+    from repro.core import roofline
+    _, _, archs = toy
+    arch = archs[0]
+    roofline.clear_cache()
+    monkeypatch.setattr(roofline, "_GEMM_CACHE_MAXSIZE", 4)
+    shapes = [(64 + 8 * i, 64, 64) for i in range(6)]
+    for s in shapes:
+        roofline.gemm_time(arch, *s, cfg=PPE)
+    assert len(roofline._GEMM_CACHE) == 4          # capped, not 6
+    # the two oldest keys were evicted; re-querying them re-inserts
+    first_key = roofline._cache_key(arch, *shapes[0], 1, 2, PPE)
+    assert first_key not in roofline._GEMM_CACHE
+    # hit the now-oldest surviving key, then insert a new one: the hit
+    # key must survive (LRU), the next-oldest must not
+    survivors = list(roofline._GEMM_CACHE)
+    roofline.gemm_time(arch, *shapes[2], cfg=PPE)   # hit -> most recent
+    roofline.gemm_time(arch, 200, 64, 64, cfg=PPE)  # insert -> evict one
+    assert len(roofline._GEMM_CACHE) == 4
+    assert roofline._cache_key(arch, *shapes[2], 1, 2, PPE) \
+        in roofline._GEMM_CACHE
+    assert survivors[1] not in roofline._GEMM_CACHE
+    roofline.clear_cache()
+
+
 def test_is_tracer_detects_tracers_and_concretes():
     import jax
     import jax.numpy as jnp
