@@ -107,6 +107,17 @@ def _bench_sweep_shard() -> BenchResult:
             f"resume_ok={int(r['resume_ok'])}"), r
 
 
+def _bench_sweep_pipeline() -> BenchResult:
+    """Pipelined executor vs PR4 synchronous sharded runner (ISSUE-5)."""
+    from benchmarks import sweep_pipeline
+    r = sweep_pipeline.main(verbose=False)
+    return (f"speedup={r['speedup']:.1f}x"
+            f"(>={r['min_speedup']:g}x);"
+            f"pipeline_pps={r['pipeline_pps']:.0f};"
+            f"frontier_ok={int(r['frontier_ok'])};"
+            f"resume_ok={int(r['resume_ok'])}"), r
+
+
 def _bench_cooptimize() -> BenchResult:
     """Sweep -> refine cross-stack co-optimization (ISSUE-3 tentpole)."""
     from benchmarks import cooptimize_refine
@@ -154,6 +165,7 @@ BENCHES: Dict[str, Callable[[], BenchResult]] = {
     "fig11_package": _bench_fig11,
     "sweep_scale": _bench_sweep_scale,
     "sweep_shard": _bench_sweep_shard,
+    "sweep_pipeline": _bench_sweep_pipeline,
     "cooptimize_refine": _bench_cooptimize,
     "calibration_gain": _bench_calibration,
     "crossflow_query_latency": _bench_crossflow_query,
@@ -219,6 +231,7 @@ _KEY_RATIOS = {
     "fig8_lm_validation": (("rel_err",), "fig8_rel_err"),
     "sweep_scale": (("speedup_warm",), "sweep_scale_speedup"),
     "sweep_shard": (("speedup_vs_single",), "sweep_shard_speedup"),
+    "sweep_pipeline": (("speedup",), "sweep_pipeline_speedup"),
     "calibration_gain": (("mre_improvement",), "calibration_mre_gain"),
 }
 

@@ -1,0 +1,206 @@
+"""Pipelined sweep executor vs the PR4 synchronous sharded path (ISSUE-5).
+
+Both engines run the FULL sweep-runner path (label resolution, hardware
+packing, batched device evaluation, record folding, JSONL streaming +
+chunk checkpoints) on the same `SweepSpec` grid:
+
+  device    the PR4 synchronous path: per chunk, host-side resolve/pack,
+            one pmap-sharded `evaluate_matrix` call, then records + JSONL
+            commits — all serialized on the critical path;
+  pipeline  the PR5 executor (`repro.core.sweeppipeline`): a producer
+            thread packs chunk N+1 (memoized skeletons, vectorized
+            hardware rows, batched cache probes) while chunk N's
+            superbatch runs under JAX async dispatch, and a writer thread
+            commits chunk N-1 off the critical path.
+
+Asserts (ISSUE-5 acceptance):
+  * pipeline >= 5x device-backend evaluated-points/sec on the same grid
+    (relax with SWEEP_PIPELINE_MIN_SPEEDUP, e.g. 3.0 for the CI smoke
+    lane's noisy shared hosts);
+  * both backends produce identical records;
+  * ``--frontier-only`` returns the identical Pareto set as full
+    materialization on train AND serving reference grids;
+  * a PR4-era checkpoint directory (written by the synchronous serial
+    backend) resumes under the pipeline executor with ZERO re-evaluated
+    chunks and the identical point set.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Dict
+
+MARK = "SWEEP_PIPELINE_RESULT:"
+N_SCALES = 192                  # budget-scale axis: hardware points/skeleton
+
+
+def _min_speedup() -> float:
+    return float(os.environ.get("SWEEP_PIPELINE_MIN_SPEEDUP", "5.0"))
+
+
+def measure() -> Dict:
+    import jax
+    import numpy as np
+
+    from repro.core import pathfinder, scenarios, sweeprunner
+
+    n_dev = jax.local_device_count()
+    # serving grid: each design point is a fused prefill+decode pair — the
+    # representative pathfinding workload, and the one where the PR4 path
+    # pays two pmap dispatches + two host pack passes per chunk
+    spec = sweeprunner.SweepSpec(
+        arches=("qwen1.5-0.5b",), mesh_shapes=((4, 4), (2, 8)),
+        scenario="serving", logic_nodes=("N7", "N5"),
+        budget_scales=tuple(round(0.6 + 0.003 * i, 4)
+                            for i in range(N_SCALES)),
+        n_tilings=8, chunk_size=32)
+    n_points = len(sweeprunner.enumerate_labels(spec))
+    superbatch = 512
+
+    def timed_run(backend: str, repeats: int = 4):
+        """Best wall-seconds of a full checkpointed sweep (fresh out_dir
+        per repeat — the engines must pay their own JSONL streaming)."""
+        best, stats = float("inf"), None
+        for _ in range(repeats):
+            d = tempfile.mkdtemp(prefix=f"swp_{backend}_")
+            try:
+                t0 = time.perf_counter()
+                stats = sweeprunner.SweepRunner(
+                    spec, out_dir=d, backend=backend, cache=None,
+                    superbatch=superbatch).run(collect=False)
+                best = min(best, time.perf_counter() - t0)
+                assert stats.complete
+                assert stats.n_points_evaluated == n_points
+            finally:
+                shutil.rmtree(d, ignore_errors=True)
+        return best, stats
+
+    # warm both backends (XLA compiles, AGE'd hardware, graph caches) and
+    # pin record parity between them while at it; the warm pipeline run
+    # must use the timed superbatch or the timed section pays fresh
+    # shape-specialized compiles
+    device_warm = sweeprunner.SweepRunner(spec, backend="device",
+                                          cache=None).run()
+    pipe_warm = sweeprunner.SweepRunner(spec, backend="pipeline",
+                                        cache=None,
+                                        superbatch=superbatch).run()
+    by_key = {r["key"]: r for r in device_warm.records}
+    assert by_key.keys() == {r["key"] for r in pipe_warm.records}
+    for rec in pipe_warm.records:
+        want = by_key[rec["key"]]
+        for f in ("ttft_s", "cost_device_s_per_token", "feasible"):
+            a, b = want[f], rec[f]
+            if isinstance(a, float) and np.isfinite(a):
+                np.testing.assert_allclose(b, a, rtol=1e-5)
+            else:
+                assert a == b, (rec["key"], f, a, b)
+
+    device_s, _ = timed_run("device")
+    pipe_s, _ = timed_run("pipeline")
+    device_pps = n_points / device_s
+    pipe_pps = n_points / pipe_s
+    speedup = pipe_pps / device_pps
+
+    # -- frontier-only == full materialization ----------------------------
+    frontier_ok = True
+    for scenario, meshes in (("train", ((2, 2), (4, 4))),
+                             ("serving", ((4, 4), (2, 8)))):
+        fspec = sweeprunner.SweepSpec(
+            arches=("qwen1.5-0.5b",), mesh_shapes=meshes,
+            scenario=scenario, logic_nodes=("N7", "N5"),
+            budget_scales=(0.8, 1.0, 1.2), n_tilings=4, chunk_size=4)
+        full = sweeprunner.SweepRunner(fspec, backend="pipeline",
+                                       cache=None).run()
+        scn = scenarios.get_scenario(scenario)
+        want = sorted(r["key"] for r in sweeprunner.pareto_records(
+            full.records, scn.objectives))
+        front = sweeprunner.SweepRunner(fspec, backend="pipeline",
+                                        cache=None).run(frontier_only=True)
+        got = sorted(r["key"] for r in front.records)
+        assert front.n_frontier_overflowed == 0
+        assert want, f"{scenario}: empty reference frontier"
+        assert got == want, (
+            f"{scenario}: frontier-only Pareto set diverged from full "
+            f"materialization\n  got  {got}\n  want {want}")
+        frontier_ok = frontier_ok and got == want
+
+    # -- PR4-era checkpoints resume with zero re-evaluation ---------------
+    rspec = sweeprunner.SweepSpec(
+        arches=("qwen1.5-0.5b",), mesh_shapes=((2, 2), (4, 4)),
+        scenario="train", logic_nodes=("N7", "N5"), n_tilings=4,
+        chunk_size=1)
+    with tempfile.TemporaryDirectory() as d:
+        first = sweeprunner.SweepRunner(rspec, out_dir=d,
+                                        backend="serial").run(max_chunks=2)
+        assert first.n_chunks_evaluated == 2 and not first.complete
+        second = sweeprunner.SweepRunner(rspec, out_dir=d,
+                                         backend="pipeline").run(resume=True)
+        assert second.n_chunks_skipped == 2, second
+        assert second.complete
+        keys = sorted(r["key"] for r in second.records)
+        want = sorted(lb.key() for lb in sweeprunner.enumerate_labels(rspec))
+        assert keys == want, "resumed point set differs from the spec"
+    resume_ok = True
+
+    assert speedup >= _min_speedup(), (
+        f"pipeline executor only {speedup:.1f}x over the synchronous "
+        f"sharded path (ISSUE-5 acceptance: >= {_min_speedup():g}x)")
+    return {
+        "n_devices": n_dev,
+        "n_points": n_points,
+        "device_pps": device_pps,
+        "pipeline_pps": pipe_pps,
+        "speedup": speedup,
+        "min_speedup": _min_speedup(),
+        "cache_bypassed": True,
+        "frontier_ok": frontier_ok,
+        "resume_ok": resume_ok,
+        "compile_misses_warm": pathfinder.compile_cache_stats()["misses"],
+    }
+
+
+def main(verbose: bool = True) -> Dict:
+    """Re-exec in a subprocess with forced host devices, parse its JSON."""
+    n_dev = min(4, os.cpu_count() or 1)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_dev}"
+                        ).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sweep_pipeline", "--measure"],
+        env=env, capture_output=True, text=True, cwd=root)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sweep_pipeline measurement failed "
+            f"(exit {proc.returncode}):\n{proc.stdout}\n{proc.stderr}")
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith(MARK))
+    r = json.loads(line[len(MARK):])
+    if verbose:
+        print(f"sweep_pipeline: {r['n_points']} points, full runner path, "
+              f"{r['n_devices']} forced host devices")
+        print(f"  device (PR4)  : {r['device_pps']:10.0f} points/s")
+        print(f"  pipeline      : {r['pipeline_pps']:10.0f} points/s "
+              f"-> {r['speedup']:.1f}x (floor {r['min_speedup']:g}x)")
+        print(f"  frontier-only : identical Pareto set "
+              f"({'ok' if r['frontier_ok'] else 'FAIL'})")
+        print(f"  resume        : PR4-era checkpoints, zero re-evaluation "
+              f"({'ok' if r['resume_ok'] else 'FAIL'})")
+    return r
+
+
+if __name__ == "__main__":
+    if "--measure" in sys.argv:
+        print(MARK + json.dumps(measure()))
+    else:
+        main()

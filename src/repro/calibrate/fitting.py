@@ -61,7 +61,7 @@ PARAM_NAMES: Tuple[str, ...] = tuple(s[0] for s in PARAM_SPECS)
 # measurement kinds the default fit consumes (gemm_pallas is reported but
 # not fitted: CPU interpret mode times the emulator, not the hardware)
 KINDS_FITTED: Tuple[str, ...] = ("gemm", "elementwise", "collective",
-                                 "train_step", "prefill")
+                                 "train_step", "prefill", "decode_step")
 N_PARAMS = len(PARAM_SPECS)
 _LOG_LO = np.log(np.asarray([s[2] for s in PARAM_SPECS], dtype=np.float64))
 _LOG_HI = np.log(np.asarray([s[3] for s in PARAM_SPECS], dtype=np.float64))
@@ -124,10 +124,12 @@ def _graph_overhead_count(graph) -> float:
 def _model_skeleton(rec: Dict):
     """(graph, strategy) for one model-step measurement record — the
     prediction side of the identical (reduced cfg, smoke cell) pair the
-    microbench measured."""
+    microbench measured.  ``decode_step`` builds the decode-kind graph
+    (one token over the full KV context — the KV-bandwidth path)."""
     from repro.configs.base import ShapeCell, get_config, reduced
     from repro.core import lmgraph
-    kind = "train" if rec["kind"] == "train_step" else "prefill"
+    kind = {"train_step": "train", "prefill": "prefill",
+            "decode_step": "decode"}[rec["kind"]]
     cell = ShapeCell(f"cal_{kind}", int(rec["seq"]), int(rec["batch"]),
                      kind)
     cfg = reduced(get_config(str(rec["arch"])))
@@ -183,7 +185,7 @@ def build_predictor(measurements: Sequence[Dict], template: MicroArch,
                 wire = 2.0 * (n_dev - 1) / n_dev * payload
                 return (base_lat * p["net_alpha_eff"] * (n_dev - 1)
                         + wire / (base_bw * p["net_beta_eff"]))
-        elif kind in ("train_step", "prefill"):
+        elif kind in ("train_step", "prefill", "decode_step"):
             graph, st = _model_skeleton(rec)
             n_launch = _graph_overhead_count(graph)
 

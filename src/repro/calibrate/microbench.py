@@ -13,6 +13,10 @@ Every measurement times an executable that already exists in the repo:
   train_step / prefill
                end-to-end jit'd steps of the `repro.models` families at
                smoke size (`configs.base.reduced`)
+  decode_step  one-token jit'd `Model.decode_step` over a full KV cache
+               at smoke size — the KV-cache-READ-bound step that anchors
+               the model's main-memory bandwidth path (the decode graph's
+               attention GEMMs charge the whole context per token)
 
 Measurements stream to ``measurements.jsonl`` with the sweep runner's
 fingerprint/resume discipline: ``spec.json`` pins the enumerated point set
@@ -43,7 +47,7 @@ SPEC_VERSION = 1
 
 # measurement kinds, in enumeration order
 KINDS = ("gemm", "gemm_pallas", "elementwise", "collective",
-         "train_step", "prefill")
+         "train_step", "prefill", "decode_step")
 
 
 # ---------------------------------------------------------------------------
@@ -118,6 +122,7 @@ def default_spec(suite: str = "quick", reps: int = 3) -> MeasureSpec:
             elementwise_sizes=(1 << 16, 1 << 20, 1 << 23),
             collective_bytes=(1 << 16, 1 << 20, 1 << 22),
             model_archs=("qwen1.5-0.5b", "xlstm-125m", "recurrentgemma-2b"),
+            model_phases=("train_step", "prefill", "decode_step"),
             reps=reps)
     raise ValueError(f"unknown suite {suite!r}; expected quick|full")
 
@@ -282,9 +287,13 @@ def _measure_collective(pt: MeasurePoint, spec: MeasureSpec) -> Dict:
 
 # smoke-size shape cell used for model-step measurements; the prediction
 # side builds its lmgraph from the identical (reduced cfg, cell) pair
+_CELL_KINDS = {"train_step": "train", "prefill": "prefill",
+               "decode_step": "decode"}
+
+
 def model_cell(pt: MeasurePoint):
     from repro.configs.base import ShapeCell
-    kind = "train" if pt.kind == "train_step" else "prefill"
+    kind = _CELL_KINDS[pt.kind]
     return ShapeCell(f"cal_{kind}", int(pt.get("seq")),
                      int(pt.get("batch")), kind)
 
@@ -320,6 +329,34 @@ def _measure_model(pt: MeasurePoint, spec: MeasureSpec) -> Dict:
     return {"flops": 0.0, "bytes": 0.0, "t_s": best, "t_mean_s": mean}
 
 
+def _measure_decode(pt: MeasurePoint, spec: MeasureSpec) -> Dict:
+    """One-token decode over a FULL KV cache (pos = seq-1): the measured
+    step is KV-cache-read-bound — attention reads the whole context per
+    token — anchoring the dram-bandwidth path the serving scenarios lean
+    on (the ROADMAP's missing decode-phase calibration depth)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config, reduced
+    from repro.core.scenarios import kv_cache_bytes
+    from repro.models import build_model
+
+    cfg = reduced(get_config(str(pt.get("arch"))))
+    model = build_model(cfg)
+    if model.decode_step is None or model.init_cache is None:
+        raise RuntimeError(f"{cfg.name}: model family has no decode path")
+    params = model.init(jax.random.PRNGKey(0))
+    seq, batch = int(pt.get("seq")), int(pt.get("batch"))
+    caches = model.init_cache(batch, seq)
+    tokens = jnp.zeros((batch, 1), jnp.int32)
+    step = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+    pos = jnp.asarray(seq - 1, jnp.int32)     # read the whole context
+    run = lambda: jax.block_until_ready(step(params, caches, tokens, pos))
+    best, mean = _time_fn(run, spec.warmup, spec.reps)
+    return {"flops": 0.0, "bytes": float(kv_cache_bytes(cfg, seq, batch)),
+            "t_s": best, "t_mean_s": mean}
+
+
 _MEASURERS: Dict[str, Callable[[MeasurePoint, MeasureSpec], Dict]] = {
     "gemm": _measure_gemm,
     "gemm_pallas": _measure_gemm_pallas,
@@ -327,6 +364,7 @@ _MEASURERS: Dict[str, Callable[[MeasurePoint, MeasureSpec], Dict]] = {
     "collective": _measure_collective,
     "train_step": _measure_model,
     "prefill": _measure_model,
+    "decode_step": _measure_decode,
 }
 
 

@@ -26,7 +26,7 @@ REPORT_VERSION = 1
 
 
 def _group_key(rec: Dict) -> str:
-    if rec["kind"] in ("train_step", "prefill"):
+    if rec["kind"] in ("train_step", "prefill", "decode_step"):
         return f"{rec['kind']}:{rec.get('arch', '?')}"
     return str(rec["kind"])
 

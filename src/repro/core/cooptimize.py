@@ -15,7 +15,10 @@ each frontier point, jointly over
   (c) the discrete parallelism-strategy / mesh-shape axis, enumerated in
       an outer loop whose candidates are ranked from the sweep's own
       records (zero re-evaluation of already-scored points) and whose
-      final re-scoring shares the process-wide LRU prediction cache.
+      final re-scoring shares the process-wide LRU prediction cache
+      (resolved at call time, so it also hits rows published by the
+      pipelined executor that produced the sweep — any backend's
+      checkpoint directory works as a `--from` source).
 
 The joint parameter vector is theta = [W (17) | u (3)] where u holds the
 knobs normalized to [0, 1]; one jitted step evaluates all S starts with a

@@ -159,10 +159,38 @@ class PredictionCache:
             self.hits += 1
             return row
 
+    def get_many(self, keys: Sequence) -> List[Optional[np.ndarray]]:
+        """Batched lookup: one lock pass for a whole hardware matrix.
+
+        The pipelined sweep executor probes thousands of keys per chunk;
+        per-key `get` calls would take and release the lock (and bump the
+        LRU bookkeeping) once per point.
+        """
+        out: List[Optional[np.ndarray]] = []
+        with self._lock:
+            for key in keys:
+                row = self._data.get(key)
+                if row is None:
+                    self.misses += 1
+                else:
+                    self._data.move_to_end(key)
+                    self.hits += 1
+                out.append(row)
+        return out
+
     def put(self, key, row: np.ndarray) -> None:
         with self._lock:
             self._data[key] = row
             self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+
+    def put_many(self, pairs: Sequence[Tuple]) -> None:
+        """Batched insert (one lock pass); same LRU semantics as `put`."""
+        with self._lock:
+            for key, row in pairs:
+                self._data[key] = row
+                self._data.move_to_end(key)
             while len(self._data) > self.maxsize:
                 self._data.popitem(last=False)
 
@@ -185,9 +213,30 @@ class PredictionCache:
 
 _PREDICTION_CACHE = PredictionCache()
 
+# sentinel meaning "use whatever prediction_cache() returns at CALL time".
+# A plain `cache=_PREDICTION_CACHE` default would freeze the singleton at
+# import time, so replacing the module-level cache (tests, embedding apps)
+# would silently leave default-arg callers on the dead object.  `None`
+# still means "no cache at all".
+DEFAULT_CACHE = object()
+
+
+def resolve_cache(cache) -> Optional[PredictionCache]:
+    """Map the `DEFAULT_CACHE` sentinel to the live singleton (late
+    binding); pass real caches and None (= caching disabled) through."""
+    return prediction_cache() if cache is DEFAULT_CACHE else cache
+
 
 def prediction_cache() -> PredictionCache:
     return _PREDICTION_CACHE
+
+
+def set_prediction_cache(cache: PredictionCache) -> PredictionCache:
+    """Replace the process-wide prediction cache (takes effect for every
+    default-arg caller immediately — see `DEFAULT_CACHE`)."""
+    global _PREDICTION_CACHE
+    _PREDICTION_CACHE = cache
+    return cache
 
 
 def cache_stats() -> Dict[str, int]:
@@ -212,6 +261,18 @@ _COMPILED: "collections.OrderedDict[tuple, Callable]" = \
     collections.OrderedDict()
 _COMPILED_MAXSIZE = 128
 _COMPILED_LOCK = threading.Lock()
+# hit/miss counts over EVERY compiled-function store that goes through
+# `_compiled_get_or_create` (skeleton evaluators, budget fns, the pipelined
+# design/frontier fns).  A miss = one wrapped fn built, i.e. one XLA
+# compile per input shape at first call; the sweep runner surfaces the
+# per-run delta so compile churn is visible from the CLI summary line.
+_COMPILE_STATS = {"hits": 0, "misses": 0}
+
+
+def compile_cache_stats() -> Dict[str, int]:
+    """Process-wide compiled-evaluator cache hit/miss counters."""
+    with _COMPILED_LOCK:
+        return dict(_COMPILE_STATS)
 
 
 def _compiled_get_or_create(store: "collections.OrderedDict", key: tuple,
@@ -220,9 +281,11 @@ def _compiled_get_or_create(store: "collections.OrderedDict", key: tuple,
         fn = store.get(key)
         if fn is not None:
             store.move_to_end(key)
+            _COMPILE_STATS["hits"] += 1
             return fn
         fn = build()
         store[key] = fn
+        _COMPILE_STATS["misses"] += 1
         while len(store) > _COMPILED_MAXSIZE:
             store.popitem(last=False)
         return fn
@@ -257,7 +320,7 @@ class BatchedEvaluator:
                  ppe: PPEConfig = PPEConfig(), overlap: bool = True,
                  n_microbatches: Optional[int] = None,
                  pod_bw: Optional[float] = None,
-                 cache: Optional[PredictionCache] = _PREDICTION_CACHE):
+                 cache: Optional[PredictionCache] = DEFAULT_CACHE):
         self.graph = graph
         self.strategy = strategy
         self.system = system or simulate.default_system(strategy)
@@ -265,7 +328,7 @@ class BatchedEvaluator:
         self.overlap = overlap
         self.n_microbatches = n_microbatches
         self.pod_bw = pod_bw
-        self.cache = cache
+        self.cache = resolve_cache(cache)
         self._graph_fp = graph.fingerprint()
 
     # -- compiled path ----------------------------------------------------
@@ -429,7 +492,7 @@ class EvalPoint:
 
 def evaluate_points(points: Sequence[EvalPoint],
                     ppe: PPEConfig = PPEConfig(),
-                    cache: Optional[PredictionCache] = _PREDICTION_CACHE,
+                    cache: Optional[PredictionCache] = DEFAULT_CACHE,
                     min_batch_jit: int = 4,
                     shard_devices: bool = False,
                     shard_block: int = 0) -> np.ndarray:
@@ -542,6 +605,79 @@ def pareto_front(points: Sequence, objectives: Sequence[Callable]) -> List:
 
 
 # ---------------------------------------------------------------------------
+# Device-resident streaming Pareto frontier (carried across chunks)
+# ---------------------------------------------------------------------------
+
+# Default capacity of the carried frontier state (number of non-dominated
+# candidates held on device).  Real sweep frontiers are tiny next to the
+# point count; overflow is detected and reported, never silent.
+FRONTIER_CAPACITY = 512
+
+
+def frontier_init(capacity: int, n_obj: int,
+                  payload_dim: int) -> Tuple[jnp.ndarray, ...]:
+    """Empty carried frontier state for `frontier_merge`.
+
+    ``(vals, payload, idx, overflow)``: objective rows (+inf = empty slot),
+    an opaque per-point payload (the raw metric rows, so surviving records
+    can be rebuilt without ever materializing the full sweep), the global
+    point index (-1 = empty), and a scalar count of finite candidates that
+    were dropped because the frontier outgrew ``capacity``.
+    """
+    return (jnp.full((capacity, n_obj), jnp.inf, dtype=jnp.float32),
+            jnp.zeros((capacity, payload_dim), dtype=jnp.float32),
+            jnp.full((capacity,), -1, dtype=jnp.int32),
+            jnp.zeros((), dtype=jnp.int32))
+
+
+def frontier_merge(state: Tuple, vals: jnp.ndarray, payload: jnp.ndarray,
+                   idx: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """One streaming-skyline step: merge a batch into the carried state.
+
+    Pure jnp (traceable; the pipelined executor jits this fused behind the
+    batched evaluation with the state buffers donated).  Dominance follows
+    `pareto_front`: a candidate is dropped iff some other candidate is <=
+    on all objectives and < on at least one; exact ties never dominate
+    each other, and rows with any non-finite objective (infeasible points,
+    padding, empty slots) never enter the frontier.  A carried point can
+    still be evicted by a later batch — the state always holds the skyline
+    of everything seen so far, truncated to capacity by first objective
+    (``overflow`` counts what the truncation dropped).
+    """
+    svals, spay, sidx, overflow = state
+    capacity = svals.shape[0]
+    av = jnp.concatenate([svals, jnp.asarray(vals, dtype=jnp.float32)])
+    ap = jnp.concatenate([spay, jnp.asarray(payload, dtype=jnp.float32)])
+    ai = jnp.concatenate([sidx, jnp.asarray(idx, dtype=jnp.int32)])
+    finite = jnp.all(jnp.isfinite(av), axis=1) & (ai >= 0)
+    # pairwise dominance: dominated[i] iff some finite j <= i on all
+    # objectives and < on one ((CAP+B)^2 x K ops — trivial on device)
+    le = jnp.all(av[None, :, :] <= av[:, None, :], axis=-1)
+    lt = jnp.any(av[None, :, :] < av[:, None, :], axis=-1)
+    dominated = jnp.any(le & lt & finite[None, :], axis=1)
+    keep = finite & ~dominated
+    # survivors first (sorted by first objective), empties pushed to +inf
+    order = jnp.argsort(jnp.where(keep, av[:, 0], jnp.inf))
+    kept_beyond = jnp.sum(keep) - jnp.minimum(jnp.sum(keep), capacity)
+    order = order[:capacity]
+    mask = keep[order]
+    return (jnp.where(mask[:, None], av[order], jnp.inf),
+            jnp.where(mask[:, None], ap[order], 0.0),
+            jnp.where(mask, ai[order], -1),
+            overflow + kept_beyond.astype(jnp.int32))
+
+
+def frontier_unpack(state: Tuple) -> Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray, int]:
+    """Pull a carried frontier state to host -> (vals, payload, idx,
+    n_overflowed) with empty slots stripped."""
+    vals, payload, idx, overflow = (np.asarray(x) for x in state)
+    live = idx >= 0
+    return (vals[live].astype(np.float64), payload[live], idx[live],
+            int(overflow))
+
+
+# ---------------------------------------------------------------------------
 # Design-space sweep driver
 # ---------------------------------------------------------------------------
 
@@ -610,7 +746,7 @@ def sweep(arches: Sequence[str], cells: Sequence[str],
           budgets: Optional[Budgets] = None,
           ppe: PPEConfig = PPEConfig(n_tilings=8),
           strategies_fn: Optional[Callable] = None,
-          cache: Optional[PredictionCache] = _PREDICTION_CACHE,
+          cache: Optional[PredictionCache] = DEFAULT_CACHE,
           profile=None) -> SweepResult:
     """Cross-product design-space sweep (the paper's §9 studies, batched).
 

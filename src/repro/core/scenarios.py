@@ -238,6 +238,38 @@ class Scenario:
         """
         raise NotImplementedError
 
+    def frontier_fold(self, cfg: ArchConfig, strategy: Strategy):
+        """Traceable objective fold for the device-resident streaming
+        frontier (`repro.core.sweeppipeline`, ``pathfind sweep
+        --frontier-only``).
+
+        Returns ``fold(rows, hw_vec) -> (n_obj,) jnp vector`` mapping one
+        design's ``(points_per_design, 5)`` metric rows and its packed
+        hardware vector (`pathfinder.HW_FIELDS` order) to the FULL
+        `objectives` tuple — fused into the compiled eval fn, so frontier
+        sweeps never pull per-point rows to host.  Must mirror
+        `objective_values` exactly: an infeasible/unusable record maps to
+        a non-finite objective (the frontier merge excludes it).  ``None``
+        = this scenario has no device fold (frontier-only unsupported).
+        """
+        return None
+
+    def metrics_fold(self, cfg: ArchConfig, strategy: Strategy, cell_id):
+        """Host-side vectorized fold for the pipelined executor's record
+        stage.
+
+        Returns ``fold(rows, hw) -> List[Dict]`` mapping a batch of
+        ``(B, points_per_design, 5)`` metric rows and the matching
+        ``(B, HW_DIM)`` packed hardware matrix to exactly the metric
+        fields `record` appends after the label fields (same keys, same
+        order, same values — parity-tested per scenario).  Per-design
+        constants are captured at skeleton-build time and the arithmetic
+        runs over the whole batch in NumPy, so the per-label cost is one
+        dict literal.  ``None`` = no fast fold; the executor falls back
+        to `record` on a resolved `DesignPoint`.
+        """
+        return None
+
 
 class TrainScenario(Scenario):
     """Per-iteration training step time (the paper's Fig. 9 axis)."""
@@ -274,6 +306,21 @@ class TrainScenario(Scenario):
     def refine_objectives(self, dp: DesignPoint):
         def fold(totals, dram_capacity):
             return (totals[0],)                    # step time; devices fixed
+        return fold
+
+    def frontier_fold(self, cfg: ArchConfig, strategy: Strategy):
+        import jax.numpy as jnp
+        devices = float(strategy.devices)
+
+        def fold(rows, hw_vec):
+            return jnp.stack([rows[0, 0], jnp.float32(devices)])
+        return fold
+
+    def metrics_fold(self, cfg: ArchConfig, strategy: Strategy, cell_id):
+        def fold(rows, hw):
+            return [{"time_s": r[0], "compute_s": r[1], "comm_s": r[2],
+                     "exposed_comm_s": r[3]}
+                    for r in rows[:, 0, :4].tolist()]
         return fold
 
 
@@ -355,6 +402,73 @@ class ServingScenario(Scenario):
             tpot = totals[1] * roofline.capacity_pressure_derate_soft(occ)
             ttft = totals[0]
             return (ttft, devices * tpot / batch)   # (ttft_s, cost/token)
+        return fold
+
+    def frontier_fold(self, cfg: ArchConfig, strategy: Strategy):
+        from repro.core import pathfinder, roofline
+        import jax.numpy as jnp
+        cell = SHAPE_CELLS[self.decode_cell]
+        w_dev, kv_dev = serving_bytes_per_device(cfg, strategy, cell)
+        devices = float(strategy.devices)
+        batch = float(cell.global_batch)
+        knee = roofline.CAPACITY_PRESSURE_KNEE
+        cap_i = pathfinder.HW_FIELDS.index("dram_capacity")
+
+        def fold(rows, hw_vec):
+            # the exact (hard-walled) capacity derate of `record` /
+            # `simulate.serving_breakdown`, in traceable jnp: infeasible
+            # points fold to +inf objectives and never enter the frontier
+            occ = (w_dev + kv_dev) / jnp.maximum(hw_vec[cap_i], 1.0)
+            over = jnp.maximum(occ - knee, 0.0) / max(1.0 - knee, 1e-9)
+            derate = jnp.where(occ >= 1.0, jnp.inf,
+                               1.0 + 0.5 * over * over)
+            ttft = rows[0, 0]
+            tpot = rows[1, 0] * derate
+            cost = devices * tpot / batch if batch \
+                else jnp.full((), jnp.inf, dtype=jnp.float32)
+            return jnp.stack([ttft, cost])
+        return fold
+
+    def metrics_fold(self, cfg: ArchConfig, strategy: Strategy, cell_id):
+        from repro.core import pathfinder, roofline
+        cell = SHAPE_CELLS[self.decode_cell]
+        w_dev, kv_dev = serving_bytes_per_device(cfg, strategy, cell)
+        w_f, kv_f = float(w_dev), float(kv_dev)
+        cap_i = pathfinder.HW_FIELDS.index("dram_capacity")
+        batch, devices = cell.global_batch, strategy.devices
+        knee = roofline.CAPACITY_PRESSURE_KNEE
+        slo_s = self.slo_s
+
+        def fold(rows, hw):
+            # `simulate.serving_breakdown` over the whole batch at once;
+            # every expression mirrors the scalar path op-for-op so the
+            # IEEE results (and so the records) are bit-identical
+            cap = np.maximum(hw[:, cap_i].astype(np.float64), 1.0)
+            occ = (w_f + kv_f) / cap
+            over = np.maximum(occ - knee, 0.0) / max(1.0 - knee, 1e-9)
+            derate = np.where(occ >= 1.0, np.inf, 1.0 + 0.5 * over * over)
+            ttft = rows[:, 0, 0]
+            tpot = rows[:, 1, 0] * derate
+            feasible = np.isfinite(tpot) & np.isfinite(ttft)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                tokens = np.where(feasible & (tpot > 0), batch / tpot, 0.0)
+                cost = np.where(feasible & (batch > 0),
+                                devices * tpot / batch, np.inf)
+            per_dev = tokens / max(devices, 1)
+            slo = [None] * len(occ) if slo_s is None \
+                else (ttft <= slo_s).tolist()
+            return [
+                {"ttft_s": t, "tpot_s": tp, "tokens_per_s": tk,
+                 "tokens_per_s_per_device": pd,
+                 "cost_device_s_per_token": c,
+                 "kv_bytes_per_device": kv_f,
+                 "weight_bytes_per_device": w_f,
+                 "hbm_occupancy": o, "kv_derate": dr,
+                 "feasible": f, "slo_ok": s}
+                for t, tp, tk, pd, c, o, dr, f, s in zip(
+                    ttft.tolist(), tpot.tolist(), tokens.tolist(),
+                    per_dev.tolist(), cost.tolist(), occ.tolist(),
+                    derate.tolist(), feasible.tolist(), slo)]
         return fold
 
 

@@ -1,0 +1,722 @@
+"""Pipelined device-resident sweep executor — the 10^6-point hot path.
+
+`sweeprunner.eval_labels` resolves labels, packs hardware vectors, runs the
+batched evaluator and folds records in ONE synchronous loop per chunk, so a
+sweep alternates host-side Python with device compute and JSONL writes on
+the critical path.  This module rebuilds that hot path as an asynchronous,
+double-buffered pipeline (`SweepRunner(backend="pipeline")`):
+
+  * a **producer thread** resolves and packs chunk N+1 while chunk N runs:
+    per-label work is reduced to dict lookups — `resolve_label` skeletons
+    (scenario, parsed strategy, system graph, workload graphs, compiled-fn
+    keys, record templates) are memoized per (arch, cell, mesh, strategy),
+    AGE'd-and-packed hardware rows per (logic, hbm, net, scale) in a
+    process-global row cache — and prediction-cache probes are batched
+    into one locked pass (`PredictionCache.get_many`); the `(B, HW_DIM)`
+    miss matrix is a NumPy gather over unique rows, never a per-label
+    Python pack;
+  * the **device stage** dispatches consecutive chunks as one *superbatch*
+    under JAX async dispatch: all eval points of a design are fused into a
+    single compiled per-skeleton function (a serving design's prefill and
+    decode graphs cost one dispatch, not two), block-padded so successive
+    packs reuse a handful of compiled shapes, and `jax.pmap`-sharded
+    row-wise when the batch is large enough to amortize pmap's dispatch
+    cost (below that, one jitted call keeps XLA's intra-op parallelism);
+  * a **writer thread** blocks on chunk N-1's device buffers, folds
+    records through the scenario's `metrics_fold` fast path and commits
+    JSONL rows + checkpoint lines off the critical path, preserving chunk
+    order — `resume` semantics are byte-identical to the synchronous
+    backends (a crash loses at most the in-flight superbatches).
+
+`run_frontier` is the device-resident reduction mode behind ``pathfind
+sweep --frontier-only``: the scenario's objective fold
+(`Scenario.frontier_fold`) and a streaming Pareto merge
+(`pathfinder.frontier_merge`) are fused INTO the compiled eval fn with the
+carried frontier state donated between calls, so a 10^6-point sweep pulls
+only the surviving frontier (plus its raw metric rows) to host — full
+per-point rows never materialize.
+
+`benchmarks/sweep_pipeline.py` asserts the throughput gain over the PR4
+synchronous sharded path and the frontier/full-materialization parity.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import queue
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import pathfinder, scenarios
+from repro.core.parallelism import Strategy
+from repro.core.placement import mesh_system
+
+# design points per device dispatch: consecutive chunks are packed into one
+# superbatch so per-dispatch overhead amortizes over ~10x more points than
+# the default chunk size (commit granularity stays per chunk)
+SUPERBATCH = 256
+# packed-superbatch lookahead per queue (producer -> device -> writer):
+# 2 = double buffering at each stage boundary
+QUEUE_DEPTH = 2
+# minimum per-group batch before the pmap-sharded path pays for itself: a
+# pmap dispatch costs milliseconds of host-side argument sharding, while a
+# jitted call still uses every core through XLA's intra-op parallelism
+PMAP_MIN_ROWS = 1024
+
+# process-global packed-hardware rows, keyed like `sweeprunner._HW_CACHE`
+# (tech axis + budget overrides + profile digest).  `pack_hw` pulls 13
+# scalars out of JAX arrays (~30us of device syncs per point) — paying
+# that once per process instead of once per run keeps the producer's
+# per-label cost at dict-lookup speed.  LRU-capped: each entry pins a
+# MicroArch, and a long-lived process sweeping many tech/scale/profile
+# axes must not grow it forever (same treatment as roofline._GEMM_CACHE).
+_ROW_CACHE: "collections.OrderedDict[tuple, tuple]" = \
+    collections.OrderedDict()
+_ROW_CACHE_MAXSIZE = 4096
+_ROW_LOCK = threading.Lock()
+
+
+def _row_cache_get(key) -> Optional[tuple]:
+    with _ROW_LOCK:
+        ent = _ROW_CACHE.get(key)
+        if ent is not None:
+            _ROW_CACHE.move_to_end(key)
+        return ent
+
+
+def _row_cache_put(key, ent: tuple) -> tuple:
+    with _ROW_LOCK:
+        ent = _ROW_CACHE.setdefault(key, ent)
+        _ROW_CACHE.move_to_end(key)
+        while len(_ROW_CACHE) > _ROW_CACHE_MAXSIZE:
+            _ROW_CACHE.popitem(last=False)
+        return ent
+
+
+def _join_producer(producer: threading.Thread, pack_q: "queue.Queue"):
+    """Join the producer, draining its bounded queue while waiting.
+
+    An exception that escapes the consumer loop (KeyboardInterrupt landing
+    outside the inner try) leaves the producer blocked in a `put()` on the
+    full queue with nobody reading; a bare `join()` would then hang
+    forever.  Draining between join attempts unblocks it, and the
+    producer's own error check / sentinel path finishes it off.
+    """
+    while True:
+        producer.join(timeout=0.1)
+        if not producer.is_alive():
+            return
+        try:
+            while True:
+                pack_q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+@dataclasses.dataclass
+class _DesignSkeleton:
+    """Everything shared by labels of one (arch, cell, mesh, strategy):
+    resolved once, then every label in the cell is a pair of dict hits."""
+
+    scn: scenarios.Scenario
+    cfg: object
+    strategy: Strategy
+    system: object
+    graphs: Tuple
+    evaluators: Tuple[pathfinder.BatchedEvaluator, ...]
+    fold: Optional[Callable]         # device frontier-objective fold
+    mfold: Optional[Callable]        # host metric fold (record fast path)
+    base_fields: Dict                # record template (label-field order)
+    key_pre: str                     # "arch|cell|mesh" of point_key
+    key_suf: str                     # strategy part of point_key
+    # systolic_dims -> per-eval-point compiled-skeleton key tuple
+    skel_keys: Dict[tuple, tuple] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ppd(self) -> int:
+        return len(self.graphs)
+
+
+@dataclasses.dataclass
+class _Group:
+    """One compiled-function batch inside a pack: all miss labels sharing
+    a design skeleton + systolic dims."""
+
+    skel: _DesignSkeleton
+    keys: tuple                      # per-eval-point skeleton keys
+    template: object                 # MicroArch supplying static leaves
+    ridx: List[int] = dataclasses.field(default_factory=list)
+    row_bytes: List[bytes] = dataclasses.field(default_factory=list)
+    slots: List[tuple] = dataclasses.field(default_factory=list)
+    gidx: List[int] = dataclasses.field(default_factory=list)
+    out: object = None               # in-flight device result
+    n: int = 0
+
+
+@dataclasses.dataclass
+class _Pack:
+    """One packed superbatch: chunks + per-label resolution + cache hits
+    + compiled-batch groups (built by the producer stage)."""
+
+    chunks: List
+    meta: List[List]                 # [ci][li] -> (skel, hw entry)
+    cached: Dict[tuple, np.ndarray]  # (ci, li) -> (ppd, 5) f64 rows
+    groups: Dict[tuple, _Group]
+
+
+class PipelineExecutor:
+    """Asynchronous producer -> device -> writer pipeline for one spec.
+
+    One instance per `SweepRunner.run` call; all memoization (skeletons,
+    packed hardware rows, compiled functions via the process-wide
+    `pathfinder._COMPILED` LRU) is keyed so repeated runs stay warm.
+    """
+
+    def __init__(self, spec, cache=pathfinder.DEFAULT_CACHE,
+                 superbatch: int = SUPERBATCH,
+                 devices: Optional[int] = None,
+                 threads: Optional[bool] = None):
+        from repro.core import sweeprunner
+        self.spec = spec
+        self.cache = pathfinder.resolve_cache(cache)
+        self.ppe = sweeprunner.spec_ppe(spec)
+        self.superbatch = max(int(superbatch), spec.chunk_size, 1)
+        self.devices = devices if devices is not None \
+            else jax.local_device_count()
+        # producer/writer threads only pay off when the host has spare
+        # cores for them: on <=3 cores the GIL serializes the Python
+        # stages anyway and thread churn just fights XLA's own pool, so
+        # the inline mode double-buffers through JAX async dispatch alone
+        self.threads = threads if threads is not None \
+            else (os.cpu_count() or 1) >= 4
+        self.block = sweeprunner.SHARD_BLOCK
+        self._skels: Dict[tuple, _DesignSkeleton] = {}
+        self._hw: Dict[tuple, tuple] = {}
+        self._rows: List[np.ndarray] = []     # unique packed hw rows
+        self._rowmat: Optional[np.ndarray] = None
+
+    # -- memoized resolution ---------------------------------------------
+    def _hw_entry(self, lb) -> tuple:
+        """(hw arch, row index, row bytes, scale string) of one label."""
+        from repro.core import sweeprunner
+        hkey = (lb.logic, lb.hbm, lb.net, lb.scale)
+        ent = self._hw.get(hkey)
+        if ent is None:
+            gkey = hkey + (self.spec.area_mm2, self.spec.power_w,
+                           sweeprunner._profile_key(self.spec))
+            cached = _row_cache_get(gkey)
+            if cached is None:
+                hw = sweeprunner._hardware(self.spec, lb.logic, lb.hbm,
+                                           lb.net, lb.scale)
+                row = pathfinder.pack_hw(hw)
+                cached = _row_cache_put(
+                    gkey, (hw, row, row.tobytes(), f"{lb.scale:g}"))
+            hw, row, rbytes, scale_str = cached
+            ridx = len(self._rows)
+            self._rows.append(row)
+            self._rowmat = None
+            ent = (hw, ridx, rbytes, scale_str)
+            self._hw[hkey] = ent
+        return ent
+
+    def _skeleton(self, lb) -> _DesignSkeleton:
+        from repro.core import sweeprunner
+        skey = (lb.arch, lb.cell, lb.mesh, lb.strategy)
+        sk = self._skels.get(skey)
+        if sk is None:
+            hw = self._hw_entry(lb)[0]
+            scn = sweeprunner.scenario_for(self.spec, lb.cell)
+            cfg = get_config(lb.arch)
+            st = Strategy.parse(lb.strategy)
+            system = mesh_system(lb.mesh)
+            dp = scenarios.DesignPoint(
+                arch=lb.arch, cell=lb.cell, mesh=lb.mesh, logic=lb.logic,
+                hbm=lb.hbm, net=lb.net, scale=lb.scale, strategy=st,
+                cfg=cfg, hw=hw, system=system)
+            eps = scn.eval_points(dp)
+            evs = tuple(pathfinder.BatchedEvaluator(
+                ep.graph, st, system=ep.system, ppe=self.ppe,
+                pod_bw=ep.pod_bw, cache=None) for ep in eps)
+            name = st.name
+            mesh_str = "x".join(map(str, lb.mesh))
+            base = {"arch": lb.arch, "cell": lb.cell, "mesh": mesh_str,
+                    "logic": None, "hbm": None, "net": None, "scale": None,
+                    "strategy": name, "devices": st.devices}
+            sk = _DesignSkeleton(
+                scn=scn, cfg=cfg, strategy=st, system=system,
+                graphs=tuple(ep.graph for ep in eps), evaluators=evs,
+                fold=scn.frontier_fold(cfg, st),
+                mfold=scn.metrics_fold(cfg, st, lb.cell),
+                base_fields=base,
+                key_pre=f"{lb.arch}|{lb.cell}|{mesh_str}", key_suf=name)
+            self._skels[skey] = sk
+        return sk
+
+    def _group_keys(self, sk: _DesignSkeleton, hw) -> tuple:
+        sd = tuple(hw.tech.compute.systolic_dims)
+        keys = sk.skel_keys.get(sd)
+        if keys is None:
+            keys = tuple(ev._skeleton(hw) for ev in sk.evaluators)
+            sk.skel_keys[sd] = keys
+        return keys
+
+    def _design_point(self, lb, sk: _DesignSkeleton,
+                      hw) -> scenarios.DesignPoint:
+        return scenarios.DesignPoint(
+            arch=lb.arch, cell=lb.cell, mesh=lb.mesh, logic=lb.logic,
+            hbm=lb.hbm, net=lb.net, scale=lb.scale, strategy=sk.strategy,
+            cfg=sk.cfg, hw=hw, system=sk.system)
+
+    # -- compiled functions ----------------------------------------------
+    def _design_scalar(self, group: _Group) -> Callable:
+        """v (HW_DIM,) -> (ppd, 5) metric rows: every eval point of one
+        design fused into a single traced function."""
+        scalars = [ev._scalar_fn(group.template)
+                   for ev in group.skel.evaluators]
+
+        def design(v):
+            return jnp.stack([f(v) for f in scalars])
+        return design
+
+    def _compiled_eval(self, group: _Group, n_dev: int) -> Callable:
+        key = ("design", group.keys, n_dev)
+        if n_dev > 1:
+            build = lambda: jax.pmap(jax.vmap(self._design_scalar(group)))
+        else:
+            build = lambda: jax.jit(jax.vmap(self._design_scalar(group)))
+        return pathfinder._compiled_get_or_create(
+            pathfinder._COMPILED, key, build)
+
+    def _compiled_frontier(self, group: _Group, capacity: int) -> Callable:
+        key = ("frontier", group.keys, capacity)
+
+        def build():
+            design = self._design_scalar(group)
+            fold = group.skel.fold
+
+            def step(hw, idx, state):
+                rows = jax.vmap(design)(hw)                  # (B, ppd, 5)
+                vals = jax.vmap(fold)(rows, hw)              # (B, n_obj)
+                vals = jnp.where((idx < 0)[:, None], jnp.inf, vals)
+                payload = rows.reshape(rows.shape[0], -1)
+                return pathfinder.frontier_merge(state, vals, payload, idx)
+            # the carried frontier state is donated: chunk N's merge reuses
+            # chunk N-1's buffers instead of allocating a fresh state
+            return jax.jit(step, donate_argnums=2)
+        return pathfinder._compiled_get_or_create(
+            pathfinder._COMPILED, key, build)
+
+    # -- packing (producer side) -----------------------------------------
+    def pack(self, chunks: Sequence) -> _Pack:
+        """Resolve + vectorize one superbatch of chunks: memoized skeleton
+        and hardware-row lookups per label, one batched cache probe, and
+        miss row-indices grouped per compiled function."""
+        meta: List[List] = []
+        cached: Dict[tuple, np.ndarray] = {}
+        groups: Dict[tuple, _Group] = {}
+        chunk_size = self.spec.chunk_size
+
+        def group_for(sk, hw):
+            keys = self._group_keys(sk, hw)
+            g = groups.get(keys)
+            if g is None:
+                g = groups.setdefault(keys, _Group(skel=sk, keys=keys,
+                                                   template=hw))
+            return g
+
+        if self.cache is None:          # lean single-pass (no probes)
+            for ci, chunk in enumerate(chunks):
+                base_gidx = chunk.index * chunk_size
+                row_meta = []
+                meta.append(row_meta)
+                for li, lb in enumerate(chunk.labels):
+                    ent = self._hw_entry(lb)
+                    sk = self._skeleton(lb)
+                    row_meta.append((sk, ent))
+                    g = group_for(sk, ent[0])
+                    g.ridx.append(ent[1])
+                    g.slots.append((ci, li))
+                    g.gidx.append(base_gidx + li)
+            return _Pack(chunks=list(chunks), meta=meta, cached=cached,
+                         groups=groups)
+
+        probe_keys: List[tuple] = []
+        probe_slots: List[tuple] = []
+        pending: List[tuple] = []       # (slot, gidx, sk, ent)
+        for ci, chunk in enumerate(chunks):
+            base_gidx = chunk.index * chunk_size
+            row_meta = []
+            meta.append(row_meta)
+            for li, lb in enumerate(chunk.labels):
+                ent = self._hw_entry(lb)
+                sk = self._skeleton(lb)
+                slot = (ci, li)
+                row_meta.append((sk, ent))
+                pending.append((slot, base_gidx + li, sk, ent))
+                for skel_key in self._group_keys(sk, ent[0]):
+                    probe_keys.append((skel_key, ent[2]))
+                    probe_slots.append(slot)
+        hits: Dict[tuple, List] = {}
+        for slot, row in zip(probe_slots,
+                             self.cache.get_many(probe_keys)):
+            hits.setdefault(slot, []).append(row)
+        for slot, gidx, sk, ent in pending:
+            got = hits.get(slot)
+            if got is not None and all(r is not None for r in got):
+                cached[slot] = np.stack(got)
+                continue
+            hw, ridx, rbytes, _ = ent
+            g = group_for(sk, hw)
+            g.ridx.append(ridx)
+            g.row_bytes.append(rbytes)
+            g.slots.append(slot)
+            g.gidx.append(gidx)
+        return _Pack(chunks=list(chunks), meta=meta, cached=cached,
+                     groups=groups)
+
+    # -- device stage -----------------------------------------------------
+    def _gather(self, g: _Group) -> np.ndarray:
+        """(B, HW_DIM) f32 matrix of a group's rows — one NumPy gather
+        over the unique-row table, no per-label packing.
+
+        Runs on the dispatch thread while the producer may be appending
+        rows for the NEXT pack, so work off a local snapshot: every index
+        this group references existed when the pack was built, and a
+        concurrent append can only grow the table past what we need.
+        """
+        idx = np.asarray(g.ridx, dtype=np.intp)
+        mat = self._rowmat
+        need = int(idx.max()) + 1 if idx.size else 0
+        if mat is None or mat.shape[0] < need:
+            mat = np.stack(self._rows[:max(need, len(self._rows))]) \
+                .astype(np.float32)
+            self._rowmat = mat
+        return mat[idx]
+
+    def _padded(self, g: _Group) -> Tuple[np.ndarray, int]:
+        hw = self._gather(g)
+        n = hw.shape[0]
+        n_dev = max(min(self.devices, n), 1)
+        if n < PMAP_MIN_ROWS:
+            n_dev = 1                 # jit + XLA intra-op parallelism
+        quantum = n_dev * self.block
+        target = -(-n // quantum) * quantum
+        if target != n:
+            hw = np.concatenate([hw, np.repeat(hw[-1:], target - n,
+                                               axis=0)])
+        return hw, n_dev
+
+    def dispatch(self, pack: _Pack) -> None:
+        """Launch every group's fused eval under JAX async dispatch; the
+        results stay on device until `finalize` folds them."""
+        for g in pack.groups.values():
+            g.n = len(g.ridx)
+            if not g.n:
+                continue
+            hw, n_dev = self._padded(g)
+            fn = self._compiled_eval(g, n_dev)
+            if n_dev > 1:
+                g.out = fn(jnp.asarray(
+                    hw.reshape(n_dev, hw.shape[0] // n_dev,
+                               pathfinder.HW_DIM)))
+            else:
+                g.out = fn(jnp.asarray(hw))
+
+    def finalize(self, pack: _Pack) -> List[List[Dict]]:
+        """Block on the pack's device results, fold records per chunk (in
+        chunk order), and publish the fresh rows to the prediction cache
+        under the same per-eval-point keys the synchronous backends use.
+
+        Metric folding is vectorized: each group's whole result batch
+        goes through the scenario's `metrics_fold` in one NumPy pass, so
+        the per-label Python is one dict merge + the point key."""
+        md_store: List[List] = [[None] * len(c.labels)
+                                for c in pack.chunks]
+        rows_by_slot: Dict[tuple, np.ndarray] = {}
+        puts: List[tuple] = []
+        n_metrics = len(pathfinder.METRICS)
+        for g in pack.groups.values():
+            if not g.n:
+                continue
+            out = np.asarray(g.out, dtype=np.float64)
+            out = out.reshape(-1, g.skel.ppd, n_metrics)[:g.n]
+            g.out = None
+            if g.skel.mfold is not None:
+                for (ci, li), md in zip(g.slots,
+                                        g.skel.mfold(out,
+                                                     self._gather(g))):
+                    md_store[ci][li] = md
+            else:
+                for j, slot in enumerate(g.slots):
+                    rows_by_slot[slot] = out[j]
+            if self.cache is not None:
+                for j in range(g.n):
+                    for pt, skel_key in enumerate(g.keys):
+                        puts.append(((skel_key, g.row_bytes[j]),
+                                     out[j, pt]))
+        if puts:
+            self.cache.put_many(puts)
+        if pack.cached:
+            # cache-hit slots: batch them per skeleton through the same
+            # vectorized fold (a fully-warm sweep is all hits)
+            by_sk: Dict[int, tuple] = {}
+            for slot, rows in pack.cached.items():
+                sk, ent = pack.meta[slot[0]][slot[1]]
+                if sk.mfold is None:
+                    rows_by_slot[slot] = rows
+                else:
+                    by_sk.setdefault(id(sk), (sk, []))[1].append(
+                        (slot, rows, ent[1]))
+            for sk, items in by_sk.values():
+                rows = np.stack([r for _, r, _ in items])
+                hwm = np.stack([self._rows[ri] for _, _, ri in items])
+                for ((ci, li), _, _), md in zip(items,
+                                                sk.mfold(rows, hwm)):
+                    md_store[ci][li] = md
+        out_records: List[List[Dict]] = []
+        for ci, chunk in enumerate(pack.chunks):
+            recs = []
+            row_meta = pack.meta[ci]
+            row_md = md_store[ci]
+            for li, lb in enumerate(chunk.labels):
+                sk, ent = row_meta[li]
+                md = row_md[li]
+                if md is not None:
+                    # label fields from the skeleton template (dict
+                    # insertion order == DesignPoint.label_fields)
+                    rec = dict(sk.base_fields)
+                    rec["logic"] = lb.logic
+                    rec["hbm"] = lb.hbm
+                    rec["net"] = lb.net
+                    rec["scale"] = lb.scale
+                    rec.update(md)
+                    rec["key"] = (f"{sk.key_pre}|{lb.logic}|{lb.hbm}|"
+                                  f"{lb.net}|{ent[3]}|{sk.key_suf}")
+                else:
+                    dp = self._design_point(lb, sk, ent[0])
+                    rec = sk.scn.record(dp, rows_by_slot[(ci, li)])
+                    rec["key"] = dp.key()
+                recs.append(rec)
+            out_records.append(recs)
+        return out_records
+
+    # -- the pipeline -----------------------------------------------------
+    def _pack_slices(self, chunks: Sequence) -> List[Sequence]:
+        per = max(self.superbatch // max(self.spec.chunk_size, 1), 1)
+        return [chunks[i:i + per] for i in range(0, len(chunks), per)]
+
+    def run(self, chunks: Sequence, commit: Callable,
+            verbose: bool = False) -> int:
+        """Evaluate ``chunks``, invoking ``commit(chunk, records)`` in
+        chunk order.  Returns evaluated points.
+
+        Threaded mode runs producer/device/writer on separate threads;
+        inline mode (small hosts) gets the same double buffering from JAX
+        async dispatch alone: pack N+1 is resolved and dispatched before
+        pack N's results are pulled, so the device is never idle while
+        records fold and commit.
+        """
+        if not chunks:
+            return 0
+        slices = self._pack_slices(chunks)
+        if not self.threads:
+            n_points = 0
+            prev: Optional[_Pack] = None
+
+            def flush(pack: _Pack) -> int:
+                n = 0
+                for chunk, recs in zip(pack.chunks, self.finalize(pack)):
+                    n += len(recs)
+                    commit(chunk, recs)
+                return n
+
+            for sl in slices:
+                pack = self.pack(sl)
+                self.dispatch(pack)          # async: pack N on device ...
+                if prev is not None:
+                    n_points += flush(prev)  # ... while N-1 folds+commits
+                prev = pack
+            if prev is not None:
+                n_points += flush(prev)
+            return n_points
+        pack_q: "queue.Queue" = queue.Queue(maxsize=QUEUE_DEPTH)
+        write_q: "queue.Queue" = queue.Queue(maxsize=QUEUE_DEPTH)
+        errors: List[BaseException] = []
+        n_points = [0]
+
+        def produce():
+            try:
+                for sl in slices:
+                    if errors:
+                        break
+                    pack_q.put(self.pack(sl))
+            except BaseException as e:      # noqa: BLE001 — re-raised below
+                errors.append(e)
+            finally:
+                pack_q.put(None)
+
+        def write():
+            # blocks on pack N-1's device results, folds records and
+            # commits JSONL while the main thread keeps dispatching; on an
+            # error it keeps draining so the bounded put()s never deadlock
+            while True:
+                pack = write_q.get()
+                if pack is None:
+                    return
+                if errors:
+                    continue
+                try:
+                    for chunk, recs in zip(pack.chunks,
+                                           self.finalize(pack)):
+                        n_points[0] += len(recs)
+                        commit(chunk, recs)
+                except BaseException as e:  # noqa: BLE001 — re-raised below
+                    errors.append(e)
+
+        producer = threading.Thread(target=produce, daemon=True,
+                                    name="sweep-producer")
+        writer = threading.Thread(target=write, daemon=True,
+                                  name="sweep-writer")
+        producer.start()
+        writer.start()
+        try:
+            while True:
+                pack = pack_q.get()
+                if pack is None:
+                    break
+                if errors:
+                    continue        # drain so the producer's put()s finish
+                try:
+                    # async dispatch: chunk N hits the device while N+1
+                    # packs (producer) and N-1 folds/commits (writer); the
+                    # bounded write queue is the in-flight backpressure
+                    self.dispatch(pack)
+                    write_q.put(pack)
+                except BaseException as e:   # noqa: BLE001
+                    errors.append(e)
+        except BaseException as e:           # noqa: BLE001 (interrupts)
+            errors.append(e)
+        finally:
+            write_q.put(None)
+            writer.join()
+            _join_producer(producer, pack_q)
+        if errors:
+            raise errors[0]
+        return n_points[0]
+
+    # -- frontier-only mode ----------------------------------------------
+    def run_frontier(self, chunks: Sequence,
+                     capacity: int = pathfinder.FRONTIER_CAPACITY,
+                     ) -> Tuple[List[Dict], int, int]:
+        """Device-resident streaming-frontier sweep over ``chunks``.
+
+        Returns ``(frontier records, n_overflowed, n_points_evaluated)``.
+        The prediction cache is bypassed (rows stay on device; publishing
+        them would mean materializing every row on host — the exact cost
+        this mode exists to avoid) and per-point results are never
+        collected: only the surviving frontier's records are rebuilt, from
+        the carried state's payload rows.
+        """
+        from repro.core import sweeprunner
+        if not chunks:
+            return [], 0, 0
+        probe = chunks[0].labels[0]
+        sk0 = self._skeleton(probe)
+        if sk0.fold is None:
+            raise ValueError(
+                f"scenario {sk0.scn.name!r} defines no frontier_fold; "
+                f"--frontier-only needs a device-side objective fold")
+        n_obj = len(sk0.scn.objectives)
+        payload_dim = sk0.ppd * len(pathfinder.METRICS)
+        state = pathfinder.frontier_init(capacity, n_obj, payload_dim)
+
+        cache, self.cache = self.cache, None    # frontier bypasses caching
+        n_points = 0
+        try:
+            slices = self._pack_slices(chunks)
+
+            def merge_pack(pack: _Pack, state) -> Tuple[object, int]:
+                n_merged = 0
+                for g in pack.groups.values():
+                    n = len(g.ridx)
+                    if not n:
+                        continue
+                    hw, _ = self._padded(g)
+                    idx = np.full(hw.shape[0], -1, dtype=np.int32)
+                    idx[:n] = g.gidx
+                    fn = self._compiled_frontier(g, capacity)
+                    # async dispatch: the merge runs on device while the
+                    # next pack resolves on host
+                    state = fn(jnp.asarray(hw), jnp.asarray(idx), state)
+                    n_merged += n
+                return state, n_merged
+
+            if not self.threads:
+                for sl in slices:
+                    state, n = merge_pack(self.pack(sl), state)
+                    n_points += n
+            else:
+                pack_q: "queue.Queue" = queue.Queue(maxsize=QUEUE_DEPTH)
+                errors: List[BaseException] = []
+
+                def produce():
+                    try:
+                        for sl in slices:
+                            if errors:
+                                break
+                            pack_q.put(self.pack(sl))
+                    except BaseException as e:  # noqa: BLE001
+                        errors.append(e)
+                    finally:
+                        pack_q.put(None)
+
+                producer = threading.Thread(target=produce, daemon=True,
+                                            name="sweep-producer")
+                producer.start()
+                try:
+                    while True:
+                        pack = pack_q.get()
+                        if pack is None:
+                            break
+                        if errors:
+                            continue    # drain so the producer finishes
+                        try:
+                            state, n = merge_pack(pack, state)
+                            n_points += n
+                        except BaseException as e:  # noqa: BLE001
+                            errors.append(e)
+                finally:
+                    _join_producer(producer, pack_q)
+                if errors:
+                    raise errors[0]
+        finally:
+            self.cache = cache
+
+        vals, payload, idx, n_over = pathfinder.frontier_unpack(state)
+        by_index = {c.index: c for c in chunks}
+        records: List[Dict] = []
+        for i in np.argsort(idx):              # enumeration order
+            gi = int(idx[i])
+            chunk = by_index[gi // self.spec.chunk_size]
+            lb = chunk.labels[gi % self.spec.chunk_size]
+            sk = self._skeleton(lb)
+            hw = self._hw_entry(lb)[0]
+            dp = self._design_point(lb, sk, hw)
+            rows = payload[i].astype(np.float64).reshape(
+                sk.ppd, len(pathfinder.METRICS))
+            rec = sk.scn.record(dp, rows)
+            rec["key"] = dp.key()
+            records.append(rec)
+        # exact host-side re-filter in float64: the device merge works in
+        # f32, so razor-edge ties could otherwise differ from the full-
+        # materialization frontier
+        records = sweeprunner.pareto_records(
+            records, tuple(sk0.scn.objectives))
+        return records, n_over, n_points

@@ -8,12 +8,17 @@ This module scales the batched engine into a *sweep runner*:
   * the (arch x cell x mesh x tech x budget-scale x strategy) cross-product
     is enumerated deterministically and partitioned into fixed-size
     **chunks** of design points;
-  * chunks are fanned out across local resources — `jax.pmap` over the
-    struct-of-arrays hardware matrix when multiple JAX devices exist
-    (`backend="device"`), thread- or process-parallel `BatchedEvaluator`
-    calls otherwise (`backend="thread"` / `"process"`);
+  * chunks execute on a pluggable backend — the default is the
+    asynchronous double-buffered pipeline of `repro.core.sweeppipeline`
+    (`backend="pipeline"`: producer/device/writer overlap, superbatched
+    fused dispatch, device-resident `--frontier-only` reduction); the
+    synchronous engines remain as `"device"` (per-chunk `jax.pmap` over
+    the struct-of-arrays hardware matrix), `"thread"` / `"process"`
+    (parallel `BatchedEvaluator` calls) and `"serial"`;
   * results **stream** to ``results.jsonl`` as chunks complete (plus a CSV
-    view via `to_csv`), so a crashed sweep loses at most one chunk;
+    view via `to_csv`), so a crashed sweep loses only uncommitted work —
+    at most one chunk on the synchronous backends, at most the in-flight
+    superbatches (a few chunks of lookahead) on the pipeline;
   * an append-only ``checkpoint.jsonl`` records every finished chunk keyed
     on the sweep-spec fingerprint and a hash of the chunk's point keys (the
     same identity scheme as `PredictionCache`); `run(resume=True)` skips
@@ -328,9 +333,17 @@ SHARD_BLOCK = 8
 
 
 def eval_labels(spec: SweepSpec, labels: Sequence[PointLabel],
-                cache=pathfinder.prediction_cache(),
+                cache=pathfinder.DEFAULT_CACHE,
                 shard_devices: bool = False) -> List[Dict]:
-    """Score one chunk of labels -> result records (one batched call)."""
+    """Score one chunk of labels -> result records (one batched call).
+
+    ``cache`` defaults to the `pathfinder.DEFAULT_CACHE` sentinel, which
+    resolves the live prediction cache at CALL time — an import-time
+    default would pin whatever singleton existed when this module loaded,
+    so `pathfinder.set_prediction_cache` replacement would silently stop
+    reaching sweeps (regression-tested).  ``cache=None`` disables caching.
+    """
+    cache = pathfinder.resolve_cache(cache)
     ppe = spec_ppe(spec)
     dps, scns, spans = [], [], []
     points: List[pathfinder.EvalPoint] = []
@@ -368,7 +381,16 @@ def _process_eval(spec_dict: Dict, chunk_index: int,
 
 @dataclasses.dataclass
 class RunStats:
-    """What one `SweepRunner.run` call did (resume accounting included)."""
+    """What one `SweepRunner.run` call did (resume accounting included).
+
+    ``cache_hits``/``cache_misses`` are this run's prediction-cache delta
+    and ``compile_hits``/``compile_misses`` the compiled-evaluator-store
+    delta (`pathfinder.compile_cache_stats`), so cache efficacy is visible
+    per sweep instead of only as process-lifetime totals.  In frontier
+    mode (``frontier_only``) ``records`` holds just the surviving Pareto
+    frontier and ``n_frontier_overflowed`` counts candidates the bounded
+    device-resident state had to drop (0 = the frontier is exact).
+    """
 
     n_points_total: int
     n_chunks_total: int
@@ -379,6 +401,12 @@ class RunStats:
     backend: str
     out_dir: Optional[str]
     records: Optional[List[Dict]] = None
+    cache_hits: int = 0
+    cache_misses: int = 0
+    compile_hits: int = 0
+    compile_misses: int = 0
+    frontier_only: bool = False
+    n_frontier_overflowed: int = 0
 
     @property
     def complete(self) -> bool:
@@ -387,10 +415,32 @@ class RunStats:
 
 
 def pick_backend(backend: str = "auto") -> str:
+    """``auto`` resolves to the pipelined executor: it shards across every
+    local JAX device internally AND overlaps host packing / device compute
+    / JSONL commits, so it subsumes both previous auto choices (the
+    ``device`` pmap fan-out and the ``thread`` pool)."""
     if backend != "auto":
         return backend
+    return "pipeline"
+
+
+def enable_compilation_cache(cache_dir: str) -> bool:
+    """Point JAX's persistent compilation cache at ``cache_dir``.
+
+    Compiled XLA executables are serialized to disk and reloaded by later
+    processes, so CLI cold starts and ``--resume`` invocations skip the
+    multi-second per-skeleton compiles (trace time is not cached — only
+    the XLA compile).  The setting is process-global and sticky: if a
+    cache dir is already configured (by the user or an earlier sweep in
+    this process) it is left alone and False is returned.
+    """
     import jax
-    return "device" if jax.local_device_count() > 1 else "thread"
+    if jax.config.jax_compilation_cache_dir:
+        return False
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+    return True
 
 
 class SweepRunner:
@@ -409,12 +459,21 @@ class SweepRunner:
 
     def __init__(self, spec: SweepSpec, out_dir: Optional[str] = None,
                  backend: str = "auto", workers: Optional[int] = None,
-                 cache=pathfinder.prediction_cache()):
+                 cache=pathfinder.DEFAULT_CACHE,
+                 compile_cache: bool = False,
+                 superbatch: Optional[int] = None):
         self.spec = spec
         self.out_dir = out_dir
         self.backend = pick_backend(backend)
         self.workers = workers or min(4, os.cpu_count() or 1)
-        self.cache = cache
+        # DEFAULT_CACHE sentinel: resolve the live singleton at call time
+        # (an import-time `pathfinder.prediction_cache()` default froze
+        # the cache object at module load — see eval_labels)
+        self.cache = pathfinder.resolve_cache(cache)
+        # opt-in persistent XLA compilation cache under out_dir (the CLI
+        # enables it): resumed / repeated sweeps skip cold compiles
+        self.compile_cache = compile_cache
+        self.superbatch = superbatch
         self._fp = spec.fingerprint()
 
     # -- persistence ------------------------------------------------------
@@ -479,8 +538,24 @@ class SweepRunner:
         return list(_iter_jsonl(res_path))
 
     # -- execution --------------------------------------------------------
+    def _stat_snapshot(self) -> Tuple[Dict, Dict]:
+        cache_stats = self.cache.stats if self.cache is not None \
+            else {"hits": 0, "misses": 0}
+        return cache_stats, pathfinder.compile_cache_stats()
+
+    def _stat_delta(self, before: Tuple[Dict, Dict]) -> Dict[str, int]:
+        c0, k0 = before
+        c1, k1 = self._stat_snapshot()
+        return {"cache_hits": c1["hits"] - c0["hits"],
+                "cache_misses": c1["misses"] - c0["misses"],
+                "compile_hits": k1["hits"] - k0["hits"],
+                "compile_misses": k1["misses"] - k0["misses"]}
+
     def run(self, resume: bool = False, max_chunks: Optional[int] = None,
-            collect: bool = True, verbose: bool = False) -> RunStats:
+            collect: bool = True, verbose: bool = False,
+            frontier_only: bool = False,
+            frontier_capacity: int = pathfinder.FRONTIER_CAPACITY
+            ) -> RunStats:
         """Execute (or continue) the sweep.
 
         resume      skip chunks recorded in checkpoint.jsonl (zero
@@ -488,8 +563,21 @@ class SweepRunner:
         max_chunks  stop after N chunks (benchmarks/tests simulate an
                     interrupted sweep with this).
         collect     return the accumulated records on RunStats.records.
+        frontier_only
+                    device-resident streaming-Pareto mode: per-point rows
+                    never materialize on host; RunStats.records holds only
+                    the frontier (written to DIR/frontier.jsonl, no
+                    results/checkpoint stream, incompatible with resume).
         """
+        if self.compile_cache and self.out_dir is not None:
+            enable_compilation_cache(os.path.join(self.out_dir,
+                                                  "xla_cache"))
+        if frontier_only:
+            return self._run_frontier(max_chunks=max_chunks,
+                                      capacity=frontier_capacity,
+                                      resume=resume)
         t0 = time.perf_counter()
+        stats0 = self._stat_snapshot()
         labels = enumerate_labels(self.spec)
         chunks = make_chunks(labels, self.spec.chunk_size)
         done: Dict[int, str] = {}
@@ -526,8 +614,14 @@ class SweepRunner:
             n_eval_points += len(records)
             if res_fh is not None:
                 for rec in records:
-                    res_fh.write(json.dumps(
-                        json_safe({"chunk": chunk.index, **rec})) + "\n")
+                    row = {"chunk": chunk.index, **rec}
+                    try:
+                        # strict dump first: one C-speed pass for the
+                        # (overwhelmingly common) all-finite record
+                        line = json.dumps(row, allow_nan=False)
+                    except ValueError:
+                        line = json.dumps(json_safe(row))
+                    res_fh.write(line + "\n")
                 res_fh.flush()
                 ckpt_fh.write(json.dumps(
                     {"chunk": chunk.index, "hash": chunk.hash(self._fp),
@@ -558,11 +652,66 @@ class SweepRunner:
             n_chunks_skipped=len(done), n_chunks_evaluated=len(pending),
             n_points_evaluated=n_eval_points,
             elapsed_s=time.perf_counter() - t0, backend=self.backend,
-            out_dir=self.out_dir, records=records)
+            out_dir=self.out_dir, records=records,
+            **self._stat_delta(stats0))
+
+    def _run_frontier(self, max_chunks: Optional[int], capacity: int,
+                      resume: bool) -> RunStats:
+        """Frontier-only mode: stream every point through the fused
+        device-resident Pareto reduction; only the surviving records come
+        back to host (DIR/frontier.jsonl when an out_dir is set)."""
+        from repro.core import sweeppipeline
+        if resume:
+            raise ValueError(
+                "frontier_only keeps no per-chunk checkpoints, so "
+                "resume=True cannot skip work; rerun without --resume")
+        t0 = time.perf_counter()
+        stats0 = self._stat_snapshot()
+        if self.out_dir is not None:
+            # validate the destination BEFORE evaluating anything: a
+            # guard that fires after the sweep would discard hours of
+            # frontier compute
+            os.makedirs(self.out_dir, exist_ok=True)
+            spec_path, _, ckpt_path = self._paths()
+            if os.path.exists(ckpt_path):
+                raise FileExistsError(
+                    f"{self.out_dir} already holds a checkpointed sweep; "
+                    f"frontier-only output would shadow it — point --out "
+                    f"at a fresh directory")
+            self._write_spec(spec_path)
+        labels = enumerate_labels(self.spec)
+        chunks = make_chunks(labels, self.spec.chunk_size)
+        pending = chunks if max_chunks is None else chunks[:max_chunks]
+        ex = sweeppipeline.PipelineExecutor(self.spec, cache=self.cache,
+                                            superbatch=self.superbatch
+                                            or sweeppipeline.SUPERBATCH)
+        records, n_over, n_points = ex.run_frontier(pending,
+                                                    capacity=capacity)
+        if self.out_dir is not None:
+            front_path = os.path.join(self.out_dir, "frontier.jsonl")
+            tmp = front_path + ".tmp"
+            with open(tmp, "w") as fh:
+                for rec in records:
+                    fh.write(json.dumps(json_safe(rec)) + "\n")
+            os.replace(tmp, front_path)
+        return RunStats(
+            n_points_total=len(labels), n_chunks_total=len(chunks),
+            n_chunks_skipped=0, n_chunks_evaluated=len(pending),
+            n_points_evaluated=n_points,
+            elapsed_s=time.perf_counter() - t0, backend="pipeline",
+            out_dir=self.out_dir, records=records,
+            frontier_only=True, n_frontier_overflowed=n_over,
+            **self._stat_delta(stats0))
 
     def _execute(self, pending: List[Chunk], commit):
         spec = self.spec
-        if self.backend in ("serial", "device"):
+        if self.backend == "pipeline":
+            from repro.core import sweeppipeline
+            ex = sweeppipeline.PipelineExecutor(
+                spec, cache=self.cache,
+                superbatch=self.superbatch or sweeppipeline.SUPERBATCH)
+            ex.run(pending, commit)
+        elif self.backend in ("serial", "device"):
             shard = self.backend == "device"
             for c in pending:
                 commit(c, eval_labels(spec, c.labels, cache=self.cache,
@@ -588,7 +737,7 @@ class SweepRunner:
                     commit(by_index[idx], records)
         else:
             raise ValueError(f"unknown backend {self.backend!r}; expected "
-                             "serial|thread|process|device|auto")
+                             "pipeline|serial|thread|process|device|auto")
 
 
 # ---------------------------------------------------------------------------

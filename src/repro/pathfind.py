@@ -11,9 +11,11 @@ Subcommands:
                   --mesh 8x8 --mesh 16x16 \
                   --logic N7,N5,N3 --hbm HBM2E,HBM3 --csv sweep.csv
 
-          With --out DIR the sweep runs on the sharded, chunked, resumable
-          engine (repro.core.sweeprunner): results stream to
-          DIR/results.jsonl, finished chunks are checkpointed, and an
+          With --out DIR the sweep runs on the chunked, resumable engine
+          (repro.core.sweeprunner; default backend = the pipelined
+          executor of repro.core.sweeppipeline): results stream to
+          DIR/results.jsonl, finished chunks are checkpointed, compiled
+          XLA executables persist under DIR/xla_cache, and an
           interrupted sweep continues with ZERO re-evaluation via:
 
               PYTHONPATH=src python -m repro.pathfind sweep \
@@ -28,6 +30,11 @@ Subcommands:
               PYTHONPATH=src python -m repro.pathfind sweep \
                   --scenario serving --arch all --mesh 16x16 \
                   --logic N7,N5 --slo 10 --out sweeps/serve
+
+          --frontier-only streams every point through a device-resident
+          Pareto reduction fused into the compiled evaluator: only the
+          frontier is materialized/printed (DIR/frontier.jsonl), so
+          10^6-point sweeps never pull per-point rows to host.
 
   plan    the CrossFlow -> runtime bridge: best runtime-realizable strategy
           for one (arch, cell, mesh) on the TPU-v5e micro-arch:
@@ -145,13 +152,31 @@ def _parser() -> argparse.ArgumentParser:
     sw.add_argument("--workers", type=int, default=None,
                     help="parallel chunk workers (thread/process backends)")
     sw.add_argument("--backend", default="auto",
-                    choices=["auto", "serial", "thread", "process",
-                             "device"],
-                    help="chunk fan-out: auto = device-sharded pmap when "
-                         ">1 JAX device, else threads")
+                    choices=["auto", "pipeline", "serial", "thread",
+                             "process", "device"],
+                    help="chunk fan-out: auto = the pipelined executor "
+                         "(async double-buffered producer/device/writer "
+                         "pipeline, device-sharded when >1 JAX device)")
     sw.add_argument("--max-chunks", type=int, default=None,
                     help="stop after N chunks (testing/benchmarks; "
                          "combine with --resume to continue)")
+    sw.add_argument("--superbatch", type=int, default=None,
+                    help="design points per device dispatch on the "
+                         "pipeline backend (default 256; commit "
+                         "granularity stays --chunk-size)")
+    sw.add_argument("--frontier-only", action="store_true",
+                    help="device-resident streaming-Pareto mode: only "
+                         "the frontier over the scenario's objectives is "
+                         "materialized/printed (DIR/frontier.jsonl with "
+                         "--out); per-point rows never reach the host, "
+                         "no checkpoints, incompatible with --resume")
+    sw.add_argument("--frontier-cap", type=int, default=None,
+                    help="carried device frontier capacity (default 512; "
+                         "overflow is reported, never silent)")
+    sw.add_argument("--no-compile-cache", action="store_true",
+                    help="do not persist XLA executables under "
+                         "OUT/xla_cache (enabled by default with --out "
+                         "so cold starts and resumes skip recompiles)")
     sw.add_argument("--profile", default=None, metavar="FILE",
                     help="calibration profile JSON (pathfind calibrate); "
                          "every hardware point is evaluated on the "
@@ -252,6 +277,8 @@ def _cmd_sweep(args) -> int:
                       or args.backend != "auto" or args.slo is not None
                       or args.workers is not None or args.chunk_size != 32
                       or args.profile is not None
+                      or args.frontier_only or args.superbatch is not None
+                      or args.frontier_cap is not None
                       or (args.arch and "all" in args.arch))
     if use_runner:
         return _cmd_sweep_runner(args)
@@ -296,7 +323,19 @@ def _cmd_sweep_runner(args) -> int:
     """Sharded / chunked / resumable path (repro.core.sweeprunner)."""
     from repro.core import scenarios, sweeprunner
 
-    kwargs = dict(backend=args.backend, workers=args.workers)
+    kwargs = dict(backend=args.backend, workers=args.workers,
+                  superbatch=args.superbatch,
+                  compile_cache=bool(args.out) and not args.no_compile_cache)
+    if args.frontier_only:
+        if args.resume:
+            print("error: --frontier-only keeps no per-chunk checkpoints; "
+                  "it cannot be combined with --resume", file=sys.stderr)
+            return 2
+        if args.pareto:
+            print("error: --frontier-only already reduces to the "
+                  "scenario's Pareto objectives on device; drop --pareto",
+                  file=sys.stderr)
+            return 2
     if args.resume:
         if not args.out:
             print("error: --resume requires --out DIR", file=sys.stderr)
@@ -345,7 +384,11 @@ def _cmd_sweep_runner(args) -> int:
             profile=profile_dict)
         runner = sweeprunner.SweepRunner(spec, out_dir=args.out, **kwargs)
 
-    stats = runner.run(resume=args.resume, max_chunks=args.max_chunks)
+    run_kwargs = dict(resume=args.resume, max_chunks=args.max_chunks,
+                      frontier_only=args.frontier_only)
+    if args.frontier_cap is not None:
+        run_kwargs["frontier_capacity"] = args.frontier_cap
+    stats = runner.run(**run_kwargs)
     scn = scenarios.get_scenario(
         runner.spec.scenario, slo_s=runner.spec.slo_s,
         cells=runner.spec.cells)
@@ -360,14 +403,30 @@ def _cmd_sweep_runner(args) -> int:
         with open(args.csv, "w") as fh:
             fh.write(csv_text + "\n")
         print(f"# wrote {len(shown)} points to {args.csv}", file=sys.stderr)
-    print(f"# sweep[{scn.name}] backend={stats.backend}: "
+    mode = " frontier-only" if stats.frontier_only else ""
+    print(f"# sweep[{scn.name}]{mode} backend={stats.backend}: "
           f"{stats.n_points_total} points in {stats.n_chunks_total} chunks; "
           f"skipped {stats.n_chunks_skipped} checkpointed, evaluated "
           f"{stats.n_chunks_evaluated} "
           f"({stats.n_points_evaluated} points) in {stats.elapsed_s:.1f}s",
           file=sys.stderr)
+    print(f"# cache: prediction {stats.cache_hits} hits / "
+          f"{stats.cache_misses} misses; compiled fns "
+          f"{stats.compile_misses} built / {stats.compile_hits} reused",
+          file=sys.stderr)
+    if stats.frontier_only:
+        print(f"# frontier: {len(records)} non-dominated points over "
+              f"{'/'.join(scn.objectives)}", file=sys.stderr)
+        if stats.n_frontier_overflowed:
+            print(f"# warning: device frontier capacity overflowed "
+                  f"({stats.n_frontier_overflowed} candidates dropped); "
+                  f"raise --frontier-cap", file=sys.stderr)
     if not stats.complete:
-        if stats.out_dir:
+        if stats.frontier_only:
+            print("# incomplete (frontier-only keeps no checkpoints: "
+                  "rerun without --max-chunks for the full frontier)",
+                  file=sys.stderr)
+        elif stats.out_dir:
             print(f"# incomplete: resume with `python -m repro.pathfind "
                   f"sweep --out {stats.out_dir} --resume`", file=sys.stderr)
         else:

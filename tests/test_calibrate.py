@@ -143,6 +143,35 @@ def test_predictor_rejects_unknown_kind():
         fitting.build_predictor([{"kind": "nope", "t_s": 1.0}], template)
 
 
+# ------------------------------------------------------------- decode_step
+def test_decode_step_measured_predicted_and_fitted():
+    """ISSUE-5 satellite: the KV-cache-read-bound decode step is a
+    first-class microbench kind — measured on the real model's
+    `decode_step` over a full cache, predicted through the decode-kind
+    lmgraph, and part of the default fit groups."""
+    assert "decode_step" in microbench.KINDS
+    assert "decode_step" in fitting.KINDS_FITTED
+    full = microbench.default_spec("full")
+    assert "decode_step" in full.model_phases
+    spec = MeasureSpec(suite="dec", model_archs=("qwen1.5-0.5b",),
+                       model_phases=("decode_step",), reps=1)
+    pts = microbench.enumerate_points(spec)
+    assert [p.kind for p in pts] == ["decode_step"]
+    cell = microbench.model_cell(pts[0])
+    assert cell.kind == "decode"
+    rec = microbench.measure_point(pts[0], spec)
+    assert rec["kind"] == "decode_step" and rec["t_s"] > 0
+    assert rec["bytes"] > 0                # KV read volume is the traffic
+    template = age.cpu_host_microarch()
+    pred = fitting.predict_measurements([rec], template, ppe=PPE)
+    assert np.isfinite(pred).all() and (pred > 0).all()
+    # the fitter consumes the record (its group appears in the report)
+    from repro.calibrate import report
+    rep = report.validation_report([rec], template, ppe=PPE)
+    assert "decode_step:qwen1.5-0.5b" in rep["groups"]
+    assert rep["overall"]["n"] == 1        # fitted kind -> in the overall
+
+
 # --------------------------------------------------------------- profiles
 def test_profile_roundtrip_and_apply(tmp_path):
     template = age.cpu_host_microarch()

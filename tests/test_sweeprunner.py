@@ -328,12 +328,20 @@ ev = pathfinder.BatchedEvaluator(g, st, ppe=PPEConfig(n_tilings=4),
 one = ev.evaluate_matrix(template, hw, devices=1)
 two = ev.evaluate_matrix(template, hw, devices=2)   # 9 pads to 10 rows
 np.testing.assert_allclose(two, one, rtol=1e-5)
-assert sweeprunner.pick_backend("auto") == "device"
+# PR5: auto is the pipelined executor on any device count (it shards
+# internally); the explicit device backend stays available
+assert sweeprunner.pick_backend("auto") == "pipeline"
 spec = sweeprunner.SweepSpec(arches=("qwen1.5-0.5b",),
                              mesh_shapes=((2, 2),), n_tilings=4,
                              chunk_size=8)
 stats = sweeprunner.SweepRunner(spec, backend="device").run()
 assert stats.complete and stats.backend == "device"
+pstats = sweeprunner.SweepRunner(spec, backend="pipeline").run()
+assert pstats.complete
+got = {r["key"]: r for r in pstats.records}
+for r in stats.records:
+    np.testing.assert_allclose(got[r["key"]]["time_s"], r["time_s"],
+                               rtol=1e-5)
 print("DEVICE_PARITY_OK")
 """
 
