@@ -127,6 +127,17 @@ def _bench_cooptimize() -> BenchResult:
         f",gain={v['best_gain']:.2f}x" for s, v in r.items()), r)
 
 
+def _bench_serving_traffic() -> BenchResult:
+    """Traffic-driven serving sweep + inverse fleet sizing (ISSUE-6)."""
+    from benchmarks import serving_traffic
+    r = serving_traffic.main(verbose=False)
+    top = max(r["best_devices"], key=float)
+    return (f"sweep_pps={r['sweep_pps']:.0f};"
+            f"query_ms={r['query_ms_per_target']:.1f};"
+            f"best@{top}qps={r['best_devices'][top]}dev;"
+            f"frontier_ok={int(r['frontier_ok'])}"), r
+
+
 def _bench_calibration() -> BenchResult:
     """Measured GEMM calibration -> strict MRE gain (ISSUE-4 tentpole)."""
     from benchmarks import calibration_gain
@@ -167,6 +178,7 @@ BENCHES: Dict[str, Callable[[], BenchResult]] = {
     "sweep_shard": _bench_sweep_shard,
     "sweep_pipeline": _bench_sweep_pipeline,
     "cooptimize_refine": _bench_cooptimize,
+    "serving_traffic": _bench_serving_traffic,
     "calibration_gain": _bench_calibration,
     "crossflow_query_latency": _bench_crossflow_query,
     "roofline": _bench_roofline,

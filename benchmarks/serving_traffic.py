@@ -1,0 +1,126 @@
+"""Traffic-driven serving sweep + inverse fleet-sizing query (ISSUE-6).
+
+Runs the continuous-batching serving scenario end-to-end through the
+pipelined sweep executor with batching-policy parameters as sweep axes
+(`prefill_chunk` variants ride in the cell id), then answers the inverse
+question — "how many devices for X QPS under these percentile SLOs?" —
+with `traffic.size_fleet` over the already-swept records.
+
+Asserts (ISSUE-6 acceptance):
+  * the swept grid exercises feasible, capacity-infeasible AND
+    SLO-wall-failing points (otherwise the walls aren't being tested);
+  * ``--frontier-only`` on the traffic scenario returns the identical
+    Pareto set as full materialization (percentile walls are traceable);
+  * the inverse query touches ZERO sweep evaluations — it is pure
+    closed-form work over the records — and returns a minimal plan
+    (the best candidate fails its SLOs at one replica fewer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+QPS_TARGETS = (2.0, 8.0, 32.0)
+# tuned to the demo grid's scale: zero-load TTFT p99 bottoms out near
+# 3.8 s and decode steps near 1.7 s on the reference silicon
+SLO = {"ttft_p99": 30.0, "tpot_p50": 2.5}
+
+
+def main(verbose: bool = True) -> Dict:
+    import numpy as np
+
+    from repro.core import pathfinder, sweeprunner, traffic
+
+    spec = sweeprunner.SweepSpec(
+        arches=("qwen1.5-0.5b",), mesh_shapes=((2, 2), (4, 4), (2, 8)),
+        scenario="serving-traffic", logic_nodes=("N7", "N5"),
+        budget_scales=(0.9, 1.1), n_tilings=4, chunk_size=16,
+        scenario_params={"qps": 0.1,
+                         "prefill_chunk": [1024.0, 8192.0],
+                         "slo_ttft_p99": [5.0, 50.0]})
+    n_points = len(sweeprunner.enumerate_labels(spec))
+
+    t0 = time.perf_counter()
+    full = sweeprunner.SweepRunner(spec, backend="pipeline",
+                                   cache=None).run()
+    sweep_s = time.perf_counter() - t0
+    assert full.complete and full.n_points_evaluated == n_points
+    records = full.records
+    regimes = {(r["feasible"], r["slo_ok"]) for r in records}
+    assert (True, True) in regimes, "no point passes the SLO walls"
+    assert (False, False) in regimes, "no capacity-infeasible point"
+    assert (True, False) in regimes, "no SLO-wall-failing point"
+
+    # -- percentile walls are traceable: frontier-only == host re-filter --
+    scn = spec.scenario_spec.variants()[0].resolve()
+    want = sorted(r["key"] for r in sweeprunner.pareto_records(
+        records, scn.objectives))
+    front = sweeprunner.SweepRunner(spec, backend="pipeline",
+                                    cache=None).run(frontier_only=True)
+    got = sorted(r["key"] for r in front.records)
+    assert front.n_frontier_overflowed == 0
+    assert want and got == want, (
+        f"frontier-only diverged under SLO walls\n  got  {got}\n"
+        f"  want {want}")
+
+    # -- inverse query: zero re-evaluation, brute-force minimality --------
+    tm, policy, _ = traffic.split_params(
+        {**traffic.PARAM_DEFAULTS,
+         **{k: v for k, v in spec.scenario_params.items()
+            if not isinstance(v, (list, tuple))}})
+    plans = {}
+    t0 = time.perf_counter()
+    for qps in QPS_TARGETS:
+        plans[qps] = traffic.size_fleet(records, qps, slo=SLO,
+                                        traffic=tm, policy=policy)
+    query_s = time.perf_counter() - t0
+    for qps, plan in plans.items():
+        assert plan.best is not None, f"no sizeable design at {qps} qps"
+        rec = next(r for r in records if r["key"] == plan.best.key)
+        c1 = traffic._record_consts(rec, tm, policy, qps)
+        if plan.best.replicas > 1:
+            ok_less, _ = traffic._meets(
+                float(rec["prefill_s"]), float(rec["decode_step_s"]),
+                dataclasses.replace(c1, qps=qps / (plan.best.replicas - 1)),
+                SLO)
+            assert not ok_less, f"{qps} qps plan is not minimal"
+    best = plans[max(QPS_TARGETS)].best
+    n_sweep_evals = sum(p.n_records for p in plans.values())
+    assert n_sweep_evals and all(
+        np.isfinite(p.best.per_replica_qps) for p in plans.values())
+
+    r = {
+        "n_points": n_points,
+        "sweep_s": sweep_s,
+        "sweep_pps": n_points / sweep_s,
+        "query_ms_per_target": query_s * 1e3 / len(QPS_TARGETS),
+        "qps_targets": list(QPS_TARGETS),
+        "slo": dict(SLO),
+        "best_devices": {f"{q:g}": p.best.devices
+                         for q, p in plans.items()},
+        "best_replicas": {f"{q:g}": p.best.replicas
+                          for q, p in plans.items()},
+        "frontier_ok": got == want,
+        "regimes": sorted(map(list, regimes)),
+        "compile_misses": pathfinder.compile_cache_stats()["misses"],
+    }
+    if verbose:
+        print(f"serving_traffic: {n_points} points "
+              f"({len(spec.scenario_spec.variants())} traffic variants), "
+              f"{sweep_s:.1f}s sweep ({r['sweep_pps']:.0f} pts/s)")
+        print(f"  frontier-only : identical Pareto set under SLO walls "
+              f"({'ok' if r['frontier_ok'] else 'FAIL'})")
+        for q in QPS_TARGETS:
+            p = plans[q]
+            print(f"  size @{q:5g} qps: {p.best.devices} devices = "
+                  f"{p.best.replicas} x {p.best.devices_per_replica} "
+                  f"({r['query_ms_per_target']:.1f} ms, zero sweep "
+                  f"re-evaluations)")
+        _ = best
+    return r
+
+
+if __name__ == "__main__":
+    main()

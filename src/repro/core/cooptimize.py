@@ -432,8 +432,10 @@ def refine_sweep(src: Union[str, Tuple[SweepSpec, List[Dict]]],
             out_path = os.path.join(src, "refined.jsonl")
     else:
         spec, records = src
-    scn = scenarios.get_scenario(spec.scenario, slo_s=spec.slo_s,
-                                 cells=spec.cells)
+    # objectives/SLO walls are variant-independent, so any variant of the
+    # spec's ScenarioSpec works for frontier filtering; per-candidate
+    # scoring below re-resolves the exact variant from each record's cell
+    scn = spec.scenario_spec.variants()[0].resolve()
     frontier = sweeprunner.pareto_records(records, scn.objectives)
     seeds = sorted(frontier, key=lambda r: scn.objective_values(r))
     seeds = seeds[:max(cfg.top_k, 0)]
@@ -484,8 +486,8 @@ def refine_sweep(src: Union[str, Tuple[SweepSpec, List[Dict]]],
                 arch, budgets, knobs = realize_theta(tech, like, theta, cfg,
                                                      profile=spec.profile)
                 dp_r = dataclasses.replace(dp, hw=arch)
-                rows = pathfinder.evaluate_points(scn_pt.eval_points(dp_r),
-                                                  ppe=ppe)
+                rows = pathfinder.evaluate(
+                    points=scn_pt.eval_points(dp_r), ppe=ppe)
                 rec = scn_pt.record(dp_r, rows)
                 rec["key"] = dp_r.key() + f"#refined{len(refined)}"
                 rec["seed_key"] = seed["key"]

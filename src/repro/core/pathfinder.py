@@ -490,12 +490,12 @@ class EvalPoint:
     pod_bw: Optional[float] = None
 
 
-def evaluate_points(points: Sequence[EvalPoint],
-                    ppe: PPEConfig = PPEConfig(),
-                    cache: Optional[PredictionCache] = DEFAULT_CACHE,
-                    min_batch_jit: int = 4,
-                    shard_devices: bool = False,
-                    shard_block: int = 0) -> np.ndarray:
+def _evaluate_points_impl(points: Sequence[EvalPoint],
+                          ppe: PPEConfig = PPEConfig(),
+                          cache: Optional[PredictionCache] = DEFAULT_CACHE,
+                          min_batch_jit: int = 4,
+                          shard_devices: bool = False,
+                          shard_block: int = 0) -> np.ndarray:
     """Score a heterogeneous candidate list -> (N, 5) metric matrix.
 
     Points are grouped by skeleton (graph fingerprint, strategy, system,
@@ -524,6 +524,88 @@ def evaluate_points(points: Sequence[EvalPoint],
         for j, i in enumerate(idxs):
             out[i] = rows[j]
     return out
+
+
+def evaluate(points: Optional[Sequence[EvalPoint]] = None, *,
+             spec=None, labels=None,
+             template: Optional[MicroArch] = None, matrix=None,
+             graph: Optional[ComputeGraph] = None,
+             strategy: Optional[Strategy] = None,
+             system: Optional[SystemGraph] = None,
+             pod_bw: Optional[float] = None,
+             ppe: PPEConfig = PPEConfig(),
+             cache: Optional[PredictionCache] = DEFAULT_CACHE,
+             min_batch_jit: int = 4,
+             shard_devices: bool = False,
+             shard_block: int = 0,
+             devices: Optional[int] = None) -> np.ndarray:
+    """Score candidates — THE eval entry point, in one of three modes.
+
+    Exactly one mode per call (mixing raises ``ValueError``):
+
+    * **points mode** — ``evaluate(points=[EvalPoint, ...])``: a
+      heterogeneous candidate list, grouped by skeleton so hardware-only
+      axes collapse into single vmapped calls; returns an ``(N, 5)``
+      float64 matrix ordered like `METRICS`.
+    * **label mode** — ``evaluate(spec=SweepSpec, labels=[PointLabel,
+      ...])``: resolves sweep labels through their scenario (PPE/profile
+      come from the spec, not the ``ppe`` argument) and returns the
+      scenario's *result records* (list of dicts), exactly what
+      `SweepRunner` commits per chunk.
+    * **matrix mode** — ``evaluate(template=MicroArch, matrix=(N,
+      HW_DIM), graph=..., strategy=...)``: the matrix-native fast path;
+      rows enter JAX as one array, optionally pmap-sharded row-wise
+      across ``devices`` with ``shard_block`` padding.
+
+    Supersedes the three historical entry points
+    (`sweeprunner.eval_labels`, `evaluate_points`,
+    `BatchedEvaluator.evaluate_matrix`), which remain as thin
+    deprecation wrappers.
+    """
+    n_modes = sum((points is not None,
+                   spec is not None or labels is not None,
+                   template is not None or matrix is not None))
+    if n_modes != 1:
+        raise ValueError(
+            "evaluate() takes exactly one of: points=..., "
+            "(spec=..., labels=...), or (template=..., matrix=...)")
+    if points is not None:
+        return _evaluate_points_impl(points, ppe=ppe, cache=cache,
+                                     min_batch_jit=min_batch_jit,
+                                     shard_devices=shard_devices,
+                                     shard_block=shard_block)
+    if matrix is not None or template is not None:
+        if template is None or matrix is None or graph is None \
+                or strategy is None:
+            raise ValueError("matrix mode needs template=, matrix=, "
+                             "graph= and strategy=")
+        ev = BatchedEvaluator(graph, strategy, system=system, ppe=ppe,
+                              pod_bw=pod_bw, cache=cache)
+        return ev.evaluate_matrix(template, matrix, devices=devices,
+                                  block=shard_block)
+    if spec is None or labels is None:
+        raise ValueError("label mode needs both spec= and labels=")
+    from repro.core import sweeprunner   # lazy: sweeprunner imports us
+    return sweeprunner._eval_labels_impl(spec, labels, cache=cache,
+                                         shard_devices=shard_devices)
+
+
+def evaluate_points(points: Sequence[EvalPoint],
+                    ppe: PPEConfig = PPEConfig(),
+                    cache: Optional[PredictionCache] = DEFAULT_CACHE,
+                    min_batch_jit: int = 4,
+                    shard_devices: bool = False,
+                    shard_block: int = 0) -> np.ndarray:
+    """Deprecated alias — use ``evaluate(points=...)`` (one documented
+    facade over the three historical eval entry points)."""
+    import warnings
+    warnings.warn("pathfinder.evaluate_points is deprecated; use "
+                  "pathfinder.evaluate(points=...)",
+                  DeprecationWarning, stacklevel=2)
+    return _evaluate_points_impl(points, ppe=ppe, cache=cache,
+                                 min_batch_jit=min_batch_jit,
+                                 shard_devices=shard_devices,
+                                 shard_block=shard_block)
 
 
 # ---------------------------------------------------------------------------
@@ -792,7 +874,7 @@ def sweep(arches: Sequence[str], cells: Sequence[str],
                                                 system=system))
                         labels.append((arch_name, cell_name, tuple(mesh),
                                        logic, hbm, net, st))
-    rows = evaluate_points(points, ppe=ppe, cache=cache)
+    rows = evaluate(points=points, ppe=ppe, cache=cache)
     out = []
     for (arch_name, cell_name, mesh, logic, hbm, net, st), row in zip(labels,
                                                                       rows):

@@ -4,7 +4,7 @@ This is where the paper's pathfinding becomes a *first-class feature* of the
 training framework (DESIGN.md §2): given (arch config, shape cell, physical
 mesh), the planner enumerates the parallelism strategies the runtime
 supports, scores ALL of them in one batched-engine call
-(`pathfinder.evaluate_points`: one struct-of-arrays vmapped evaluation per
+(`pathfinder.evaluate`: one struct-of-arrays vmapped evaluation per
 skeleton, LRU prediction cache shared with sweeps and the SOE — a re-planned
 (arch, cell, mesh) is free), and emits the argmin as a `ShardingPlan` that
 `repro.launch` turns into PartitionSpecs. The prediction is recorded so the
@@ -103,9 +103,9 @@ def plan(cfg: ArchConfig, cell: ShapeCell, mesh_shape: Tuple[int, ...],
     # all candidates scored in one batched-engine call (LRU-cached, so a
     # replanned (arch, cell, mesh) is free — launch/dryrun/serve re-plan)
     cands = candidate_strategies(cfg, cell, mesh_shape)
-    rows = pathfinder.evaluate_points(
-        [pathfinder.EvalPoint(hw, graph, st, system=system)
-         for st in cands], ppe=ppe)
+    rows = pathfinder.evaluate(
+        points=[pathfinder.EvalPoint(hw, graph, st, system=system)
+                for st in cands], ppe=ppe)
     best = None
     for st, row in zip(cands, rows):
         t = float(row[0])

@@ -26,13 +26,14 @@ attention GEMMs already charge KV *bandwidth* per step).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import ArchConfig, SHAPE_CELLS, get_config
-from repro.core import lmgraph, simulate
+from repro.core import lmgraph, simulate, traffic
 from repro.core.age import MicroArch
 from repro.core.graph import ComputeGraph
 from repro.core.parallelism import Strategy
@@ -472,8 +473,176 @@ class ServingScenario(Scenario):
         return fold
 
 
+class ServingTrafficScenario(ServingScenario):
+    """Traffic-driven continuous-batching serving (`repro.core.traffic`).
+
+    Same prefill/decode phase costs and KV-capacity derate as `serving`,
+    but scored against a request arrival process: Poisson QPS, lognormal
+    prompt/output lengths, chunked prefill riding decode steps.  Records
+    carry TTFT/TPOT *percentiles*, Erlang utilization, the max sustainable
+    QPS, and the raw phase costs (``prefill_s`` / derated
+    ``decode_step_s``) the inverse fleet-sizing query replays without
+    re-evaluating any sweep point.  Configured percentile SLOs act as
+    feasibility walls: violating records keep their metrics but fold to
+    non-finite objectives (excluded from every frontier).
+    """
+
+    name = "serving-traffic"
+    description = ("continuous-batching serving under a QPS arrival "
+                   "process: TTFT/TPOT percentiles, SLO walls, fleet cost")
+    fields = ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+              "util", "qps_max", "tokens_per_s", "tokens_per_s_per_device",
+              "cost_device_s_per_token", "prefill_s", "decode_step_s",
+              "hbm_occupancy", "kv_derate", "feasible", "slo_ok")
+    objectives = ("ttft_p99_s", "cost_device_s_per_token")
+    refine_objective_fields = ("ttft_p99_s", "cost_device_s_per_token")
+
+    def __init__(self, prefill_cell: str = "prefill_32k",
+                 decode_cell: str = "decode_32k",
+                 params: Optional[Mapping] = None,
+                 name: str = "serving-traffic",
+                 variant: Optional[Mapping[str, float]] = None):
+        self.prefill_cell = prefill_cell
+        self.decode_cell = decode_cell
+        self.params = {**traffic.PARAM_DEFAULTS, **(params or {})}
+        self.traffic, self.policy, self.slo = \
+            traffic.split_params(self.params)
+        self.slo_s = self.slo.get("ttft_p99")    # legacy single-SLO view
+        self.name = name
+        self.variant = dict(variant or {})
+
+    def cell_id(self) -> str:
+        return traffic.encode_variant(
+            f"{self.prefill_cell}+{self.decode_cell}", self.variant)
+
+    def _consts(self, devices: float) -> traffic.ServeConsts:
+        pc = SHAPE_CELLS[self.prefill_cell]
+        dc = SHAPE_CELLS[self.decode_cell]
+        return traffic.build_consts(
+            self.traffic, self.policy, slots=dc.global_batch,
+            prefill_tokens=float(pc.global_batch) * pc.seq_len,
+            devices=devices)
+
+    def objective_values(self, rec: Dict) -> Optional[Tuple[float, ...]]:
+        if rec.get("slo_ok") is False:           # percentile walls are
+            return None                          # feasibility walls here
+        return super().objective_values(rec)
+
+    def record(self, dp: DesignPoint, rows: np.ndarray) -> Dict:
+        from repro.core import roofline
+        cell = SHAPE_CELLS[self.decode_cell]
+        st = dp.strategy
+        w_dev, kv_dev = serving_bytes_per_device(dp.cfg, st, cell)
+        w_f, kv_f = float(w_dev), float(kv_dev)
+        knee = roofline.CAPACITY_PRESSURE_KNEE
+        # mirror the vectorized fold op-for-op (f64 throughout) so the
+        # pipelined executor's records are bit-identical to this path
+        cap = max(float(dp.hw.dram_capacity), 1.0)
+        occ = (w_f + kv_f) / cap
+        over = max(occ - knee, 0.0) / max(1.0 - knee, 1e-9)
+        derate = np.inf if occ >= 1.0 else 1.0 + 0.5 * over * over
+        t_pf = float(rows[0][0])
+        t_d = float(rows[1][0]) * derate
+        c = self._consts(float(st.devices))
+        stats = traffic.continuous_batching_stats(
+            np, np.float64(t_pf), np.float64(t_d), c)
+        ok = traffic.slo_ok(stats, self.slo)
+        f = lambda k: float(np.asarray(stats[k]))  # noqa: E731
+        return {**dp.label_fields(),
+                **{k: f(k) for k in
+                   ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+                    "util", "qps_max", "tokens_per_s",
+                    "tokens_per_s_per_device", "cost_device_s_per_token")},
+                "prefill_s": t_pf, "decode_step_s": t_d,
+                "kv_bytes_per_device": kv_f,
+                "weight_bytes_per_device": w_f,
+                "hbm_occupancy": occ, "kv_derate": derate,
+                "feasible": bool(np.asarray(stats["feasible"])),
+                "slo_ok": bool(np.asarray(ok))}
+
+    def refine_objectives(self, dp: DesignPoint):
+        from repro.core import roofline
+        import jax.numpy as jnp
+        cell = SHAPE_CELLS[self.decode_cell]
+        w_dev, kv_dev = serving_bytes_per_device(dp.cfg, dp.strategy, cell)
+        c = self._consts(float(dp.strategy.devices))
+
+        def fold(totals, dram_capacity):
+            occ = (w_dev + kv_dev) / jnp.maximum(dram_capacity, 1.0)
+            t_d = totals[1] * roofline.capacity_pressure_derate_soft(occ)
+            st = traffic.continuous_batching_stats(
+                jnp, totals[0], t_d, c, mask_infeasible=False)
+            # the hard util wall is flat after clamping; a soft barrier
+            # keeps descent pointed back inside the feasible region
+            wall = jnp.maximum(st["util"] - 1.0, 0.0)
+            barrier = 1.0 + 1e3 * wall * wall
+            return (st["ttft_p99_s"] * barrier,
+                    st["cost_device_s_per_token"] * barrier)
+        return fold
+
+    def frontier_fold(self, cfg: ArchConfig, strategy: Strategy):
+        from repro.core import pathfinder, roofline
+        import jax.numpy as jnp
+        cell = SHAPE_CELLS[self.decode_cell]
+        w_dev, kv_dev = serving_bytes_per_device(cfg, strategy, cell)
+        w_f, kv_f = float(w_dev), float(kv_dev)
+        knee = roofline.CAPACITY_PRESSURE_KNEE
+        cap_i = pathfinder.HW_FIELDS.index("dram_capacity")
+        c = self._consts(float(strategy.devices))
+        slo = self.slo
+
+        def fold(rows, hw_vec):
+            occ = (w_f + kv_f) / jnp.maximum(hw_vec[cap_i], 1.0)
+            over = jnp.maximum(occ - knee, 0.0) / max(1.0 - knee, 1e-9)
+            derate = jnp.where(occ >= 1.0, jnp.inf,
+                               1.0 + 0.5 * over * over)
+            st = traffic.continuous_batching_stats(
+                jnp, rows[0, 0], rows[1, 0] * derate, c)
+            ok = traffic.slo_ok(st, slo, xp=jnp)
+            return jnp.stack([
+                jnp.where(ok, st["ttft_p99_s"], jnp.inf),
+                jnp.where(ok, st["cost_device_s_per_token"], jnp.inf)])
+        return fold
+
+    def metrics_fold(self, cfg: ArchConfig, strategy: Strategy, cell_id):
+        from repro.core import pathfinder, roofline
+        cell = SHAPE_CELLS[self.decode_cell]
+        w_dev, kv_dev = serving_bytes_per_device(cfg, strategy, cell)
+        w_f, kv_f = float(w_dev), float(kv_dev)
+        cap_i = pathfinder.HW_FIELDS.index("dram_capacity")
+        knee = roofline.CAPACITY_PRESSURE_KNEE
+        c = self._consts(float(strategy.devices))
+        slo = self.slo
+        keys = ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+                "util", "qps_max", "tokens_per_s",
+                "tokens_per_s_per_device", "cost_device_s_per_token")
+
+        def fold(rows, hw):
+            cap = np.maximum(hw[:, cap_i].astype(np.float64), 1.0)
+            occ = (w_f + kv_f) / cap
+            over = np.maximum(occ - knee, 0.0) / max(1.0 - knee, 1e-9)
+            derate = np.where(occ >= 1.0, np.inf, 1.0 + 0.5 * over * over)
+            t_pf = rows[:, 0, 0].astype(np.float64)
+            t_d = rows[:, 1, 0].astype(np.float64) * derate
+            stats = traffic.continuous_batching_stats(np, t_pf, t_d, c)
+            ok = traffic.slo_ok(stats, slo)
+            cols = [np.asarray(stats[k]).tolist() for k in keys]
+            return [
+                {**dict(zip(keys, vals)),
+                 "prefill_s": tp, "decode_step_s": td,
+                 "kv_bytes_per_device": kv_f,
+                 "weight_bytes_per_device": w_f,
+                 "hbm_occupancy": o, "kv_derate": dr,
+                 "feasible": fz, "slo_ok": sk}
+                for vals, tp, td, o, dr, fz, sk in zip(
+                    zip(*cols), t_pf.tolist(), t_d.tolist(), occ.tolist(),
+                    derate.tolist(), np.asarray(stats["feasible"]).tolist(),
+                    np.asarray(ok).tolist())]
+        return fold
+
+
 # ---------------------------------------------------------------------------
-# Registry
+# Registry + ScenarioSpec (THE way scenarios are constructed)
 # ---------------------------------------------------------------------------
 
 
@@ -487,25 +656,170 @@ def register_scenario(scenario: Scenario, replace: bool = False) -> Scenario:
     return scenario
 
 
+def _canon_params(params) -> Tuple[Tuple[str, object], ...]:
+    """Sorted (key, value) pairs; multi-valued entries (sweep axes) become
+    float tuples, scalars become floats, None stays None."""
+    if not params:
+        return ()
+    items = dict(params)
+    out = []
+    for k in sorted(items):
+        v = items[k]
+        if isinstance(v, (list, tuple)):
+            v = tuple(float(x) for x in v)
+            if len(v) == 1:
+                v = v[0]
+        elif v is not None:
+            v = float(v)
+        out.append((str(k), v))
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Typed, JSON-serializable scenario construction request.
+
+    The single way scenarios are built across `SweepSpec`, `cooptimize`,
+    `pathfinder.sweep`, and the CLI: a registry name plus optional cell
+    overrides, a legacy scalar SLO, and typed per-scenario ``params``
+    (see `traffic.PARAM_DEFAULTS` for the serving-traffic keys).  A param
+    set to a *list* of values declares a sweep axis: `variants()` expands
+    the cross product, and each variant's swept values ride in the cell-id
+    as a ``@k=v,...`` suffix so point keys, chunk hashes, and checkpoint
+    resume work unchanged.  Construction is side-effect free; `resolve()`
+    returns the live `Scenario`.
+    """
+
+    name: str = "train"
+    cells: Tuple[str, ...] = ()
+    slo_s: Optional[float] = None
+    params: Tuple[Tuple[str, object], ...] = ()
+    # params keys that came from a sweep axis (encoded into the cell id)
+    variant_keys: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "cells", tuple(self.cells))
+        object.__setattr__(self, "params", _canon_params(self.params))
+        object.__setattr__(self, "variant_keys",
+                           tuple(self.variant_keys))
+
+    # -------------------------------------------------- construction
+    @classmethod
+    def coerce(cls, obj, cells: Sequence[str] = (),
+               slo_s: Optional[float] = None,
+               params: Optional[Mapping] = None) -> "ScenarioSpec":
+        """Normalize a scenario name / dict / spec into a ScenarioSpec."""
+        if isinstance(obj, ScenarioSpec):
+            return obj
+        if isinstance(obj, str):
+            return cls(name=obj, cells=tuple(cells), slo_s=slo_s,
+                       params=_canon_params(params))
+        if isinstance(obj, Mapping):
+            return cls.from_dict(obj)
+        raise TypeError(f"cannot build a ScenarioSpec from {type(obj)!r}")
+
+    @property
+    def param_dict(self) -> Dict[str, object]:
+        return dict(self.params)
+
+    def to_dict(self) -> Dict[str, object]:
+        d: Dict[str, object] = {"name": self.name}
+        if self.cells:
+            d["cells"] = list(self.cells)
+        if self.slo_s is not None:
+            d["slo_s"] = self.slo_s
+        if self.params:
+            d["params"] = {k: (list(v) if isinstance(v, tuple) else v)
+                           for k, v in self.params}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ScenarioSpec":
+        return cls(name=d.get("name", "train"),
+                   cells=tuple(d.get("cells", ())),
+                   slo_s=d.get("slo_s"),
+                   params=_canon_params(d.get("params")))
+
+    # -------------------------------------------------- axis expansion
+    def axes(self) -> Dict[str, Tuple[float, ...]]:
+        """The multi-valued params — the scenario's sweep axes."""
+        return {k: v for k, v in self.params if isinstance(v, tuple)}
+
+    def variants(self) -> List["ScenarioSpec"]:
+        """Expand sweep-axis params into scalar variant specs (sorted-key
+        cross product; a spec with no axes yields itself)."""
+        axes = self.axes()
+        if not axes:
+            return [self]
+        keys = sorted(axes)
+        out = []
+        for combo in itertools.product(*(axes[k] for k in keys)):
+            p = self.param_dict
+            p.update(zip(keys, combo))
+            out.append(dataclasses.replace(
+                self, params=_canon_params(p), variant_keys=tuple(keys)))
+        return out
+
+    def for_cell_id(self, cell_id: str) -> "ScenarioSpec":
+        """The variant spec for one recorded cell id (cells + any swept
+        param overrides carried in its ``@k=v,...`` suffix)."""
+        base, over = traffic.decode_variant(cell_id)
+        p = self.param_dict
+        p.update(over)
+        return dataclasses.replace(
+            self, cells=tuple(base.split("+")), params=_canon_params(p),
+            variant_keys=tuple(sorted(over)))
+
+    # -------------------------------------------------- resolution
+    def resolve(self) -> Scenario:
+        """Build the live Scenario (registry lookup + overrides)."""
+        base = _REGISTRY.get(self.name)
+        if base is None:
+            raise KeyError(f"unknown scenario {self.name!r}; "
+                           f"registered: {sorted(_REGISTRY)}")
+        if self.axes():
+            raise ValueError(
+                f"scenario {self.name!r} has multi-valued params "
+                f"{sorted(self.axes())}: expand with variants() first")
+        params = self.param_dict
+        if isinstance(base, ServingTrafficScenario):
+            pc, dc = base.prefill_cell, base.decode_cell
+            if self.cells:
+                if len(self.cells) != 2:
+                    raise ValueError("serving scenario takes exactly two "
+                                     "cells (prefill, decode)")
+                pc, dc = self.cells
+            merged = dict(base.params)
+            if self.slo_s is not None:
+                merged["slo_ttft_p99"] = self.slo_s
+            merged.update(params)
+            variant = {k: merged[k] for k in self.variant_keys}
+            return ServingTrafficScenario(prefill_cell=pc, decode_cell=dc,
+                                          params=merged, name=base.name,
+                                          variant=variant)
+        if params:
+            raise ValueError(f"scenario {self.name!r} takes no params; "
+                             f"got {sorted(params)}")
+        if isinstance(base, TrainScenario) and self.cells:
+            return TrainScenario(cell=self.cells[0], name=base.name)
+        if isinstance(base, ServingScenario) and (self.slo_s is not None
+                                                  or self.cells):
+            pc, dc = base.prefill_cell, base.decode_cell
+            if self.cells:
+                if len(self.cells) != 2:
+                    raise ValueError("serving scenario takes exactly two "
+                                     "cells (prefill, decode)")
+                pc, dc = self.cells
+            return ServingScenario(prefill_cell=pc, decode_cell=dc,
+                                   slo_s=self.slo_s, name=base.name)
+        return base
+
+
 def get_scenario(name: str, slo_s: Optional[float] = None,
                  cells: Sequence[str] = ()) -> Scenario:
-    """Look up a scenario; optional per-call overrides (SLO, train cell)."""
-    base = _REGISTRY.get(name)
-    if base is None:
-        raise KeyError(f"unknown scenario {name!r}; "
-                       f"registered: {sorted(_REGISTRY)}")
-    if isinstance(base, TrainScenario) and cells:
-        return TrainScenario(cell=tuple(cells)[0], name=base.name)
-    if isinstance(base, ServingScenario) and (slo_s is not None or cells):
-        pc, dc = base.prefill_cell, base.decode_cell
-        if cells:
-            if len(tuple(cells)) != 2:
-                raise ValueError("serving scenario takes exactly two cells "
-                                 "(prefill, decode)")
-            pc, dc = tuple(cells)
-        return ServingScenario(prefill_cell=pc, decode_cell=dc, slo_s=slo_s,
-                               name=base.name)
-    return base
+    """Compat shim over `ScenarioSpec` — the pre-PR6 lookup signature."""
+    return ScenarioSpec(name=name, cells=tuple(cells),
+                        slo_s=slo_s).resolve()
 
 
 def scenario_names() -> List[str]:
@@ -518,3 +832,5 @@ register_scenario(ServingScenario())
 register_scenario(ServingScenario(prefill_cell="prefill_32k",
                                   decode_cell="long_500k",
                                   name="serving-long"))
+# traffic-driven continuous batching (QPS arrivals, percentile SLO walls)
+register_scenario(ServingTrafficScenario())

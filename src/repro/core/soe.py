@@ -304,7 +304,7 @@ def rank_strategies(tech: TechConfig, graph: ComputeGraph,
     arch = age_lib.generate(tech, budgets, discrete=False)
     points = [pathfinder.EvalPoint(arch, graph, st, system=system)
               for st in strategies]
-    rows = pathfinder.evaluate_points(points, ppe=ppe)
+    rows = pathfinder.evaluate(points=points, ppe=ppe)
     ranked = [(float(rows[i, 0]), st) for i, st in enumerate(strategies)]
     ranked.sort(key=lambda x: x[0])
     return ranked

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
 import os
 import queue
 import threading
@@ -136,6 +137,10 @@ class _DesignSkeleton:
     base_fields: Dict                # record template (label-field order)
     key_pre: str                     # "arch|cell|mesh" of point_key
     key_suf: str                     # strategy part of point_key
+    # scenario identity (spec params + cell variant) baked into fold/mfold;
+    # groups and the frontier compile cache must not mix fold_keys even
+    # when the eval-shape keys coincide (variants share graphs, not walls)
+    fold_key: tuple = ()
     # systolic_dims -> per-eval-point compiled-skeleton key tuple
     skel_keys: Dict[tuple, tuple] = dataclasses.field(default_factory=dict)
 
@@ -198,6 +203,8 @@ class PipelineExecutor:
             else (os.cpu_count() or 1) >= 4
         self.block = sweeprunner.SHARD_BLOCK
         self._skels: Dict[tuple, _DesignSkeleton] = {}
+        self._scn_fp = json.dumps(spec.scenario_spec.to_dict(),
+                                  sort_keys=True)
         self._hw: Dict[tuple, tuple] = {}
         self._rows: List[np.ndarray] = []     # unique packed hw rows
         self._rowmat: Optional[np.ndarray] = None
@@ -255,7 +262,8 @@ class PipelineExecutor:
                 fold=scn.frontier_fold(cfg, st),
                 mfold=scn.metrics_fold(cfg, st, lb.cell),
                 base_fields=base,
-                key_pre=f"{lb.arch}|{lb.cell}|{mesh_str}", key_suf=name)
+                key_pre=f"{lb.arch}|{lb.cell}|{mesh_str}", key_suf=name,
+                fold_key=(self._scn_fp, lb.cell))
             self._skels[skey] = sk
         return sk
 
@@ -295,7 +303,9 @@ class PipelineExecutor:
             pathfinder._COMPILED, key, build)
 
     def _compiled_frontier(self, group: _Group, capacity: int) -> Callable:
-        key = ("frontier", group.keys, capacity)
+        # fold_key matters here: the objective fold (SLO walls, traffic
+        # consts) is traced into the step, unlike the pure eval fn
+        key = ("frontier", group.keys, group.skel.fold_key, capacity)
 
         def build():
             design = self._design_scalar(group)
@@ -324,10 +334,14 @@ class PipelineExecutor:
         chunk_size = self.spec.chunk_size
 
         def group_for(sk, hw):
+            # group identity includes the scenario fold_key: variants share
+            # eval shapes (g.keys, so the compiled eval fn and cache rows
+            # stay shared) but their folds bake different walls/consts
             keys = self._group_keys(sk, hw)
-            g = groups.get(keys)
+            gkey = (keys, sk.fold_key)
+            g = groups.get(gkey)
             if g is None:
-                g = groups.setdefault(keys, _Group(skel=sk, keys=keys,
+                g = groups.setdefault(gkey, _Group(skel=sk, keys=keys,
                                                    template=hw))
             return g
 
@@ -614,6 +628,8 @@ class PipelineExecutor:
     # -- frontier-only mode ----------------------------------------------
     def run_frontier(self, chunks: Sequence,
                      capacity: int = pathfinder.FRONTIER_CAPACITY,
+                     state=None, on_commit: Optional[Callable] = None,
+                     all_chunks: Optional[Sequence] = None,
                      ) -> Tuple[List[Dict], int, int]:
         """Device-resident streaming-frontier sweep over ``chunks``.
 
@@ -623,11 +639,21 @@ class PipelineExecutor:
         this mode exists to avoid) and per-point results are never
         collected: only the surviving frontier's records are rebuilt, from
         the carried state's payload rows.
+
+        ``state`` seeds the carried frontier state (host arrays from a
+        prior run's checkpoint); ``on_commit(chunk_indices, host_state)``
+        fires after each merged superbatch with the chunk indices it
+        folded in and the state materialized to host — the checkpoint
+        hook.  ``all_chunks`` is the full enumeration when ``chunks`` is
+        only the pending subset: carried payload rows reference global
+        point indices, so record rebuild needs every chunk, merged or not.
         """
         from repro.core import sweeprunner
-        if not chunks:
+        all_chunks = list(all_chunks) if all_chunks is not None \
+            else list(chunks)
+        if not all_chunks:
             return [], 0, 0
-        probe = chunks[0].labels[0]
+        probe = all_chunks[0].labels[0]
         sk0 = self._skeleton(probe)
         if sk0.fold is None:
             raise ValueError(
@@ -635,7 +661,10 @@ class PipelineExecutor:
                 f"--frontier-only needs a device-side objective fold")
         n_obj = len(sk0.scn.objectives)
         payload_dim = sk0.ppd * len(pathfinder.METRICS)
-        state = pathfinder.frontier_init(capacity, n_obj, payload_dim)
+        if state is None:
+            state = pathfinder.frontier_init(capacity, n_obj, payload_dim)
+        else:
+            state = tuple(jnp.asarray(x) for x in state)
 
         cache, self.cache = self.cache, None    # frontier bypasses caching
         n_points = 0
@@ -658,10 +687,17 @@ class PipelineExecutor:
                     n_merged += n
                 return state, n_merged
 
+            def commit_pack(pack: _Pack, state):
+                if on_commit is not None:
+                    host = tuple(np.asarray(x) for x in state)
+                    on_commit([c.index for c in pack.chunks], host)
+
             if not self.threads:
                 for sl in slices:
-                    state, n = merge_pack(self.pack(sl), state)
+                    pack = self.pack(sl)
+                    state, n = merge_pack(pack, state)
                     n_points += n
+                    commit_pack(pack, state)
             else:
                 pack_q: "queue.Queue" = queue.Queue(maxsize=QUEUE_DEPTH)
                 errors: List[BaseException] = []
@@ -690,6 +726,7 @@ class PipelineExecutor:
                         try:
                             state, n = merge_pack(pack, state)
                             n_points += n
+                            commit_pack(pack, state)
                         except BaseException as e:  # noqa: BLE001
                             errors.append(e)
                 finally:
@@ -700,7 +737,7 @@ class PipelineExecutor:
             self.cache = cache
 
         vals, payload, idx, n_over = pathfinder.frontier_unpack(state)
-        by_index = {c.index: c for c in chunks}
+        by_index = {c.index: c for c in all_chunks}
         records: List[Dict] = []
         for i in np.argsort(idx):              # enumeration order
             gi = int(idx[i])

@@ -106,6 +106,8 @@ class SweepSpec:
 
     arches: Tuple[str, ...]
     mesh_shapes: Tuple[Tuple[int, ...], ...]
+    # scenario may be passed as a `scenarios.ScenarioSpec`; __post_init__
+    # normalizes it into the serialized (name, cells, slo_s, params) form
     scenario: str = "train"
     cells: Tuple[str, ...] = ()            # scenario cell override
     logic_nodes: Tuple[str, ...] = ("N7",)
@@ -121,6 +123,31 @@ class SweepSpec:
     # of the spec so the fingerprint (= resume identity) changes with the
     # calibration; None keys byte-identical specs to pre-profile sweeps
     profile: Optional[Dict] = None
+    # typed scenario params (`scenarios.ScenarioSpec.params`); list-valued
+    # entries are sweep axes.  None is dropped from the serialized form so
+    # param-less specs fingerprint byte-identically to pre-PR6 checkpoints
+    scenario_params: Optional[Dict] = None
+
+    def __post_init__(self):
+        if isinstance(self.scenario, scenarios.ScenarioSpec):
+            ss = self.scenario
+            object.__setattr__(self, "scenario", ss.name)
+            if ss.cells:
+                object.__setattr__(self, "cells", tuple(ss.cells))
+            if ss.slo_s is not None:
+                object.__setattr__(self, "slo_s", float(ss.slo_s))
+            if ss.params:
+                object.__setattr__(
+                    self, "scenario_params",
+                    {k: (list(v) if isinstance(v, tuple) else v)
+                     for k, v in ss.params})
+
+    @property
+    def scenario_spec(self) -> scenarios.ScenarioSpec:
+        """The typed scenario-construction view of this spec."""
+        return scenarios.ScenarioSpec(
+            name=self.scenario, cells=self.cells, slo_s=self.slo_s,
+            params=self.scenario_params or ())
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -130,6 +157,13 @@ class SweepSpec:
             d[k] = list(d[k])
         if d.get("profile") is None:      # keep old fingerprints stable
             d.pop("profile", None)
+        sp = d.get("scenario_params")
+        if sp is None:                    # ditto for pre-PR6 checkpoints
+            d.pop("scenario_params", None)
+        else:
+            d["scenario_params"] = {
+                k: (list(v) if isinstance(v, (list, tuple)) else v)
+                for k, v in sp.items()}
         return d
 
     @staticmethod
@@ -143,6 +177,7 @@ class SweepSpec:
         d["budget_scales"] = tuple(float(s)
                                    for s in d.get("budget_scales") or (1.0,))
         d.setdefault("profile", None)
+        d.setdefault("scenario_params", None)
         return SweepSpec(**d)
 
     def fingerprint(self) -> str:
@@ -203,9 +238,10 @@ class Chunk:
 
 
 def scenario_for(spec: SweepSpec, cell_id: str) -> scenarios.Scenario:
-    """The scenario instance scoring one enumerated cell id of a spec."""
-    return scenarios.get_scenario(spec.scenario, slo_s=spec.slo_s,
-                                  cells=tuple(cell_id.split("+")))
+    """The scenario instance scoring one enumerated cell id of a spec
+    (cells plus any swept scenario-param overrides carried in the cell
+    id's ``@k=v,...`` variant suffix)."""
+    return spec.scenario_spec.for_cell_id(cell_id).resolve()
 
 
 _scenario_for = scenario_for
@@ -218,18 +254,20 @@ def enumerate_labels(spec: SweepSpec) -> List[PointLabel]:
     scenario's primary (last) cell, so the point set matches what the
     runtime can realize on each mesh.  A train-kind scenario with several
     `spec.cells` sweeps each cell as its own axis value (serving scenarios
-    consume their cell pair as one unit).
+    consume their cell pair as one unit); list-valued scenario params
+    expand into variants whose cell ids carry the swept values as a
+    ``@k=v,...`` suffix.
     """
     from repro.configs.base import SHAPE_CELLS
     from repro.core import planner
 
-    base = scenarios.get_scenario(spec.scenario, slo_s=spec.slo_s,
-                                  cells=spec.cells)
+    base = scenarios.ScenarioSpec(name=spec.scenario).resolve()
     if isinstance(base, scenarios.TrainScenario) and len(spec.cells) > 1:
-        variants = [scenarios.get_scenario(spec.scenario, cells=(c,))
+        variants = [scenarios.ScenarioSpec(name=spec.scenario,
+                                           cells=(c,)).resolve()
                     for c in spec.cells]
     else:
-        variants = [base]
+        variants = [v.resolve() for v in spec.scenario_spec.variants()]
     labels: List[PointLabel] = []
     for arch in spec.resolved_arches():
         cfg = get_config(arch)
@@ -332,16 +370,18 @@ def resolve_label(spec: SweepSpec, lb: PointLabel) -> scenarios.DesignPoint:
 SHARD_BLOCK = 8
 
 
-def eval_labels(spec: SweepSpec, labels: Sequence[PointLabel],
-                cache=pathfinder.DEFAULT_CACHE,
-                shard_devices: bool = False) -> List[Dict]:
+def _eval_labels_impl(spec: SweepSpec, labels: Sequence[PointLabel],
+                      cache=pathfinder.DEFAULT_CACHE,
+                      shard_devices: bool = False) -> List[Dict]:
     """Score one chunk of labels -> result records (one batched call).
 
-    ``cache`` defaults to the `pathfinder.DEFAULT_CACHE` sentinel, which
-    resolves the live prediction cache at CALL time — an import-time
-    default would pin whatever singleton existed when this module loaded,
-    so `pathfinder.set_prediction_cache` replacement would silently stop
-    reaching sweeps (regression-tested).  ``cache=None`` disables caching.
+    The label-mode worker behind `pathfinder.evaluate` (the documented
+    entry point).  ``cache`` defaults to the `pathfinder.DEFAULT_CACHE`
+    sentinel, which resolves the live prediction cache at CALL time — an
+    import-time default would pin whatever singleton existed when this
+    module loaded, so `pathfinder.set_prediction_cache` replacement would
+    silently stop reaching sweeps (regression-tested).  ``cache=None``
+    disables caching.
     """
     cache = pathfinder.resolve_cache(cache)
     ppe = spec_ppe(spec)
@@ -355,9 +395,9 @@ def eval_labels(spec: SweepSpec, labels: Sequence[PointLabel],
         points.extend(eps)
         dps.append(dp)
         scns.append(scn)
-    rows = pathfinder.evaluate_points(points, ppe=ppe, cache=cache,
-                                      shard_devices=shard_devices,
-                                      shard_block=SHARD_BLOCK)
+    rows = pathfinder.evaluate(points=points, ppe=ppe, cache=cache,
+                               shard_devices=shard_devices,
+                               shard_block=SHARD_BLOCK)
     out = []
     for dp, scn, (lo, hi) in zip(dps, scns, spans):
         rec = scn.record(dp, rows[lo:hi])
@@ -366,12 +406,26 @@ def eval_labels(spec: SweepSpec, labels: Sequence[PointLabel],
     return out
 
 
+def eval_labels(spec: SweepSpec, labels: Sequence[PointLabel],
+                cache=pathfinder.DEFAULT_CACHE,
+                shard_devices: bool = False) -> List[Dict]:
+    """Deprecated alias — use ``pathfinder.evaluate(spec=..., labels=...)``
+    (one documented facade over the three historical eval entry points)."""
+    import warnings
+    warnings.warn("sweeprunner.eval_labels is deprecated; use "
+                  "pathfinder.evaluate(spec=..., labels=...)",
+                  DeprecationWarning, stacklevel=2)
+    return _eval_labels_impl(spec, labels, cache=cache,
+                             shard_devices=shard_devices)
+
+
 def _process_eval(spec_dict: Dict, chunk_index: int,
                   labels: Tuple[PointLabel, ...]) -> Tuple[int, List[Dict]]:
     """Worker-process entry.  The chunk's labels travel with the task
     (plain string dataclasses pickle cheaply) — re-enumerating the whole
     cross-product per chunk would cost O(n_chunks x n_points)."""
-    return chunk_index, eval_labels(SweepSpec.from_dict(spec_dict), labels)
+    return chunk_index, _eval_labels_impl(SweepSpec.from_dict(spec_dict),
+                                          labels)
 
 
 # ---------------------------------------------------------------------------
@@ -655,38 +709,134 @@ class SweepRunner:
             out_dir=self.out_dir, records=records,
             **self._stat_delta(stats0))
 
+    def _frontier_state_path(self) -> str:
+        return os.path.join(self.out_dir, "frontier_state.npz")
+
+    def _save_frontier_state(self, path: str, state, done: Dict[int, str],
+                             capacity: int):
+        """Atomically persist the carried frontier state plus the set of
+        merged (committed) chunks — THE frontier-mode checkpoint.  Written
+        after every committed superbatch, so a SIGKILL loses at most the
+        in-flight packs and `run(resume=True)` continues from the merged
+        state with zero re-evaluation (the chunked-sweep semantics)."""
+        vals, payload, idx, overflow = state
+        order = sorted(done)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as fh:
+            np.savez(fh, vals=vals, payload=payload, idx=idx,
+                     overflow=overflow,
+                     done_idx=np.asarray(order, dtype=np.int64),
+                     done_hash=np.asarray([done[i] for i in order]),
+                     fingerprint=np.asarray(self._fp),
+                     capacity=np.asarray(int(capacity)))
+        os.replace(tmp, path)
+
+    def _load_frontier_state(self, spec_path: str, state_path: str,
+                             ckpt_path: str, chunks: List[Chunk],
+                             capacity: int):
+        """(carried state, done chunks) of an interrupted frontier sweep.
+
+        Unlike `_load_done`, a mismatched chunk is fatal rather than
+        re-evaluated: its points are already folded into the carried state
+        and cannot be dropped again."""
+        if not os.path.exists(spec_path):
+            raise FileNotFoundError(
+                f"cannot resume: {spec_path} does not exist")
+        if os.path.exists(ckpt_path):
+            raise ValueError(
+                f"{self.out_dir} holds a full-sweep checkpoint, not a "
+                f"frontier-state checkpoint; resume it without "
+                f"--frontier-only, or point --out at a fresh directory")
+        with open(spec_path) as fh:
+            head = json.load(fh)
+        if head.get("fingerprint") != self._fp:
+            raise ValueError(
+                f"cannot resume: sweep spec changed "
+                f"(checkpoint {head.get('fingerprint')}, now {self._fp})")
+        if not os.path.exists(state_path):
+            return None, {}             # spec written, nothing merged yet
+        z = np.load(state_path)
+        if z["fingerprint"].item() != self._fp:
+            raise ValueError("cannot resume: frontier state belongs to a "
+                             "different spec fingerprint")
+        if int(z["capacity"]) != int(capacity):
+            raise ValueError(
+                f"cannot resume: frontier capacity changed (checkpoint "
+                f"{int(z['capacity'])}, now {capacity}); rerun with the "
+                f"original --frontier-capacity")
+        by_index = {c.index: c for c in chunks}
+        done: Dict[int, str] = {}
+        for i, h in zip(z["done_idx"].tolist(), z["done_hash"].tolist()):
+            c = by_index.get(int(i))
+            if c is None or c.hash(self._fp) != str(h):
+                raise ValueError(
+                    f"cannot resume: frontier state does not match the "
+                    f"current enumeration (chunk {i}); merged points "
+                    f"cannot be un-merged — rerun in a fresh directory")
+            done[int(i)] = str(h)
+        state = (z["vals"], z["payload"], z["idx"], z["overflow"])
+        return state, done
+
     def _run_frontier(self, max_chunks: Optional[int], capacity: int,
                       resume: bool) -> RunStats:
         """Frontier-only mode: stream every point through the fused
         device-resident Pareto reduction; only the surviving records come
-        back to host (DIR/frontier.jsonl when an out_dir is set)."""
+        back to host (DIR/frontier.jsonl when an out_dir is set).  The
+        carried state checkpoints to DIR/frontier_state.npz per committed
+        superbatch, so an interrupted frontier sweep resumes with zero
+        re-evaluation."""
         from repro.core import sweeppipeline
-        if resume:
-            raise ValueError(
-                "frontier_only keeps no per-chunk checkpoints, so "
-                "resume=True cannot skip work; rerun without --resume")
         t0 = time.perf_counter()
         stats0 = self._stat_snapshot()
+        labels = enumerate_labels(self.spec)
+        chunks = make_chunks(labels, self.spec.chunk_size)
+        state0 = None
+        done: Dict[int, str] = {}
+        state_path = None
         if self.out_dir is not None:
             # validate the destination BEFORE evaluating anything: a
             # guard that fires after the sweep would discard hours of
             # frontier compute
-            os.makedirs(self.out_dir, exist_ok=True)
             spec_path, _, ckpt_path = self._paths()
-            if os.path.exists(ckpt_path):
-                raise FileExistsError(
-                    f"{self.out_dir} already holds a checkpointed sweep; "
-                    f"frontier-only output would shadow it — point --out "
-                    f"at a fresh directory")
+            state_path = self._frontier_state_path()
+            if resume:
+                state0, done = self._load_frontier_state(
+                    spec_path, state_path, ckpt_path, chunks, capacity)
+            else:
+                os.makedirs(self.out_dir, exist_ok=True)
+                if os.path.exists(ckpt_path):
+                    raise FileExistsError(
+                        f"{self.out_dir} already holds a checkpointed "
+                        f"sweep; frontier-only output would shadow it — "
+                        f"point --out at a fresh directory")
+                if os.path.exists(state_path):
+                    raise FileExistsError(
+                        f"{self.out_dir} already holds a frontier-state "
+                        f"checkpoint; pass resume=True (CLI: --resume) to "
+                        f"continue it, or point --out at a fresh "
+                        f"directory")
             self._write_spec(spec_path)
-        labels = enumerate_labels(self.spec)
-        chunks = make_chunks(labels, self.spec.chunk_size)
-        pending = chunks if max_chunks is None else chunks[:max_chunks]
+        elif resume:
+            raise ValueError("resume=True requires an out_dir")
+        pending = [c for c in chunks if c.index not in done]
+        if max_chunks is not None:
+            pending = pending[:max_chunks]
         ex = sweeppipeline.PipelineExecutor(self.spec, cache=self.cache,
                                             superbatch=self.superbatch
                                             or sweeppipeline.SUPERBATCH)
-        records, n_over, n_points = ex.run_frontier(pending,
-                                                    capacity=capacity)
+        on_commit = None
+        if state_path is not None:
+            committed = dict(done)
+            by_index = {c.index: c for c in chunks}
+
+            def on_commit(indices, host_state):
+                for i in indices:
+                    committed[i] = by_index[i].hash(self._fp)
+                self._save_frontier_state(state_path, host_state,
+                                          committed, capacity)
+        records, n_over, n_points = ex.run_frontier(
+            pending, capacity=capacity, state=state0, on_commit=on_commit,
+            all_chunks=chunks)
         if self.out_dir is not None:
             front_path = os.path.join(self.out_dir, "frontier.jsonl")
             tmp = front_path + ".tmp"
@@ -696,7 +846,7 @@ class SweepRunner:
             os.replace(tmp, front_path)
         return RunStats(
             n_points_total=len(labels), n_chunks_total=len(chunks),
-            n_chunks_skipped=0, n_chunks_evaluated=len(pending),
+            n_chunks_skipped=len(done), n_chunks_evaluated=len(pending),
             n_points_evaluated=n_points,
             elapsed_s=time.perf_counter() - t0, backend="pipeline",
             out_dir=self.out_dir, records=records,
@@ -714,11 +864,12 @@ class SweepRunner:
         elif self.backend in ("serial", "device"):
             shard = self.backend == "device"
             for c in pending:
-                commit(c, eval_labels(spec, c.labels, cache=self.cache,
-                                      shard_devices=shard))
+                commit(c, _eval_labels_impl(spec, c.labels,
+                                            cache=self.cache,
+                                            shard_devices=shard))
         elif self.backend == "thread":
             with ThreadPoolExecutor(self.workers) as ex:
-                futs = {ex.submit(eval_labels, spec, c.labels,
+                futs = {ex.submit(_eval_labels_impl, spec, c.labels,
                                   self.cache): c
                         for c in pending}
                 for f in as_completed(futs):
@@ -803,7 +954,9 @@ def pareto_records(records: Sequence[Dict],
     """Non-dominated subset of result records over numeric objective
     fields, in input order.
 
-    Infeasible serving points (``feasible: false``) and records whose
+    Infeasible serving points (``feasible: false``), SLO-wall violations
+    (``slo_ok: false`` — percentile SLOs are feasibility walls, matching
+    the scenarios' `objective_values`/`frontier_fold`), and records whose
     objective values are missing/None (what `json_safe` writes for
     non-finite metrics) or non-finite are excluded up front — an unusable
     design can otherwise survive the frontier on its one finite objective
@@ -828,7 +981,7 @@ def pareto_records(records: Sequence[Dict],
 
     recs, rows = [], []
     for r in records:
-        if not r.get("feasible", True):
+        if not r.get("feasible", True) or r.get("slo_ok") is False:
             continue
         vs = objvals(r)
         if vs is not None:

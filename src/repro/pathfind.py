@@ -34,7 +34,26 @@ Subcommands:
           --frontier-only streams every point through a device-resident
           Pareto reduction fused into the compiled evaluator: only the
           frontier is materialized/printed (DIR/frontier.jsonl), so
-          10^6-point sweeps never pull per-point rows to host.
+          10^6-point sweeps never pull per-point rows to host.  The
+          carried state checkpoints to DIR/frontier_state.npz per
+          committed superbatch, so --resume continues an interrupted
+          frontier sweep with zero re-evaluation.
+
+          --scenario serving-traffic scores continuous batching with
+          chunked prefill under a QPS arrival model (repro.core.traffic):
+          TTFT/TPOT percentiles, utilization walls, and device-seconds
+          per token.  Traffic/batching params are typed --scenario-param
+          flags; a comma list (e.g. --scenario-param
+          prefill_chunk=256,512) declares a sweep axis.
+
+  size    inverse fleet sizing over a swept design space: the minimum
+          device count serving --qps under percentile SLO walls, by
+          doubling+bisection on the closed-form traffic model — swept
+          points are never re-evaluated:
+
+              PYTHONPATH=src python -m repro.pathfind size \
+                  --from sweeps/traffic --qps 24 \
+                  --slo-ttft-p99 2.0 --slo-tpot-p50 0.05
 
   plan    the CrossFlow -> runtime bridge: best runtime-realizable strategy
           for one (arch, cell, mesh) on the TPU-v5e micro-arch:
@@ -101,45 +120,96 @@ def _csv_list(text: str) -> List[str]:
     return [x.strip() for x in text.split(",") if x.strip()]
 
 
+def _scenario_param(text: str) -> Tuple[str, object]:
+    """KEY=V or KEY=V1,V2,... (a comma list declares a sweep axis)."""
+    key, sep, val = text.partition("=")
+    vals = [v for v in val.split(",") if v]
+    if not sep or not key or not vals:
+        raise argparse.ArgumentTypeError(
+            f"bad scenario param {text!r}; expected KEY=V or KEY=V1,V2,...")
+    try:
+        out = [float(v) for v in vals]
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"bad scenario param {text!r}: values must be numbers")
+    return key.strip(), out[0] if len(out) == 1 else out
+
+
+def _scenario_params_dict(pairs) -> dict:
+    return dict(pairs or ())
+
+
+# -- shared flag groups (sweep / cooptimize / size) -------------------------
+# one scenario/profile/out-dir vocabulary across subcommands: a flag means
+# the same thing everywhere, and commands that read their spec from a
+# directory refuse contradicting flags instead of silently ignoring them
+
+
+def _add_axis_flags(p) -> None:
+    g = p.add_argument_group("design-space axes")
+    g.add_argument("--arch", action="append", default=None,
+                   help="model arch id (repeatable; 'all' = every config)")
+    g.add_argument("--cell", action="append", default=None,
+                   help="shape cell name (repeatable; default from the "
+                        "scenario, e.g. train_4k / prefill_32k+decode_32k)")
+    g.add_argument("--mesh", action="append", type=_mesh, default=None,
+                   help="mesh shape like 16x16 (repeatable)")
+    g.add_argument("--logic", type=_csv_list, default=["N7"],
+                   help="comma-separated logic nodes (default N7)")
+    g.add_argument("--hbm", type=_csv_list, default=["HBM2E"],
+                   help="comma-separated HBM generations")
+    g.add_argument("--net", type=_csv_list, default=["IB-NDR-X8"],
+                   help="comma-separated inter-node networks")
+    g.add_argument("--area", type=float, default=None,
+                   help="proc chip area budget (mm^2)")
+    g.add_argument("--power", type=float, default=None,
+                   help="node power budget (W)")
+    g.add_argument("--scale", type=_csv_list, default=None,
+                   metavar="S1,S2,...",
+                   help="budget-scale variants (e.g. 0.8,1.0,1.2) "
+                        "multiplying area+power per hardware point")
+    g.add_argument("--tilings", type=int, default=8,
+                   help="PPE tiling samples per level")
+
+
+def _add_scenario_flags(p, default_scenario: str = "train") -> None:
+    g = p.add_argument_group("scenario")
+    g.add_argument("--scenario", default=default_scenario,
+                   help="workload scenario: train | serving | serving-long "
+                        "| serving-traffic (continuous batching + "
+                        "percentile SLO walls)")
+    g.add_argument("--slo", type=float, default=None,
+                   help="serving TTFT SLO in seconds (tags slo_ok; for "
+                        "serving-traffic this is the p99 TTFT wall)")
+    g.add_argument("--scenario-param", action="append",
+                   type=_scenario_param, default=None,
+                   metavar="KEY=V[,V2,...]",
+                   help="typed scenario parameter (repeatable); for "
+                        "serving-traffic: qps, prompt_mean, prompt_cv, "
+                        "output_mean, output_cv, prefill_chunk, "
+                        "slo_ttft_p50/p99, slo_tpot_p50/p99.  A comma "
+                        "list declares a sweep axis (variants ride in "
+                        "the cell id)")
+    g.add_argument("--profile", default=None, metavar="FILE",
+                   help="calibration profile JSON (pathfind calibrate); "
+                        "every hardware point is evaluated on the "
+                        "measurement-anchored MicroArch")
+
+
 def _parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(prog="repro.pathfind", description=__doc__,
                                 formatter_class=argparse.RawDescriptionHelpFormatter)
     sub = p.add_subparsers(dest="cmd", required=True)
 
     sw = sub.add_parser("sweep", help="batched design-space sweep")
-    sw.add_argument("--arch", action="append", default=None,
-                    help="model arch id (repeatable; 'all' = every config)")
-    sw.add_argument("--cell", action="append", default=None,
-                    help="shape cell name (repeatable; default from the "
-                         "scenario, e.g. train_4k / prefill_32k+decode_32k)")
-    sw.add_argument("--mesh", action="append", type=_mesh, default=None,
-                    help="mesh shape like 16x16 (repeatable)")
-    sw.add_argument("--logic", type=_csv_list, default=["N7"],
-                    help="comma-separated logic nodes (default N7)")
-    sw.add_argument("--hbm", type=_csv_list, default=["HBM2E"],
-                    help="comma-separated HBM generations")
-    sw.add_argument("--net", type=_csv_list, default=["IB-NDR-X8"],
-                    help="comma-separated inter-node networks")
-    sw.add_argument("--area", type=float, default=None,
-                    help="proc chip area budget (mm^2)")
-    sw.add_argument("--power", type=float, default=None,
-                    help="node power budget (W)")
-    sw.add_argument("--scale", type=_csv_list, default=None,
-                    metavar="S1,S2,...",
-                    help="budget-scale variants (e.g. 0.8,1.0,1.2) "
-                         "multiplying area+power per hardware point")
-    sw.add_argument("--tilings", type=int, default=8,
-                    help="PPE tiling samples per level")
+    _add_axis_flags(sw)
+    _add_scenario_flags(sw)
     sw.add_argument("--pareto", type=_csv_list, default=None, metavar="OBJS",
                     help="print only the Pareto frontier over these "
                          "objectives (default: the scenario's, e.g. "
                          "time_s,devices)")
     sw.add_argument("--csv", default=None, help="also write CSV here")
     # sharded resumable engine (repro.core.sweeprunner)
-    sw.add_argument("--scenario", default="train",
-                    help="workload scenario: train | serving | serving-long")
-    sw.add_argument("--slo", type=float, default=None,
-                    help="serving TTFT SLO in seconds (tags slo_ok)")
     sw.add_argument("--out", default=None,
                     help="stream results + checkpoints into this directory "
                          "(enables --resume)")
@@ -168,8 +238,10 @@ def _parser() -> argparse.ArgumentParser:
                     help="device-resident streaming-Pareto mode: only "
                          "the frontier over the scenario's objectives is "
                          "materialized/printed (DIR/frontier.jsonl with "
-                         "--out); per-point rows never reach the host, "
-                         "no checkpoints, incompatible with --resume")
+                         "--out); per-point rows never reach the host; "
+                         "the carried state checkpoints to "
+                         "DIR/frontier_state.npz per committed superbatch "
+                         "(--resume continues with zero re-evaluation)")
     sw.add_argument("--frontier-cap", type=int, default=None,
                     help="carried device frontier capacity (default 512; "
                          "overflow is reported, never silent)")
@@ -177,10 +249,6 @@ def _parser() -> argparse.ArgumentParser:
                     help="do not persist XLA executables under "
                          "OUT/xla_cache (enabled by default with --out "
                          "so cold starts and resumes skip recompiles)")
-    sw.add_argument("--profile", default=None, metavar="FILE",
-                    help="calibration profile JSON (pathfind calibrate); "
-                         "every hardware point is evaluated on the "
-                         "measurement-anchored MicroArch")
 
     pl = sub.add_parser("plan", help="runtime sharding plan for one point")
     pl.add_argument("--arch", required=True)
@@ -206,10 +274,47 @@ def _parser() -> argparse.ArgumentParser:
                     help="multi-start batch size (default 4)")
     co.add_argument("--lr", type=float, default=0.05)
     co.add_argument("--seed", type=int, default=0)
+    co.add_argument("--scenario-param", action="append",
+                    type=_scenario_param, default=None,
+                    metavar="KEY=V[,V2,...]",
+                    help="must match the sweep's scenario params if given "
+                         "(the spec in DIR is authoritative)")
     co.add_argument("--out", default=None, metavar="FILE",
                     help="refined-records JSONL path "
                          "(default DIR/refined.jsonl)")
     co.add_argument("--csv", default=None, help="also write CSV here")
+
+    sz = sub.add_parser("size",
+                        help="inverse fleet sizing: minimum device count "
+                             "serving --qps under percentile SLO walls")
+    sz.add_argument("--from", dest="from_dir", default=None, metavar="DIR",
+                    help="checkpointed serving-traffic sweep directory; "
+                         "swept points are read, never re-scored.  "
+                         "Without --from, the design-space axes below "
+                         "run a fresh in-memory sweep first")
+    _add_axis_flags(sz)
+    _add_scenario_flags(sz, default_scenario="serving-traffic")
+    sz.add_argument("--qps", type=float, required=True,
+                    help="offered load (requests/s) to serve")
+    sz.add_argument("--slo-ttft-p50", type=float, default=None,
+                    help="median TTFT wall in seconds")
+    sz.add_argument("--slo-ttft-p99", type=float, default=None,
+                    help="p99 TTFT wall in seconds")
+    sz.add_argument("--slo-tpot-p50", type=float, default=None,
+                    help="median TPOT wall in seconds")
+    sz.add_argument("--slo-tpot-p99", type=float, default=None,
+                    help="p99 TPOT wall in seconds")
+    sz.add_argument("--top-k", type=int, default=5,
+                    help="feasible designs to report (default 5)")
+    sz.add_argument("--out", default=None,
+                    help="stream the fresh sweep's results + checkpoints "
+                         "into this directory (axes mode only)")
+    sz.add_argument("--chunk-size", type=int, default=32,
+                    help="design points per chunk (axes mode)")
+    sz.add_argument("--backend", default="auto",
+                    choices=["auto", "pipeline", "serial", "thread",
+                             "process", "device"],
+                    help="sweep backend (axes mode)")
 
     ca = sub.add_parser("calibrate",
                         help="measure this machine and fit a calibration "
@@ -277,6 +382,7 @@ def _cmd_sweep(args) -> int:
                       or args.backend != "auto" or args.slo is not None
                       or args.workers is not None or args.chunk_size != 32
                       or args.profile is not None
+                      or args.scenario_param
                       or args.frontier_only or args.superbatch is not None
                       or args.frontier_cap is not None
                       or (args.arch and "all" in args.arch))
@@ -327,10 +433,6 @@ def _cmd_sweep_runner(args) -> int:
                   superbatch=args.superbatch,
                   compile_cache=bool(args.out) and not args.no_compile_cache)
     if args.frontier_only:
-        if args.resume:
-            print("error: --frontier-only keeps no per-chunk checkpoints; "
-                  "it cannot be combined with --resume", file=sys.stderr)
-            return 2
         if args.pareto:
             print("error: --frontier-only already reduces to the "
                   "scenario's Pareto objectives on device; drop --pareto",
@@ -353,6 +455,7 @@ def _cmd_sweep_runner(args) -> int:
             ("--chunk-size", args.chunk_size, 32),
             ("--tilings", args.tilings, 8),
             ("--profile", args.profile, None),
+            ("--scenario-param", args.scenario_param, None),
         ) if val != default]
         if ignored:
             print(f"error: --resume loads the sweep spec from "
@@ -381,7 +484,9 @@ def _cmd_sweep_runner(args) -> int:
             else (1.0,),
             area_mm2=args.area, power_w=args.power, slo_s=args.slo,
             n_tilings=args.tilings, chunk_size=args.chunk_size,
-            profile=profile_dict)
+            profile=profile_dict,
+            scenario_params=_scenario_params_dict(args.scenario_param)
+            or None)
         runner = sweeprunner.SweepRunner(spec, out_dir=args.out, **kwargs)
 
     run_kwargs = dict(resume=args.resume, max_chunks=args.max_chunks,
@@ -389,9 +494,8 @@ def _cmd_sweep_runner(args) -> int:
     if args.frontier_cap is not None:
         run_kwargs["frontier_capacity"] = args.frontier_cap
     stats = runner.run(**run_kwargs)
-    scn = scenarios.get_scenario(
-        runner.spec.scenario, slo_s=runner.spec.slo_s,
-        cells=runner.spec.cells)
+    # any variant resolves the same fields/objectives for CSV + frontier
+    scn = runner.spec.scenario_spec.variants()[0].resolve()
     records = stats.records or []
     shown = records
     objectives = args.pareto or list(scn.objectives)
@@ -422,10 +526,14 @@ def _cmd_sweep_runner(args) -> int:
                   f"({stats.n_frontier_overflowed} candidates dropped); "
                   f"raise --frontier-cap", file=sys.stderr)
     if not stats.complete:
-        if stats.frontier_only:
-            print("# incomplete (frontier-only keeps no checkpoints: "
-                  "rerun without --max-chunks for the full frontier)",
+        if stats.frontier_only and stats.out_dir:
+            print(f"# incomplete: resume with `python -m repro.pathfind "
+                  f"sweep --out {stats.out_dir} --resume --frontier-only`"
+                  f" (carried state in frontier_state.npz)",
                   file=sys.stderr)
+        elif stats.frontier_only:
+            print("# incomplete (no --out directory: the carried frontier "
+                  "state was not checkpointed)", file=sys.stderr)
         elif stats.out_dir:
             print(f"# incomplete: resume with `python -m repro.pathfind "
                   f"sweep --out {stats.out_dir} --resume`", file=sys.stderr)
@@ -455,14 +563,21 @@ def _cmd_cooptimize(args) -> int:
               f"spec in {args.from_dir} (scenario={spec.scenario}); the "
               f"spec is authoritative — drop the flag", file=sys.stderr)
         return 2
+    if args.scenario_param:
+        want = _scenario_params_dict(args.scenario_param)
+        have = dict(spec.scenario_params or {})
+        if any(have.get(k) != v for k, v in want.items()):
+            print(f"error: --scenario-param contradicts the sweep spec in "
+                  f"{args.from_dir} (params={have}); the spec is "
+                  f"authoritative — drop the flag", file=sys.stderr)
+            return 2
     cfg = cooptimize.RefineConfig(
         top_k=args.top_k, candidates_per_seed=args.candidates,
         steps=args.steps, starts=args.starts, lr=args.lr, seed=args.seed)
     out_path = args.out or os.path.join(args.from_dir, "refined.jsonl")
     stats = cooptimize.refine_sweep((spec, records), cfg=cfg,
                                     out_path=out_path, verbose=False)
-    scn = scenarios.get_scenario(spec.scenario, slo_s=spec.slo_s,
-                                 cells=spec.cells)
+    scn = spec.scenario_spec.variants()[0].resolve()
     csv_text = sweeprunner.to_csv(stats.records, scn)
     print(csv_text)
     if args.csv:
@@ -482,6 +597,116 @@ def _cmd_cooptimize(args) -> int:
     if stats.n_refined and not stats.n_dominating:
         print("# warning: no refined point dominates the sweep frontier "
               "(try more --steps/--starts)", file=sys.stderr)
+    return 0
+
+
+def _cmd_size(args) -> int:
+    """Inverse fleet-sizing query (repro.core.traffic.size_fleet)."""
+    import json
+    import os
+
+    from repro.core import sweeprunner, traffic
+
+    if args.from_dir:
+        # the swept records are authoritative: refuse contradicting flags
+        # exactly as `sweep --resume` does
+        ignored = [name for name, val, default in (
+            ("--arch", args.arch, None), ("--cell", args.cell, None),
+            ("--mesh", args.mesh, None), ("--logic", args.logic, ["N7"]),
+            ("--hbm", args.hbm, ["HBM2E"]),
+            ("--net", args.net, ["IB-NDR-X8"]),
+            ("--scale", args.scale, None), ("--area", args.area, None),
+            ("--power", args.power, None), ("--slo", args.slo, None),
+            ("--scenario", args.scenario, "serving-traffic"),
+            ("--scenario-param", args.scenario_param, None),
+            ("--tilings", args.tilings, 8),
+            ("--profile", args.profile, None),
+            ("--out", args.out, None),
+        ) if val != default]
+        if ignored:
+            print(f"error: --from loads the sweep spec from "
+                  f"{args.from_dir}/spec.json; drop these flags (they "
+                  f"would be ignored): {', '.join(ignored)}",
+                  file=sys.stderr)
+            return 2
+        spec, records = sweeprunner.load_sweep(args.from_dir)
+        if not records:
+            # frontier-only sweep: size over the materialized frontier
+            fp = os.path.join(args.from_dir, "frontier.jsonl")
+            if os.path.exists(fp):
+                with open(fp) as fh:
+                    records = [json.loads(ln) for ln in fh if ln.strip()]
+    else:
+        if not (args.arch and args.mesh):
+            print("error: size needs --arch and --mesh (or --from DIR)",
+                  file=sys.stderr)
+            return 2
+        profile_dict = None
+        if args.profile is not None:
+            from repro.calibrate import profiles as profiles_lib
+            profile_dict = profiles_lib.load_profile(args.profile).to_dict()
+        spec = sweeprunner.SweepSpec(
+            arches=tuple(args.arch),
+            mesh_shapes=tuple(tuple(m) for m in args.mesh),
+            scenario=args.scenario, cells=tuple(args.cell or ()),
+            logic_nodes=tuple(args.logic), hbms=tuple(args.hbm),
+            nets=tuple(args.net),
+            budget_scales=tuple(float(s) for s in args.scale) if args.scale
+            else (1.0,),
+            area_mm2=args.area, power_w=args.power, slo_s=args.slo,
+            n_tilings=args.tilings, chunk_size=args.chunk_size,
+            profile=profile_dict,
+            scenario_params=_scenario_params_dict(args.scenario_param)
+            or None)
+        runner = sweeprunner.SweepRunner(spec, out_dir=args.out,
+                                         backend=args.backend)
+        records = runner.run().records
+    if spec.scenario != "serving-traffic":
+        print(f"error: fleet sizing needs the serving-traffic scenario "
+              f"(the sweep used {spec.scenario!r})", file=sys.stderr)
+        return 2
+    # model defaults = the spec's single-valued params; swept
+    # (multi-valued) params override per record via the cell-id suffix
+    base = dict(traffic.PARAM_DEFAULTS)
+    base.update({k: v for k, v in spec.scenario_spec.params
+                 if not isinstance(v, tuple)})
+    if spec.slo_s is not None:
+        base["slo_ttft_p99"] = spec.slo_s
+    tm, pol, spec_slo = traffic.split_params(base)
+    slo = {name: float(v) for name in
+           ("ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99")
+           if (v := getattr(args, "slo_" + name)) is not None}
+    if not slo:         # fall back to the walls the sweep itself carried
+        slo = {k[len("slo_"):]: float(v) for k, v in spec_slo.items()
+               if v is not None}
+    if not slo:
+        print("error: size needs at least one SLO wall (--slo-ttft-p99 "
+              "0.5, --slo-tpot-p50 0.05, ...)", file=sys.stderr)
+        return 2
+    plan = traffic.size_fleet(records, args.qps, slo=slo, traffic=tm,
+                              policy=pol, top_k=args.top_k)
+    walls = " ".join(f"{k}<={v:g}s" for k, v in sorted(slo.items()))
+    print(f"# size: {plan.n_records} serving-traffic records, "
+          f"{plan.n_sized} sizeable under {walls} at {plan.qps:g} qps "
+          f"({plan.n_unsizeable} unsizeable; {plan.n_evals} closed-form "
+          f"evals, zero sweep re-evaluations)", file=sys.stderr)
+    if plan.best is None:
+        print("# no swept design meets the SLO walls at any replica "
+              "count", file=sys.stderr)
+        return 1
+    print("devices,replicas,devices_per_replica,per_replica_qps,"
+          "ttft_p99_s,tpot_p50_s,util,key")
+    for c in plan.candidates:
+        m = c.metrics
+        print(f"{c.devices},{c.replicas},{c.devices_per_replica},"
+              f"{c.per_replica_qps:.4g},{m['ttft_p99_s']:.4g},"
+              f"{m['tpot_p50_s']:.4g},{m['util']:.3f},{c.key}")
+    b = plan.best
+    print(f"# best: {b.devices} devices = {b.replicas} replicas x "
+          f"{b.devices_per_replica} ({b.key}) -> ttft_p99 "
+          f"{b.metrics['ttft_p99_s']:.4g}s, tpot_p50 "
+          f"{b.metrics['tpot_p50_s']:.4g}s at {b.per_replica_qps:.4g} "
+          f"qps/replica", file=sys.stderr)
     return 0
 
 
@@ -630,7 +855,7 @@ def main(argv=None) -> int:
     try:
         return {"sweep": _cmd_sweep, "plan": _cmd_plan,
                 "soe": _cmd_soe, "calibrate": _cmd_calibrate,
-                "validate": _cmd_validate,
+                "validate": _cmd_validate, "size": _cmd_size,
                 "cooptimize": _cmd_cooptimize}[args.cmd](args)
     except ModuleNotFoundError as e:
         print(f"error: unknown arch (no config module): {e.name}",

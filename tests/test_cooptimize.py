@@ -193,14 +193,14 @@ def test_refinement_never_reevaluates_scored_points(sweep_dir, monkeypatch):
         spec, lb.logic, lb.hbm, lb.net, lb.scale)).tobytes()
         for lb in (sweeprunner.label_from_record(r) for r in records)}
     evaluated = []
-    real = pathfinder.evaluate_points
+    real = pathfinder.evaluate
 
-    def spy(points, **kw):
+    def spy(points=None, **kw):
         evaluated.extend(pathfinder.pack_hw(p.arch).tobytes()
                          for p in points)
-        return real(points, **kw)
+        return real(points=points, **kw)
 
-    monkeypatch.setattr(cooptimize.pathfinder, "evaluate_points", spy)
+    monkeypatch.setattr(cooptimize.pathfinder, "evaluate", spy)
     res = cooptimize.refine_sweep(
         sweep_dir, dataclasses.replace(CFG, top_k=1, steps=6),
         out_path=os.devnull)

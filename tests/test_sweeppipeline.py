@@ -130,11 +130,49 @@ def test_frontier_only_matches_full_materialization(tmp_path):
             sorted(r["key"] for r in want)
 
 
-def test_frontier_only_refuses_resume():
-    with pytest.raises(ValueError, match="frontier"):
-        SweepRunner(SPEC, out_dir="/nonexistent",
-                    backend="pipeline").run(resume=True,
-                                            frontier_only=True)
+def test_frontier_only_resumes_carried_state(tmp_path):
+    """ISSUE-6 satellite: an interrupted frontier-only sweep resumes from
+    DIR/frontier_state.npz with zero re-evaluation and reaches the same
+    frontier as an uninterrupted run."""
+    d = str(tmp_path / "front")
+    part = SweepRunner(SPEC, out_dir=d, backend="pipeline",
+                       cache=None).run(frontier_only=True, max_chunks=2)
+    assert not part.complete
+    assert os.path.exists(os.path.join(d, "frontier_state.npz"))
+    done = SweepRunner(SPEC, out_dir=d, backend="pipeline",
+                       cache=None).run(frontier_only=True, resume=True)
+    assert done.complete
+    assert done.n_chunks_skipped == 2
+    assert done.n_points_evaluated == part.n_points_total - \
+        part.n_points_evaluated
+    fresh = SweepRunner(SPEC, out_dir=str(tmp_path / "fresh"),
+                        backend="pipeline", cache=None).run(
+        frontier_only=True)
+    _assert_records_match(done.records, fresh.records)
+    # a fully-resumed frontier re-evaluates nothing at all
+    again = SweepRunner(SPEC, out_dir=d, backend="pipeline",
+                        cache=None).run(frontier_only=True, resume=True)
+    assert again.n_points_evaluated == 0
+    _assert_records_match(again.records, fresh.records)
+
+
+def test_frontier_resume_guards(tmp_path):
+    d = str(tmp_path / "front")
+    SweepRunner(SPEC, out_dir=d, backend="pipeline",
+                cache=None).run(frontier_only=True, max_chunks=1)
+    # a second non-resume run must not silently merge into stale state
+    with pytest.raises(FileExistsError, match="frontier-state"):
+        SweepRunner(SPEC, out_dir=d, backend="pipeline",
+                    cache=None).run(frontier_only=True)
+    # capacity changes the carried-state shape: refuse, don't corrupt
+    with pytest.raises(ValueError, match="capacity"):
+        SweepRunner(SPEC, out_dir=d, backend="pipeline", cache=None).run(
+            frontier_only=True, resume=True, frontier_capacity=16)
+    # a different spec cannot adopt the state
+    other = dataclasses.replace(SPEC, budget_scales=(1.0,))
+    with pytest.raises(ValueError, match="spec changed"):
+        SweepRunner(other, out_dir=d, backend="pipeline", cache=None).run(
+            frontier_only=True, resume=True)
 
 
 def test_frontier_merge_dominance_ties_and_overflow():
@@ -256,7 +294,8 @@ def _cli_frontier_and_summary(tmp_path, capsys, pathfind):
     err = capsys.readouterr().err
     hits = int(err.split("cache: prediction ")[1].split(" hits")[0])
     assert hits > 0
-    # frontier-only CLI: refuses --resume, then produces the frontier
+    # frontier-only CLI: a full-sweep dir is not a frontier checkpoint —
+    # resuming it under --frontier-only must refuse, not re-merge
     rc = pathfind.main(["sweep", "--out", out, "--resume",
                         "--frontier-only"])
     assert rc == 2

@@ -1,0 +1,388 @@
+"""Traffic-driven serving tests (ISSUE-6 tentpole).
+
+Covers: the analytic continuous-batching model (feasibility wall,
+monotonicity in load, lognormal quantiles), scalar-`record` vs vectorized
+`metrics_fold` parity for the serving-traffic scenario INCLUDING
+infeasible and SLO-wall points, the percentile-wall monotonicity property
+(a tighter SLO never admits more points), inverse fleet sizing on an
+analytic grid (bisection minimality by brute force), the redesigned
+`ScenarioSpec` API (round-trip, variant expansion, compat shim), the
+unified `pathfinder.evaluate` facade, and pre-PR6 checkpoint-format
+resume compatibility.
+"""
+
+import dataclasses
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import pathfinder, scenarios, sweeprunner, traffic
+from repro.core.sweeprunner import SweepRunner, SweepSpec
+
+ARCH = "qwen1.5-0.5b"
+
+# 2x2 is KV-capacity-infeasible for the 32k serving cells, 4x4 is feasible;
+# the slo_ttft_p99 axis spans an unmeetable and a trivially-met wall so the
+# grid carries feasible, infeasible, AND SLO-wall-failing points at once
+TRAFFIC_SPEC = SweepSpec(
+    arches=(ARCH,), mesh_shapes=((2, 2), (4, 4)),
+    scenario="serving-traffic", n_tilings=2, chunk_size=3,
+    scenario_params={"qps": 0.1, "prefill_chunk": [2048.0, 8192.0],
+                     "slo_ttft_p99": [1.0, 1e6]})
+
+
+def _consts(**kw):
+    tm = traffic.TrafficModel(**{k: v for k, v in kw.items()
+                                 if k in traffic.TrafficModel().to_dict()})
+    po = traffic.BatchingPolicy(
+        prefill_chunk=kw.get("prefill_chunk", 512.0))
+    return traffic.build_consts(
+        tm, po, slots=kw.get("slots", 8),
+        prefill_tokens=kw.get("prefill_tokens", 32768.0),
+        devices=kw.get("devices", 4.0))
+
+
+# ------------------------------------------------------- analytic model
+def test_lognormal_quantile_properties():
+    assert traffic.lognormal_quantile(100.0, 0.0, 0.99) == 100.0
+    med = traffic.lognormal_quantile(100.0, 1.0, 0.5)
+    p99 = traffic.lognormal_quantile(100.0, 1.0, 0.99)
+    assert med < 100.0 < p99          # right-skew: median below the mean
+    # quantiles are monotone in p
+    qs = [traffic.lognormal_quantile(100.0, 1.0, p)
+          for p in (0.1, 0.5, 0.9, 0.99)]
+    assert qs == sorted(qs)
+    with pytest.raises(ValueError):
+        traffic.lognormal_quantile(100.0, 1.0, 1.5)
+
+
+def test_stats_feasibility_wall_and_masking():
+    c = _consts(qps=0.5)
+    light = traffic.continuous_batching_stats(
+        np, np.float64(0.5), np.float64(0.01), c)
+    assert bool(light["feasible"])
+    assert float(light["util"]) < 1.0
+    assert math.isfinite(float(light["ttft_p99_s"]))
+    # overload: util >= 1 masks every user metric to inf/0
+    heavy = traffic.continuous_batching_stats(
+        np, np.float64(0.5), np.float64(10.0), c)
+    assert not bool(heavy["feasible"])
+    assert float(heavy["util"]) >= 1.0
+    assert float(heavy["ttft_p99_s"]) == np.inf
+    assert float(heavy["tokens_per_s"]) == 0.0
+    assert float(heavy["cost_device_s_per_token"]) == np.inf
+    # non-finite phase costs (capacity-infeasible design) are infeasible
+    dead = traffic.continuous_batching_stats(
+        np, np.float64(np.inf), np.float64(0.01), c)
+    assert not bool(dead["feasible"])
+    assert float(dead["qps_max"]) == 0.0
+    # the unmasked (refinement) path stays finite on the same inputs
+    soft = traffic.continuous_batching_stats(
+        np, np.float64(0.5), np.float64(10.0), c, mask_infeasible=False)
+    assert math.isfinite(float(soft["ttft_p99_s"]))
+
+
+def test_stats_monotone_in_offered_load():
+    """Every SLO-relevant metric degrades (weakly) as qps rises — the
+    property the fleet-sizing bisection rests on."""
+    t_pf, t_d = np.float64(0.8), np.float64(0.02)
+    prev = None
+    for qps in (0.05, 0.1, 0.2, 0.4, 0.8):
+        st = traffic.continuous_batching_stats(
+            np, t_pf, t_d, _consts(qps=qps, slots=16))
+        cur = (float(st["util"]), float(st["ttft_p50_s"]),
+               float(st["ttft_p99_s"]), float(st["tpot_p50_s"]),
+               float(st["tpot_p99_s"]))
+        if prev is not None:
+            assert all(a >= b - 1e-12 for a, b in zip(cur, prev)), (cur,
+                                                                    prev)
+        prev = cur
+
+
+def test_percentile_wall_monotonicity():
+    """A tighter SLO wall never admits more points (and the admitted set
+    is nested), across a grid of designs spanning the feasibility wall."""
+    rng = np.random.default_rng(0)
+    t_pf = rng.uniform(0.05, 3.0, size=64)
+    t_d = rng.uniform(0.001, 0.3, size=64)
+    t_pf[::13] = np.inf                     # sprinkle capacity-infeasible
+    c = _consts(qps=0.3, slots=16)
+    st = traffic.continuous_batching_stats(np, t_pf, t_d, c)
+    for key in ("ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99"):
+        admitted_prev = None
+        for wall in (1e4, 100.0, 10.0, 1.0, 0.1, 0.01):
+            ok = np.asarray(traffic.slo_ok(st, {key: wall}))
+            if admitted_prev is not None:
+                assert not np.any(ok & ~admitted_prev), key
+            admitted_prev = ok
+    # p99 wall is never looser than the p50 wall at equal threshold
+    for fam in ("ttft", "tpot"):
+        ok99 = np.asarray(traffic.slo_ok(st, {f"{fam}_p99": 5.0}))
+        ok50 = np.asarray(traffic.slo_ok(st, {f"{fam}_p50": 5.0}))
+        assert not np.any(ok99 & ~ok50), fam
+
+
+def test_variant_codec_roundtrip():
+    cid = traffic.encode_variant("a+b", {"qps": 2.5, "prefill_chunk": 256})
+    assert cid == "a+b@prefill_chunk=256,qps=2.5"
+    base, over = traffic.decode_variant(cid)
+    assert base == "a+b" and over == {"qps": 2.5, "prefill_chunk": 256.0}
+    assert traffic.decode_variant("a+b") == ("a+b", {})
+    assert traffic.encode_variant("a+b", {}) == "a+b"
+    with pytest.raises(ValueError, match="malformed"):
+        traffic.decode_variant("a+b@qps")
+
+
+def test_split_params_rejects_unknown_keys():
+    with pytest.raises(KeyError, match="unknown traffic"):
+        traffic.split_params({"qps": 1.0, "bogus": 2.0})
+    tm, po, slo = traffic.split_params(
+        {"qps": 2.0, "prefill_chunk": 128.0, "slo_ttft_p99": 3.0,
+         "slo_tpot_p50": None})
+    assert tm.qps == 2.0 and po.prefill_chunk == 128.0
+    assert slo == {"ttft_p99": 3.0}
+
+
+# ------------------------------------------------- record / fold parity
+@pytest.fixture(scope="module")
+def traffic_sweeps(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("traffic")
+    serial = SweepRunner(TRAFFIC_SPEC, out_dir=str(tmp / "s"),
+                         backend="serial", cache=None).run()
+    pipe = SweepRunner(TRAFFIC_SPEC, out_dir=str(tmp / "p"),
+                       backend="pipeline", cache=None).run()
+    return serial, pipe
+
+
+def test_record_vs_metrics_fold_parity(traffic_sweeps):
+    """The pipelined executor's vectorized metrics_fold must reproduce the
+    scalar record path bit-for-bit, including infeasible and
+    SLO-wall-failing points."""
+    serial, pipe = traffic_sweeps
+    by_key_s = {(r["key"], r["cell"]): r for r in serial.records}
+    by_key_p = {(r["key"], r["cell"]): r for r in pipe.records}
+    assert by_key_s.keys() == by_key_p.keys() and by_key_s
+    for k, s in by_key_s.items():
+        p = by_key_p[k]
+        assert s.keys() == p.keys()
+        for f, sv in s.items():
+            pv = p[f]
+            if isinstance(sv, float):
+                assert (sv == pv) or (math.isnan(sv) and math.isnan(pv)), \
+                    (k, f, sv, pv)
+            else:
+                assert sv == pv, (k, f)
+    # the grid must genuinely exercise all three regimes
+    feas = {r["feasible"] for r in serial.records}
+    slo = {r["slo_ok"] for r in serial.records if r["feasible"]}
+    assert feas == {True, False}
+    assert slo == {True, False}
+
+
+def test_slo_wall_points_fall_off_frontier(traffic_sweeps):
+    serial, _ = traffic_sweeps
+    scn = TRAFFIC_SPEC.scenario_spec.variants()[0].resolve()
+    front = sweeprunner.pareto_records(serial.records, scn.objectives)
+    assert front, "frontier must be non-empty"
+    assert all(r["slo_ok"] for r in front)
+    assert all(scn.objective_values(r) is not None for r in front)
+    # wall-failing records exist and carry objective_values None
+    walled = [r for r in serial.records
+              if r["feasible"] and not r["slo_ok"]]
+    assert walled
+    assert all(scn.objective_values(r) is None for r in walled)
+
+
+def test_frontier_fold_matches_host_frontier(tmp_path):
+    """--frontier-only (traced frontier_fold + device Pareto merge) must
+    reach the same surviving set as the host-side re-filter over full
+    materialization — the traceability contract for the traffic math."""
+    full = SweepRunner(TRAFFIC_SPEC, backend="pipeline", cache=None).run()
+    scn = TRAFFIC_SPEC.scenario_spec.variants()[0].resolve()
+    want = sweeprunner.pareto_records(full.records, scn.objectives)
+    front = SweepRunner(TRAFFIC_SPEC, out_dir=str(tmp_path / "f"),
+                        backend="pipeline", cache=None).run(
+        frontier_only=True)
+    assert front.n_frontier_overflowed == 0
+    assert sorted((r["key"], r["cell"]) for r in front.records) == \
+        sorted((r["key"], r["cell"]) for r in want)
+
+
+# ------------------------------------------------------- inverse sizing
+def _mk_record(key, devices, t_pf, t_d,
+               cell="prefill_32k+decode_32k"):
+    return {"key": key, "cell": cell, "devices": devices,
+            "prefill_s": t_pf, "decode_step_s": t_d}
+
+
+def test_size_fleet_minimality_brute_force():
+    """Doubling+bisection must return the exact minimal replica count —
+    checked against the closed-form model directly at n-1 and n."""
+    tm = traffic.TrafficModel(qps=1.0, prompt_mean=1024.0,
+                              output_mean=64.0)
+    po = traffic.BatchingPolicy(prefill_chunk=512.0)
+    slo = {"ttft_p99": 30.0, "tpot_p50": 0.2}
+    records = [_mk_record("fast", 8, 0.4, 0.01),
+               _mk_record("slow", 2, 1.5, 0.05),
+               _mk_record("dead", 1, np.inf, None)]
+    qps = 4.0
+    plan = traffic.size_fleet(records, qps, slo=slo, traffic=tm,
+                              policy=po)
+    assert plan.n_records == 3
+    assert plan.n_unsizeable == 1           # the non-finite design
+    assert plan.n_sized == 2
+    assert plan.best is not None
+    for cand in plan.candidates:
+        rec = next(r for r in records if r["key"] == cand.key)
+        c1 = traffic._record_consts(rec, tm, po, qps)
+        ok_n, _ = traffic._meets(
+            float(rec["prefill_s"]), float(rec["decode_step_s"]),
+            dataclasses.replace(c1, qps=qps / cand.replicas), slo)
+        assert ok_n, cand
+        if cand.replicas > 1:
+            ok_less, _ = traffic._meets(
+                float(rec["prefill_s"]), float(rec["decode_step_s"]),
+                dataclasses.replace(c1, qps=qps / (cand.replicas - 1)),
+                slo)
+            assert not ok_less, cand
+    # best is minimal-device among the sized candidates
+    assert plan.best.devices == min(c.devices for c in plan.candidates)
+
+
+def test_size_fleet_unreachable_slo_and_foreign_records():
+    tm = traffic.TrafficModel(qps=1.0, prompt_mean=1024.0,
+                              output_mean=64.0)
+    po = traffic.BatchingPolicy()
+    # TPOT is replica-count-independent: a decode step slower than the
+    # wall can never be saved by adding replicas
+    plan = traffic.size_fleet(
+        [_mk_record("a", 4, 0.2, 0.5)], 1.0, slo={"tpot_p99": 0.1},
+        traffic=tm, policy=po)
+    assert plan.best is None and plan.n_unsizeable == 1
+    # non-traffic records (no phase-cost fields) are ignored, not errors
+    plan = traffic.size_fleet(
+        [{"key": "train", "cell": "train_4k", "devices": 4}], 1.0,
+        slo={"ttft_p99": 1.0}, traffic=tm, policy=po)
+    assert plan.n_records == 0
+    with pytest.raises(KeyError, match="unknown SLO"):
+        traffic.size_fleet([], 1.0, slo={"nope": 1.0})
+
+
+def test_size_fleet_respects_variant_overrides():
+    """Swept batching params ride in the cell id and must reach the
+    closed-form model during sizing."""
+    tm = traffic.TrafficModel(qps=1.0, prompt_mean=4096.0,
+                              output_mean=32.0, prompt_cv=0.0)
+    po = traffic.BatchingPolicy(prefill_chunk=512.0)
+    cell = "prefill_32k+decode_32k"
+    r_small = _mk_record("s", 4, 1.0, 0.01,
+                         cell=f"{cell}@prefill_chunk=256")
+    r_big = _mk_record("b", 4, 1.0, 0.01,
+                       cell=f"{cell}@prefill_chunk=4096")
+    c_small = traffic._record_consts(r_small, tm, po, 1.0)
+    c_big = traffic._record_consts(r_big, tm, po, 1.0)
+    assert c_small.chunk == 256.0 and c_big.chunk == 4096.0
+    assert c_small.chunks_per_req > c_big.chunks_per_req
+
+
+# ----------------------------------------------------- ScenarioSpec API
+def test_scenariospec_roundtrip_and_variants():
+    spec = scenarios.ScenarioSpec(
+        name="serving-traffic", cells=("prefill_32k", "decode_32k"),
+        params={"qps": 2.0, "prefill_chunk": [256, 512, 1024]})
+    again = scenarios.ScenarioSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict())))
+    assert again == dataclasses.replace(spec, variant_keys=())
+    assert spec.axes() == {"prefill_chunk": (256.0, 512.0, 1024.0)}
+    variants = spec.variants()
+    assert len(variants) == 3
+    assert [dict(v.params)["prefill_chunk"] for v in variants] == \
+        [256.0, 512.0, 1024.0]
+    scn = variants[1].resolve()
+    assert scn.cell_id() == \
+        "prefill_32k+decode_32k@prefill_chunk=512"
+    # for_cell_id reconstructs the variant from a record's cell id
+    back = spec.for_cell_id(scn.cell_id()).resolve()
+    assert back.cell_id() == scn.cell_id()
+    assert back.params["prefill_chunk"] == 512.0
+    # multi-valued params cannot resolve directly
+    with pytest.raises(ValueError, match="variants"):
+        spec.resolve()
+
+
+def test_scenariospec_compat_shim_and_param_validation():
+    # the pre-PR6 lookup signature still works for every legacy scenario
+    assert scenarios.get_scenario("train").name == "train"
+    assert scenarios.get_scenario("serving", slo_s=2.5).slo_s == 2.5
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scenarios.get_scenario("nope")
+    # typed params are rejected on scenarios that take none
+    with pytest.raises(ValueError, match="takes no params"):
+        scenarios.ScenarioSpec(name="train",
+                               params={"qps": 1.0}).resolve()
+    with pytest.raises(KeyError, match="unknown traffic"):
+        scenarios.ScenarioSpec(name="serving-traffic",
+                               params={"bogus": 1.0}).resolve()
+    # legacy slo_s maps onto the p99 TTFT wall
+    scn = scenarios.get_scenario("serving-traffic", slo_s=3.0)
+    assert scn.params["slo_ttft_p99"] == 3.0
+
+
+def test_sweepspec_accepts_scenariospec_object():
+    sspec = scenarios.ScenarioSpec(name="serving-traffic",
+                                   params={"qps": 0.25})
+    spec = SweepSpec(arches=(ARCH,), mesh_shapes=((4, 4),),
+                     scenario=sspec, n_tilings=2)
+    assert spec.scenario == "serving-traffic"
+    assert spec.scenario_params == {"qps": 0.25}
+    assert spec.scenario_spec.param_dict["qps"] == 0.25
+
+
+# ------------------------------------------------ eval facade (PR6 API)
+def test_evaluate_facade_mode_exclusivity(tmp_path):
+    with pytest.raises(ValueError, match="exactly one"):
+        pathfinder.evaluate()
+    with pytest.raises(ValueError, match="exactly one"):
+        pathfinder.evaluate(points=[], spec=object())
+    with pytest.raises(ValueError, match="matrix mode"):
+        pathfinder.evaluate(matrix=np.zeros((1, 4)))
+
+
+def test_evaluate_facade_label_mode_and_deprecations():
+    spec = SweepSpec(arches=(ARCH,), mesh_shapes=((2, 2),),
+                     scenario="train", n_tilings=2, chunk_size=2)
+    labels = sweeprunner.enumerate_labels(spec)[:2]
+    want = pathfinder.evaluate(spec=spec, labels=labels, cache=None)
+    assert [r["key"] for r in want] == [lb.key() for lb in labels]
+    with pytest.warns(DeprecationWarning, match="eval_labels"):
+        got = sweeprunner.eval_labels(spec, labels, cache=None)
+    assert json.dumps(sweeprunner.json_safe(got)) == \
+        json.dumps(sweeprunner.json_safe(want))
+    with pytest.warns(DeprecationWarning, match="evaluate_points"):
+        rows = pathfinder.evaluate_points([], cache=None)
+    assert rows.shape == (0, len(pathfinder.METRICS))
+
+
+# --------------------------------------- pre-PR6 checkpoint compatibility
+def test_pre_pr6_spec_json_resumes_with_zero_reeval(tmp_path):
+    """A param-less spec serializes WITHOUT the new scenario_params key
+    (byte-identical spec.json => identical fingerprint), and a checkpoint
+    dir in that pre-PR6 format resumes with zero re-evaluation."""
+    spec = SweepSpec(arches=(ARCH,), mesh_shapes=((2, 2), (4, 4)),
+                     scenario="train", n_tilings=2, chunk_size=1)
+    assert "scenario_params" not in spec.to_dict()
+    assert "profile" not in spec.to_dict()
+    d = str(tmp_path / "sweep")
+    first = SweepRunner(spec, out_dir=d, backend="serial").run(max_chunks=1)
+    assert first.n_chunks_evaluated == 1 and not first.complete
+    head = json.load(open(os.path.join(d, "spec.json")))
+    assert "scenario_params" not in head["spec"]
+    # a pre-PR6 reader/writer round-trip does not disturb the fingerprint
+    assert SweepSpec.from_dict(head["spec"]).fingerprint() == \
+        spec.fingerprint()
+    second = SweepRunner.from_dir(d, backend="serial").run(resume=True)
+    assert second.n_chunks_skipped == 1
+    assert second.complete
