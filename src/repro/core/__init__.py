@@ -13,8 +13,15 @@ DeepFlow (search on top of CrossFlow):
     soe         projected-GD budget search             (paper §7)
     pathfinder  batched/vmapped design-space sweeps + LRU prediction cache
     scenarios   workload-scenario registry (train / prefill+decode serving)
+    sweepexec   executor-service core shared by the sweep frontends: chunk
+                journal (JSONL commit protocol), spec heads, frontier-state
+                checkpoints — durability, not evaluation
     sweeprunner sharded, chunked, resumable sweep engine (JSONL streaming,
                 checkpoint/resume, thread/process/pmap-device fan-out)
+    sweepfabric distributed sweep fabric: lease-based coordinator/worker
+                execution of the chunk protocol over a shared sweep dir
+                (TTL + heartbeat leases, per-worker shards merged on read,
+                order-independent cross-worker frontier merge)
     cooptimize  cross-stack sweep -> refine engine: batched GD over hardware
                 budgets (eq. 6) + continuous technology knobs (DVFS voltage,
                 HBM bw/capacity) with a discrete strategy/mesh outer loop
@@ -23,8 +30,8 @@ DeepFlow (search on top of CrossFlow):
 """
 
 from repro.core import age, cooptimize, graph, lmgraph, parallelism, \
-    pathfinder, placement, roofline, scenarios, simulate, soe, sweeprunner, \
-    techlib, transform
+    pathfinder, placement, roofline, scenarios, simulate, soe, sweepexec, \
+    sweepfabric, sweeprunner, techlib, transform
 from repro.core.age import Budgets, MicroArch
 from repro.core.graph import ComputeGraph
 from repro.core.parallelism import Strategy

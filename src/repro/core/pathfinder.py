@@ -723,8 +723,18 @@ def frontier_merge(state: Tuple, vals: jnp.ndarray, payload: jnp.ndarray,
     each other, and rows with any non-finite objective (infeasible points,
     padding, empty slots) never enter the frontier.  A carried point can
     still be evicted by a later batch — the state always holds the skyline
-    of everything seen so far, truncated to capacity by first objective
-    (``overflow`` counts what the truncation dropped).
+    of everything seen so far, truncated to capacity in full lexicographic
+    order (all objectives, then global point index; ``overflow`` counts
+    what the truncation dropped).  The full-lex key makes the kept set a
+    canonical function of the surviving point set — independent of how
+    points are arranged across state slots and batch rows — because a
+    dominator always sorts strictly before anything it dominates, and the
+    point index breaks exact-tie races deterministically.  (Which points
+    *survive* can still depend on merge history once overflow drops a
+    future dominator — any bounded streaming skyline has that limit, which
+    is why ``overflow > 0`` flags the frontier as inexact and the
+    cross-worker coordinator merges with the unbounded
+    `frontier_merge_states` instead.)
     """
     svals, spay, sidx, overflow = state
     capacity = svals.shape[0]
@@ -738,8 +748,12 @@ def frontier_merge(state: Tuple, vals: jnp.ndarray, payload: jnp.ndarray,
     lt = jnp.any(av[None, :, :] < av[:, None, :], axis=-1)
     dominated = jnp.any(le & lt & finite[None, :], axis=1)
     keep = finite & ~dominated
-    # survivors first (sorted by first objective), empties pushed to +inf
-    order = jnp.argsort(jnp.where(keep, av[:, 0], jnp.inf))
+    # survivors first in full lex order (objectives, then point index),
+    # empties pushed to +inf / INT32_MAX; lexsort's primary key is LAST
+    masked = jnp.where(keep[:, None], av, jnp.inf)
+    idx_key = jnp.where(keep, ai, jnp.iinfo(jnp.int32).max)
+    order = jnp.lexsort((idx_key,) + tuple(
+        masked[:, k] for k in range(av.shape[1] - 1, -1, -1)))
     kept_beyond = jnp.sum(keep) - jnp.minimum(jnp.sum(keep), capacity)
     order = order[:capacity]
     mask = keep[order]
@@ -757,6 +771,71 @@ def frontier_unpack(state: Tuple) -> Tuple[np.ndarray, np.ndarray,
     live = idx >= 0
     return (vals[live].astype(np.float64), payload[live], idx[live],
             int(overflow))
+
+
+def frontier_merge_states(a: Tuple, b: Tuple) -> Tuple[np.ndarray, ...]:
+    """Merge two carried frontier states host-side — the coordinator's
+    cross-worker reduction.
+
+    Unlike the streaming `frontier_merge`, this merge is **unbounded**: it
+    dedupes by global point index (the same point checkpointed by two
+    incarnations of a worker is one point), drops dominated points with
+    the exact f32 semantics of the device merge, and keeps EVERY survivor,
+    growing the state instead of truncating to a capacity.  That makes the
+    live set exactly commutative, associative, and idempotent — any merge
+    order over any partition of worker states yields the same global
+    frontier, which the fabric's property tests pin.  (A bounded merge
+    cannot promise this: once truncation drops a not-yet-needed dominator,
+    which points survive depends on merge history.  Workers' own overflow
+    counters are summed through, so ``overflow > 0`` still flags that some
+    worker's *local* frontier was inexact — the same contract as a
+    single-host run.)
+
+    Slot layout of the result is canonical: survivors in full
+    lexicographic order (objectives, then point index), padded to the
+    larger input's capacity.  States must agree on objective and payload
+    dimensions (same sweep spec).
+    """
+    av, ap, ai, ao = (np.asarray(x) for x in a)
+    bv, bp, bi, bo = (np.asarray(x) for x in b)
+    if av.shape[1:] != bv.shape[1:] or ap.shape[1:] != bp.shape[1:]:
+        raise ValueError(
+            f"frontier states disagree on objective/payload shape: "
+            f"{av.shape[1:]}/{ap.shape[1:]} vs {bv.shape[1:]}/"
+            f"{bp.shape[1:]} — were they produced by the same spec?")
+    vals = np.concatenate([av, bv]).astype(np.float32)
+    pay = np.concatenate([ap, bp]).astype(np.float32)
+    idx = np.concatenate([ai, bi]).astype(np.int32)
+    live = (idx >= 0) & np.all(np.isfinite(vals), axis=1)
+    # dedupe by global point index: re-merging a state that already holds
+    # a point must be a no-op (the duplicate rows are the same evaluated
+    # point, so which copy survives is immaterial)
+    first: Dict[int, int] = {}
+    for k in np.flatnonzero(live):
+        first.setdefault(int(idx[k]), int(k))
+    ks = np.asarray(sorted(first.values()), dtype=np.int64)
+    n = len(ks)
+    cap = max(av.shape[0], bv.shape[0], n)
+    overflow = np.asarray(int(ao) + int(bo), dtype=np.int32)
+    if n:
+        v = vals[ks]
+        le = np.all(v[None, :, :] <= v[:, None, :], axis=-1)
+        lt = np.any(v[None, :, :] < v[:, None, :], axis=-1)
+        dominated = np.any(le & lt, axis=1)
+        ks = ks[~dominated]
+        # canonical slot order: full lex (objectives, then point index)
+        v = vals[ks]
+        order = np.lexsort((idx[ks],) + tuple(
+            v[:, k] for k in range(v.shape[1] - 1, -1, -1)))
+        ks = ks[order]
+        n = len(ks)
+    out_v = np.full((cap, vals.shape[1]), np.inf, dtype=np.float32)
+    out_p = np.zeros((cap, pay.shape[1]), dtype=np.float32)
+    out_i = np.full((cap,), -1, dtype=np.int32)
+    out_v[:n] = vals[ks]
+    out_p[:n] = pay[ks]
+    out_i[:n] = idx[ks]
+    return out_v, out_p, out_i, overflow
 
 
 # ---------------------------------------------------------------------------

@@ -648,7 +648,6 @@ class PipelineExecutor:
         only the pending subset: carried payload rows reference global
         point indices, so record rebuild needs every chunk, merged or not.
         """
-        from repro.core import sweeprunner
         all_chunks = list(all_chunks) if all_chunks is not None \
             else list(chunks)
         if not all_chunks:
@@ -736,9 +735,28 @@ class PipelineExecutor:
         finally:
             self.cache = cache
 
-        vals, payload, idx, n_over = pathfinder.frontier_unpack(state)
+        records, n_over = self.frontier_records(state, all_chunks)
+        return records, n_over, n_points
+
+    def frontier_records(self, state,
+                         all_chunks: Sequence) -> Tuple[List[Dict], int]:
+        """Rebuild the surviving frontier's result records from a carried
+        frontier state's payload rows: ``(records, n_overflowed)``.
+
+        The state may come straight off `run_frontier`, a checkpoint, or a
+        cross-worker `pathfinder.frontier_merge_states` merge — payload
+        rows reference global point indices, so ``all_chunks`` must be the
+        FULL enumeration.  Records are re-filtered host-side in float64
+        (the device merge works in f32, so razor-edge ties could otherwise
+        differ from the full-materialization frontier).
+        """
+        from repro.core import sweeprunner
+        all_chunks = list(all_chunks)
+        vals, payload, idx, n_over = pathfinder.frontier_unpack(
+            tuple(np.asarray(x) for x in state))
         by_index = {c.index: c for c in all_chunks}
         records: List[Dict] = []
+        sk = None
         for i in np.argsort(idx):              # enumeration order
             gi = int(idx[i])
             chunk = by_index[gi // self.spec.chunk_size]
@@ -751,9 +769,8 @@ class PipelineExecutor:
             rec = sk.scn.record(dp, rows)
             rec["key"] = dp.key()
             records.append(rec)
-        # exact host-side re-filter in float64: the device merge works in
-        # f32, so razor-edge ties could otherwise differ from the full-
-        # materialization frontier
+        if not records:
+            return [], n_over
         records = sweeprunner.pareto_records(
-            records, tuple(sk0.scn.objectives))
-        return records, n_over, n_points
+            records, tuple(sk.scn.objectives))
+        return records, n_over

@@ -48,46 +48,18 @@ import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_config
 from repro.core import age as age_lib
-from repro.core import pathfinder, scenarios, techlib
+from repro.core import pathfinder, scenarios, sweepexec, techlib
 from repro.core.age import Budgets
 from repro.core.parallelism import Strategy
 from repro.core.placement import mesh_system
 from repro.core.roofline import PPEConfig
+# JSONL reader/writer semantics live in the shared executor-service core
+# (repro.core.sweepexec) so the local and fabric frontends cannot diverge;
+# re-exported here because they predate that split and are imported widely.
+from repro.core.sweepexec import iter_jsonl as _iter_jsonl  # noqa: F401
+from repro.core.sweepexec import json_safe  # noqa: F401
 
 SPEC_VERSION = 1
-
-
-def _iter_jsonl(path: str):
-    """Parsed records of a JSONL file, skipping blank lines and the
-    crash-torn tail line an interrupted writer can leave behind.  THE one
-    reader shared by `read_results`, resume compaction, and `load_sweep`
-    — torn-line semantics must not diverge between them."""
-    if not os.path.exists(path):
-        return
-    with open(path) as fh:
-        for line in fh:
-            line = line.strip()
-            if not line:
-                continue
-            try:
-                yield json.loads(line)
-            except json.JSONDecodeError:
-                continue
-
-
-def json_safe(obj):
-    """Replace non-finite floats with None so the streamed JSONL stays
-    RFC-8259 valid (json.dumps would otherwise emit the non-standard
-    ``Infinity`` token for infeasible serving points, which jq /
-    JSON.parse / strict parsers reject).  In-memory records keep their
-    real inf values; only the serialized form is sanitized."""
-    if isinstance(obj, dict):
-        return {k: json_safe(v) for k, v in obj.items()}
-    if isinstance(obj, (list, tuple)):
-        return [json_safe(v) for v in obj]
-    if isinstance(obj, float) and not np.isfinite(obj):
-        return None
-    return obj
 
 
 # ---------------------------------------------------------------------------
@@ -547,44 +519,25 @@ class SweepRunner:
                 os.path.join(d, "checkpoint.jsonl"))
 
     def _write_spec(self, spec_path: str):
-        tmp = spec_path + ".tmp"
-        with open(tmp, "w") as fh:
-            json.dump({"version": SPEC_VERSION, "fingerprint": self._fp,
-                       "spec": self.spec.to_dict()}, fh, indent=2)
-        os.replace(tmp, spec_path)
+        sweepexec.write_spec_head(spec_path, SPEC_VERSION, self._fp,
+                                  self.spec.to_dict())
+
+    def _journal(self) -> sweepexec.ChunkJournal:
+        _, res_path, ckpt_path = self._paths()
+        return sweepexec.ChunkJournal(res_path, ckpt_path)
 
     def _load_done(self, spec_path: str, ckpt_path: str,
                    chunks: List[Chunk]) -> Dict[int, str]:
         """Finished chunks from a previous run, hash-verified against the
         current enumeration (a stale/corrupt line is just re-evaluated)."""
-        if not os.path.exists(spec_path):
-            raise FileNotFoundError(
-                f"cannot resume: {spec_path} does not exist")
-        with open(spec_path) as fh:
-            head = json.load(fh)
-        if head.get("fingerprint") != self._fp:
-            raise ValueError(
-                f"cannot resume: sweep spec changed "
-                f"(checkpoint {head.get('fingerprint')}, now {self._fp})")
-        done: Dict[int, str] = {}
-        by_index = {c.index: c for c in chunks}
-        for rec in _iter_jsonl(ckpt_path):
-            c = by_index.get(rec.get("chunk"))
-            if c is not None and rec.get("hash") == c.hash(self._fp):
-                done[c.index] = rec["hash"]
-        return done
+        sweepexec.check_fingerprint(spec_path, self._fp)
+        return sweepexec.ChunkJournal("", ckpt_path).load_done(
+            chunks, self._fp)
 
     def _compact_results(self, res_path: str, done: Dict[int, str]):
         """Drop rows from unfinished chunks (crash between row append and
         done-line append) so resumed output has no duplicates."""
-        if not os.path.exists(res_path):
-            return
-        tmp = res_path + ".tmp"
-        with open(tmp, "w") as dst:
-            for rec in _iter_jsonl(res_path):
-                if rec.get("chunk") in done:
-                    dst.write(json.dumps(rec) + "\n")
-        os.replace(tmp, res_path)
+        sweepexec.ChunkJournal(res_path, "").compact(done)
 
     def read_results(self) -> List[Dict]:
         """All records currently streamed to results.jsonl."""
@@ -635,7 +588,7 @@ class SweepRunner:
         labels = enumerate_labels(self.spec)
         chunks = make_chunks(labels, self.spec.chunk_size)
         done: Dict[int, str] = {}
-        res_fh = ckpt_fh = None
+        journal: Optional[sweepexec.ChunkJournal] = None
         memory_rows: List[Dict] = []
 
         if self.out_dir is not None:
@@ -652,8 +605,7 @@ class SweepRunner:
                     f"pass resume=True (CLI: --resume) to continue it, or "
                     f"point --out at a fresh directory")
             self._write_spec(spec_path)
-            res_fh = open(res_path, "a")
-            ckpt_fh = open(ckpt_path, "a")
+            journal = self._journal().open()
         elif resume:
             raise ValueError("resume=True requires an out_dir")
 
@@ -666,21 +618,8 @@ class SweepRunner:
         def commit(chunk: Chunk, records: List[Dict]):
             nonlocal n_eval_points
             n_eval_points += len(records)
-            if res_fh is not None:
-                for rec in records:
-                    row = {"chunk": chunk.index, **rec}
-                    try:
-                        # strict dump first: one C-speed pass for the
-                        # (overwhelmingly common) all-finite record
-                        line = json.dumps(row, allow_nan=False)
-                    except ValueError:
-                        line = json.dumps(json_safe(row))
-                    res_fh.write(line + "\n")
-                res_fh.flush()
-                ckpt_fh.write(json.dumps(
-                    {"chunk": chunk.index, "hash": chunk.hash(self._fp),
-                     "n": len(records)}) + "\n")
-                ckpt_fh.flush()
+            if journal is not None:
+                journal.commit(chunk.index, chunk.hash(self._fp), records)
             else:
                 memory_rows.extend(records)
             if verbose:
@@ -690,9 +629,8 @@ class SweepRunner:
         try:
             self._execute(pending, commit)
         finally:
-            if res_fh is not None:
-                res_fh.close()
-                ckpt_fh.close()
+            if journal is not None:
+                journal.close()
 
         records: Optional[List[Dict]] = None
         if collect:
@@ -719,17 +657,8 @@ class SweepRunner:
         after every committed superbatch, so a SIGKILL loses at most the
         in-flight packs and `run(resume=True)` continues from the merged
         state with zero re-evaluation (the chunked-sweep semantics)."""
-        vals, payload, idx, overflow = state
-        order = sorted(done)
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as fh:
-            np.savez(fh, vals=vals, payload=payload, idx=idx,
-                     overflow=overflow,
-                     done_idx=np.asarray(order, dtype=np.int64),
-                     done_hash=np.asarray([done[i] for i in order]),
-                     fingerprint=np.asarray(self._fp),
-                     capacity=np.asarray(int(capacity)))
-        os.replace(tmp, path)
+        sweepexec.save_frontier_state(path, state, done, capacity,
+                                      self._fp)
 
     def _load_frontier_state(self, spec_path: str, state_path: str,
                              ckpt_path: str, chunks: List[Chunk],
@@ -739,43 +668,16 @@ class SweepRunner:
         Unlike `_load_done`, a mismatched chunk is fatal rather than
         re-evaluated: its points are already folded into the carried state
         and cannot be dropped again."""
-        if not os.path.exists(spec_path):
-            raise FileNotFoundError(
-                f"cannot resume: {spec_path} does not exist")
         if os.path.exists(ckpt_path):
             raise ValueError(
                 f"{self.out_dir} holds a full-sweep checkpoint, not a "
                 f"frontier-state checkpoint; resume it without "
                 f"--frontier-only, or point --out at a fresh directory")
-        with open(spec_path) as fh:
-            head = json.load(fh)
-        if head.get("fingerprint") != self._fp:
-            raise ValueError(
-                f"cannot resume: sweep spec changed "
-                f"(checkpoint {head.get('fingerprint')}, now {self._fp})")
+        sweepexec.check_fingerprint(spec_path, self._fp)
         if not os.path.exists(state_path):
             return None, {}             # spec written, nothing merged yet
-        z = np.load(state_path)
-        if z["fingerprint"].item() != self._fp:
-            raise ValueError("cannot resume: frontier state belongs to a "
-                             "different spec fingerprint")
-        if int(z["capacity"]) != int(capacity):
-            raise ValueError(
-                f"cannot resume: frontier capacity changed (checkpoint "
-                f"{int(z['capacity'])}, now {capacity}); rerun with the "
-                f"original --frontier-capacity")
-        by_index = {c.index: c for c in chunks}
-        done: Dict[int, str] = {}
-        for i, h in zip(z["done_idx"].tolist(), z["done_hash"].tolist()):
-            c = by_index.get(int(i))
-            if c is None or c.hash(self._fp) != str(h):
-                raise ValueError(
-                    f"cannot resume: frontier state does not match the "
-                    f"current enumeration (chunk {i}); merged points "
-                    f"cannot be un-merged — rerun in a fresh directory")
-            done[int(i)] = str(h)
-        state = (z["vals"], z["payload"], z["idx"], z["overflow"])
-        return state, done
+        return sweepexec.load_frontier_state(state_path, self._fp,
+                                             capacity, chunks)
 
     def _run_frontier(self, max_chunks: Optional[int], capacity: int,
                       resume: bool) -> RunStats:

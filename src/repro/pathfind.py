@@ -220,7 +220,17 @@ def _parser() -> argparse.ArgumentParser:
     sw.add_argument("--chunk-size", type=int, default=32,
                     help="design points per chunk (checkpoint granularity)")
     sw.add_argument("--workers", type=int, default=None,
-                    help="parallel chunk workers (thread/process backends)")
+                    help="parallel chunk workers: on the pipeline/auto "
+                         "backend this spawns N `sweep-worker` processes "
+                         "over --out DIR (the distributed sweep fabric; "
+                         "0 = initialize the directory and wait for an "
+                         "external fleet); on thread/process backends it "
+                         "is the pool size")
+    sw.add_argument("--lease-ttl", type=float, default=None,
+                    help="fabric chunk-lease TTL in seconds (default 30; "
+                         "workers heartbeat at ttl/3, expired leases are "
+                         "reclaimed — set comfortably above one "
+                         "superbatch's evaluation time)")
     sw.add_argument("--backend", default="auto",
                     choices=["auto", "pipeline", "serial", "thread",
                              "process", "device"],
@@ -249,6 +259,33 @@ def _parser() -> argparse.ArgumentParser:
                     help="do not persist XLA executables under "
                          "OUT/xla_cache (enabled by default with --out "
                          "so cold starts and resumes skip recompiles)")
+
+    wk = sub.add_parser(
+        "sweep-worker",
+        help="join a fabric sweep directory as a lease-claiming worker")
+    wk.add_argument("--dir", required=True,
+                    help="fabric sweep directory (initialized by `sweep "
+                         "--workers N --out DIR`); mode and spec are read "
+                         "from the directory, so a fleet cannot disagree")
+    wk.add_argument("--id", default=None,
+                    help="worker id (default: unique per process "
+                         "incarnation — keep the default unless you know "
+                         "why)")
+    wk.add_argument("--ttl", type=float, default=None,
+                    help="lease TTL seconds (default 30)")
+    wk.add_argument("--poll", type=float, default=None,
+                    help="idle/coordination poll interval seconds "
+                         "(default 0.5)")
+    wk.add_argument("--claim-batch", type=int, default=None,
+                    help="chunks to lease per claim round (default: one "
+                         "superbatch's worth)")
+    wk.add_argument("--superbatch", type=int, default=None,
+                    help="design points per device dispatch (default 256)")
+    wk.add_argument("--eval-delay", type=float, default=0.0,
+                    help="artificial per-chunk device latency in seconds "
+                         "(fan-out benchmarks / fault tests)")
+    wk.add_argument("--max-chunks", type=int, default=None,
+                    help="exit after committing N chunks (testing)")
 
     pl = sub.add_parser("plan", help="runtime sharding plan for one point")
     pl.add_argument("--arch", required=True)
@@ -385,6 +422,7 @@ def _cmd_sweep(args) -> int:
                       or args.scenario_param
                       or args.frontier_only or args.superbatch is not None
                       or args.frontier_cap is not None
+                      or args.lease_ttl is not None
                       or (args.arch and "all" in args.arch))
     if use_runner:
         return _cmd_sweep_runner(args)
@@ -489,6 +527,15 @@ def _cmd_sweep_runner(args) -> int:
             or None)
         runner = sweeprunner.SweepRunner(spec, out_dir=args.out, **kwargs)
 
+    # --workers on the pipeline backend = the distributed sweep fabric:
+    # spawn N sweep-worker processes over --out and merge their shards
+    if args.workers is not None and runner.backend == "pipeline":
+        return _cmd_sweep_fabric(args, runner.spec)
+    if args.lease_ttl is not None:
+        print("error: --lease-ttl is a fabric knob; combine it with "
+              "--workers N on the pipeline/auto backend", file=sys.stderr)
+        return 2
+
     run_kwargs = dict(resume=args.resume, max_chunks=args.max_chunks,
                       frontier_only=args.frontier_only)
     if args.frontier_cap is not None:
@@ -548,6 +595,91 @@ def _cmd_sweep_runner(args) -> int:
         best = min(feasible, key=lambda r: float(r[objectives[0]]))
         print(f"# best[{objectives[0]}]: {best['key']} -> "
               f"{float(best[objectives[0]]):.4g}", file=sys.stderr)
+    return 0
+
+
+def _cmd_sweep_fabric(args, spec) -> int:
+    """Distributed fabric path of `sweep`: coordinator + N local workers
+    (repro.core.sweepfabric)."""
+    from repro.core import sweepfabric, sweeprunner
+
+    if not args.out:
+        print("error: --workers N on the pipeline backend is the "
+              "distributed sweep fabric; it needs --out DIR (the shared "
+              "coordination directory)", file=sys.stderr)
+        return 2
+    if args.max_chunks is not None:
+        print("error: --max-chunks is incompatible with the fabric (the "
+              "coordinator waits for global completion); use "
+              "`sweep-worker --max-chunks` on an individual worker",
+              file=sys.stderr)
+        return 2
+    coord = sweepfabric.FabricCoordinator(
+        spec, args.out, workers=args.workers,
+        ttl_s=args.lease_ttl or sweepfabric.DEFAULT_TTL_S,
+        frontier_only=args.frontier_only,
+        frontier_capacity=args.frontier_cap,
+        superbatch=args.superbatch)
+    if args.workers == 0:
+        print(f"# fabric: directory initialized; join workers with "
+              f"`python -m repro.pathfind sweep-worker --dir {args.out}`",
+              file=sys.stderr)
+    stats = coord.run()
+    scn = spec.scenario_spec.variants()[0].resolve()
+    records = stats.records or []
+    shown = records
+    objectives = args.pareto or list(scn.objectives)
+    if args.pareto:
+        shown = sweeprunner.pareto_records(records, objectives)
+    csv_text = sweeprunner.to_csv(shown, scn)
+    print(csv_text)
+    if args.csv:
+        with open(args.csv, "w") as fh:
+            fh.write(csv_text + "\n")
+        print(f"# wrote {len(shown)} points to {args.csv}",
+              file=sys.stderr)
+    mode = " frontier-only" if stats.mode == "frontier" else ""
+    print(f"# sweep[{scn.name}]{mode} fabric: {stats.n_points_total} "
+          f"points in {stats.n_chunks_total} chunks across "
+          f"{stats.n_workers} workers; {stats.n_chunks_committed} "
+          f"committed in {stats.elapsed_s:.1f}s", file=sys.stderr)
+    if stats.mode == "frontier":
+        print(f"# frontier: {len(records)} non-dominated points over "
+              f"{'/'.join(scn.objectives)}", file=sys.stderr)
+        if stats.n_frontier_overflowed:
+            print(f"# warning: a worker's device frontier capacity "
+                  f"overflowed ({stats.n_frontier_overflowed} candidates "
+                  f"dropped); raise --frontier-cap", file=sys.stderr)
+    if not stats.complete:
+        print(f"# incomplete: resume with the same command (committed "
+              f"chunks in {stats.out_dir} are never re-evaluated)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def _cmd_sweep_worker(args) -> int:
+    """Lease-claiming fabric worker (repro.core.sweepfabric)."""
+    from repro.core import sweepfabric
+
+    kwargs = {}
+    if args.ttl is not None:
+        kwargs["ttl_s"] = args.ttl
+    if args.poll is not None:
+        kwargs["poll_s"] = args.poll
+    worker = sweepfabric.FabricWorker(
+        args.dir, worker_id=args.id, claim_batch=args.claim_batch,
+        superbatch=args.superbatch, eval_delay_s=args.eval_delay,
+        max_chunks=args.max_chunks, **kwargs)
+    stats = worker.run()
+    print(f"# worker {stats.worker}: committed "
+          f"{stats.n_chunks_committed} chunks ({stats.n_points} points) "
+          f"in {stats.elapsed_s:.1f}s"
+          + (f"; lost {stats.n_lost_leases} lease batch(es)"
+             if stats.n_lost_leases else "")
+          + ("; preempted (SIGTERM) — in-flight work committed"
+             if stats.preempted else ""),
+          file=sys.stderr)
     return 0
 
 
@@ -853,7 +985,8 @@ def _cmd_soe(args) -> int:
 def main(argv=None) -> int:
     args = _parser().parse_args(argv)
     try:
-        return {"sweep": _cmd_sweep, "plan": _cmd_plan,
+        return {"sweep": _cmd_sweep, "sweep-worker": _cmd_sweep_worker,
+                "plan": _cmd_plan,
                 "soe": _cmd_soe, "calibrate": _cmd_calibrate,
                 "validate": _cmd_validate, "size": _cmd_size,
                 "cooptimize": _cmd_cooptimize}[args.cmd](args)

@@ -20,10 +20,17 @@ from typing import Callable, List, Optional
 
 
 class PreemptionHandler:
-    """SIGTERM/SIGINT -> graceful save-and-exit flag (test hook: .trigger())."""
+    """SIGTERM/SIGINT -> graceful save-and-exit flag (test hook: .trigger()).
 
-    def __init__(self, install: bool = True):
+    ``on_preempt`` fires once, on the first preemption notice — fabric
+    workers use it to surface "draining" immediately while the executor
+    finishes committing the in-flight superbatch.
+    """
+
+    def __init__(self, install: bool = True,
+                 on_preempt: Optional[Callable[[], None]] = None):
         self._flag = threading.Event()
+        self._on_preempt = on_preempt
         if install:
             try:
                 signal.signal(signal.SIGTERM, self._on_signal)
@@ -31,10 +38,13 @@ class PreemptionHandler:
                 pass
 
     def _on_signal(self, signum, frame):
-        self._flag.set()
+        self.trigger()
 
     def trigger(self) -> None:
+        first = not self._flag.is_set()
         self._flag.set()
+        if first and self._on_preempt is not None:
+            self._on_preempt()
 
     @property
     def preempted(self) -> bool:

@@ -1,0 +1,149 @@
+"""Shared helpers for the distributed-sweep-fabric test suite.
+
+The fault-injection tests spawn real `pathfind sweep-worker` processes
+(SIGKILL must hit a live process, not a mock), so the helpers here cover
+the process plumbing: launching workers with injection env knobs, polling
+the shared directory for progress, and reading back the per-incarnation
+stats journals the assertions are built on.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def env_for_worker(extra: Optional[Dict[str, str]] = None,
+                   xla_cache: Optional[str] = None) -> Dict[str, str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    if xla_cache:
+        # one compile cache across every worker process in the test run:
+        # only the first worker pays the cold XLA compile
+        env["JAX_COMPILATION_CACHE_DIR"] = xla_cache
+    if extra:
+        env.update(extra)
+    return env
+
+
+def spawn_worker(out_dir: str, *, ttl: float = 60.0, poll: float = 0.2,
+                 claim_batch: int = 1,
+                 env: Optional[Dict[str, str]] = None,
+                 extra_args: Optional[List[str]] = None,
+                 xla_cache: Optional[str] = None) -> subprocess.Popen:
+    cmd = [sys.executable, "-m", "repro.pathfind", "sweep-worker",
+           "--dir", out_dir, "--ttl", str(ttl), "--poll", str(poll),
+           "--claim-batch", str(claim_batch)]
+    if extra_args:
+        cmd += extra_args
+    return subprocess.Popen(cmd, env=env_for_worker(env, xla_cache),
+                            stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+
+
+def wait_for(predicate, timeout_s: float, what: str,
+             poll_s: float = 0.2):
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        if predicate():
+            return
+        time.sleep(poll_s)
+    raise AssertionError(f"timed out after {timeout_s}s waiting for "
+                         f"{what}")
+
+
+def wait_procs(procs: List[subprocess.Popen], timeout_s: float) -> List[int]:
+    """Wait for every worker to exit; SIGKILL + fail on timeout."""
+    deadline = time.time() + timeout_s
+    for pr in procs:
+        left = max(0.5, deadline - time.time())
+        try:
+            pr.wait(timeout=left)
+        except subprocess.TimeoutExpired:
+            for p2 in procs:
+                if p2.poll() is None:
+                    p2.send_signal(signal.SIGKILL)
+            raise AssertionError(
+                f"worker pid {pr.pid} still running after {timeout_s}s")
+    return [pr.returncode for pr in procs]
+
+
+def read_stats(out_dir: str) -> List[Dict]:
+    """Every worker incarnation's stats journal, sorted by worker id."""
+    out = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "workers",
+                                              "stats.*.json"))):
+        with open(path) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def assert_no_committed_chunk_reevaluated(out_dir: str):
+    """THE kill-matrix invariant: once any incarnation committed a chunk
+    (its done-line/checkpoint landed at time T), no incarnation starts
+    evaluating that chunk after T.  Evaluations racing *before* the
+    commit landed are legal (expired-lease races); re-doing finished work
+    is the goodput bug this suite exists to catch."""
+    stats = read_stats(out_dir)
+    commit_t: Dict[int, float] = {}
+    for s in stats:
+        for chunk, t in s.get("committed", []):
+            commit_t[chunk] = min(t, commit_t.get(chunk, float("inf")))
+    for s in stats:
+        for chunk, t in s.get("evaluated", []):
+            if chunk in commit_t:
+                assert t <= commit_t[chunk], (
+                    f"chunk {chunk} evaluated by {s['worker']} at {t} — "
+                    f"{t - commit_t[chunk]:.3f}s AFTER it was already "
+                    f"committed")
+
+
+def assert_records_match(got: List[Dict], want: List[Dict],
+                         rtol: float = 1e-5):
+    """Same point-key set; exact equality except finite floats (rtol) —
+    the established cross-backend parity standard of the pipeline suite.
+    Both sides are canonicalized like the on-disk JSONL format (non-finite
+    floats -> None), since fabric-merged records round-trip through the
+    shard journals while in-process runner records never leave memory."""
+    import numpy as np
+
+    from repro.core.sweepexec import json_safe
+    got_by = {r["key"]: r for r in map(json_safe, got)}
+    want_by = {r["key"]: r for r in map(json_safe, want)}
+    assert got_by.keys() == want_by.keys(), (
+        f"point-key sets differ: "
+        f"only-got={sorted(got_by.keys() - want_by.keys())} "
+        f"only-want={sorted(want_by.keys() - got_by.keys())}")
+    for k, w in want_by.items():
+        g = got_by[k]
+        assert g.keys() == w.keys(), k
+        for f, wv in w.items():
+            gv = g[f]
+            if isinstance(wv, float) and np.isfinite(wv):
+                np.testing.assert_allclose(gv, wv, rtol=rtol,
+                                           err_msg=f"{k}:{f}")
+            else:
+                assert gv == wv, (k, f, gv, wv)
+
+
+def assert_no_duplicate_point_keys(records: List[Dict]):
+    keys = [r["key"] for r in records]
+    assert len(keys) == len(set(keys)), (
+        f"duplicate point keys in merged output: "
+        f"{sorted(k for k in set(keys) if keys.count(k) > 1)}")
+
+
+def merged_record_lines(out_dir: str) -> List[Dict]:
+    path = os.path.join(out_dir, "results.jsonl")
+    with open(path) as fh:
+        return [json.loads(line) for line in fh if line.strip()]

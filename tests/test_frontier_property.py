@@ -1,0 +1,282 @@
+"""Merge-algebra tests for the cross-worker frontier reduction (ISSUE-7).
+
+`pathfinder.frontier_merge_states` is the coordinator's reduction over
+worker frontier shards: for it to be safe, its live point set must be
+exactly commutative, associative, and idempotent — any merge order over
+any partition of worker states yields the same global frontier, including
+under exact-f32 objective ties and dedupe of points checkpointed twice.
+The bounded device-side `frontier_merge` cannot promise that once its
+capacity overflows (dropping a not-yet-needed dominator makes the outcome
+history-dependent), so its contract is pinned separately: order
+independence while capacity suffices, a canonical full-lex kept set plus
+an exact overflow count when it does not.
+
+Deterministic seeded versions always run; `hypothesis` versions (present
+in CI's dev extras) explore the same invariants adversarially.
+"""
+
+import itertools
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import pathfinder
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container without dev extras — CI has it
+    HAVE_HYPOTHESIS = False
+
+N_OBJ, N_PAY = 2, 3
+
+
+def _payload(idx):
+    # payload is a pure function of the point index, as in a real sweep
+    # (the same evaluated point always carries the same metric rows)
+    return [float(idx), float(idx) * 2.0, float(idx) * 0.5]
+
+
+def mk_state(points, cap=None):
+    """(idx, vals) pairs -> a frontier-state tuple, numpy f32/int32."""
+    n = len(points)
+    cap = max(cap or n, n, 1)
+    v = np.full((cap, N_OBJ), np.inf, dtype=np.float32)
+    p = np.zeros((cap, N_PAY), dtype=np.float32)
+    i = np.full((cap,), -1, dtype=np.int32)
+    for k, (idx, vals) in enumerate(points):
+        v[k] = np.asarray(vals, dtype=np.float32)
+        p[k] = np.asarray(_payload(idx), dtype=np.float32)
+        i[k] = idx
+    return v, p, i, np.zeros((), dtype=np.int32)
+
+
+def live_set(state):
+    """Canonical comparison form: {(idx, vals bytes, payload bytes)}."""
+    vals, pay, idx, _ = pathfinder.frontier_unpack(state)
+    return {(int(i), v.astype(np.float32).tobytes(),
+             p.astype(np.float32).tobytes())
+            for i, v, p in zip(idx, vals, pay)}
+
+
+def skyline(points):
+    """Reference nondominated set over (idx, vals) pairs, exact f32."""
+    vs = {i: np.asarray(v, dtype=np.float32) for i, v in points}
+    out = set()
+    for i, v in vs.items():
+        dominated = any(
+            np.all(w <= v) and np.any(w < v)
+            for j, w in vs.items() if j != i)
+        if not dominated:
+            out.add(i)
+    return out
+
+
+def _rand_pool(rng, n=10):
+    """A point pool drawn off a small grid so exact-f32 ties, dominance
+    chains, and incomparable pairs all occur."""
+    return {i: tuple(float(rng.randint(0, 4)) for _ in range(N_OBJ))
+            for i in range(n)}
+
+
+def _rand_states(rng, pool, n_states=3):
+    states = []
+    for _ in range(n_states):
+        members = [i for i in pool if rng.random() < 0.6]
+        pts = [(i, pool[i]) for i in members]
+        states.append(mk_state(pts, cap=rng.randint(len(pts) or 1, 16)))
+    return states
+
+
+M = pathfinder.frontier_merge_states
+
+
+# ------------------------------------------------- seeded, always-run
+@pytest.mark.parametrize("seed", range(8))
+def test_merge_states_commutative(seed):
+    rng = random.Random(seed)
+    a, b = _rand_states(rng, _rand_pool(rng), 2)
+    ab, ba = M(a, b), M(b, a)
+    assert live_set(ab) == live_set(ba)
+    assert int(ab[3]) == int(ba[3])
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_merge_states_associative(seed):
+    rng = random.Random(seed)
+    a, b, c = _rand_states(rng, _rand_pool(rng), 3)
+    assert live_set(M(M(a, b), c)) == live_set(M(a, M(b, c)))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_merge_states_idempotent(seed):
+    """Re-merging a merged state (a resumed coordinator re-reading the
+    same shard) is a live-set no-op."""
+    rng = random.Random(seed)
+    a, b = _rand_states(rng, _rand_pool(rng), 2)
+    s = M(a, b)
+    assert live_set(M(s, s)) == live_set(s)
+    assert live_set(M(s, a)) == live_set(s)     # subset re-merge too
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_merge_states_order_and_partition_invariant(seed):
+    """Any fold order over any permutation of worker shards — including
+    single-point shards — equals the reference skyline of the union."""
+    rng = random.Random(seed)
+    pool = _rand_pool(rng)
+    states = _rand_states(rng, pool, 4)
+    union = set()
+    for s in states:
+        union |= {(int(i),) for i in np.asarray(s[2]) if i >= 0}
+    members = sorted(i for (i,) in union)
+    want = skyline([(i, pool[i]) for i in members])
+    for _ in range(4):
+        shuffled = states[:]
+        rng.shuffle(shuffled)
+        merged = shuffled[0]
+        for s in shuffled[1:]:
+            merged = M(merged, s)
+        assert {i for i, _, _ in live_set(merged)} == want
+
+
+def test_merge_states_exact_f32_ties_are_kept():
+    """Exact ties never dominate each other: both survive any order."""
+    tie = (1.0, 2.0)
+    a = mk_state([(0, tie), (1, (0.5, 3.0))])
+    b = mk_state([(2, tie)])
+    for m in (M(a, b), M(b, a)):
+        assert {i for i, _, _ in live_set(m)} == {0, 1, 2}
+
+
+def test_merge_states_dedupes_by_point_index():
+    """The same point checkpointed by two worker incarnations is ONE
+    point — not a self-dominating duplicate pair."""
+    a = mk_state([(5, (1.0, 1.0))])
+    b = mk_state([(5, (1.0, 1.0)), (6, (2.0, 2.0))])
+    m = M(a, b)
+    assert {i for i, _, _ in live_set(m)} == {5}
+    assert sum(np.asarray(m[2]) == 5) == 1
+
+
+def test_merge_states_grows_past_capacity():
+    """The coordinator merge is unbounded: mutually incomparable points
+    from full-capacity shards ALL survive (no silent truncation)."""
+    a = mk_state([(0, (0.0, 3.0)), (1, (1.0, 2.0))], cap=2)
+    b = mk_state([(2, (2.0, 1.0)), (3, (3.0, 0.0))], cap=2)
+    m = M(a, b)
+    assert {i for i, _, _ in live_set(m)} == {0, 1, 2, 3}
+    assert m[0].shape[0] >= 4 and int(m[3]) == 0
+
+
+def test_merge_states_sums_overflow_flags():
+    """Workers' local overflow counters pass through additively — the
+    global result stays flagged inexact if any shard was."""
+    a = mk_state([(0, (1.0, 1.0))])
+    b = mk_state([(1, (0.5, 2.0))])
+    a = (a[0], a[1], a[2], np.asarray(3, dtype=np.int32))
+    b = (b[0], b[1], b[2], np.asarray(4, dtype=np.int32))
+    assert int(M(a, b)[3]) == 7
+
+
+def test_merge_states_rejects_mismatched_shapes():
+    a = mk_state([(0, (1.0, 2.0))])
+    bad = (np.full((1, 3), 1.0, np.float32), a[1], a[2], a[3])
+    with pytest.raises(ValueError, match="same spec"):
+        M(a, bad)
+
+
+# ------------------------------------------------- bounded device merge
+def _device_fold(batches, capacity):
+    state = pathfinder.frontier_init(capacity, N_OBJ, N_PAY)
+    for pts in batches:
+        vals = np.asarray([v for _, v in pts], dtype=np.float32)
+        pay = np.asarray([_payload(i) for i, _ in pts], dtype=np.float32)
+        idx = np.asarray([i for i, _ in pts], dtype=np.int32)
+        state = pathfinder.frontier_merge(state, vals, pay, idx)
+    return state
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_frontier_merge_order_independent_without_overflow(seed):
+    """While capacity suffices, the bounded streaming merge agrees with
+    the skyline for every batch order (this is what lets per-worker
+    frontier shards be merged at all)."""
+    rng = random.Random(seed)
+    pool = sorted(_rand_pool(rng, n=8).items())
+    want = skyline(pool)
+    for perm in itertools.islice(
+            itertools.permutations(pool), 0, 24, 5):
+        batches = [list(perm[:3]), list(perm[3:5]), list(perm[5:])]
+        state = _device_fold(batches, capacity=16)
+        vals, _, idx, n_over = pathfinder.frontier_unpack(state)
+        assert n_over == 0
+        assert set(idx.tolist()) == want
+
+
+def test_frontier_merge_truncates_in_canonical_full_lex_order():
+    """Under overflow the kept set is the capacity-prefix of the full-lex
+    order (objectives, then index) of the survivors — a canonical
+    function of the surviving set — and overflow counts the drops."""
+    pts = [(0, (0.0, 5.0)), (1, (1.0, 4.0)), (2, (2.0, 3.0)),
+           (3, (3.0, 2.0)), (4, (4.0, 1.0))]      # 5 incomparable points
+    state = _device_fold([pts], capacity=3)
+    vals, _, idx, n_over = pathfinder.frontier_unpack(state)
+    assert n_over == 2
+    assert idx.tolist() == [0, 1, 2]              # lex prefix
+    # same points arriving in reverse order keep the SAME canonical set
+    state2 = _device_fold([list(reversed(pts))], capacity=3)
+    _, _, idx2, n_over2 = pathfinder.frontier_unpack(state2)
+    assert idx2.tolist() == [0, 1, 2] and n_over2 == 2
+
+
+def test_frontier_merge_full_lex_tie_break_by_index():
+    """Exact-f32 ties sort by global point index — slot layout cannot
+    depend on arrival order even among ties."""
+    tie = (1.0, 1.0)
+    state = _device_fold([[(7, tie)], [(3, tie)], [(5, tie)]],
+                         capacity=2)
+    _, _, idx, n_over = pathfinder.frontier_unpack(state)
+    assert idx.tolist() == [3, 5] and n_over == 1
+
+
+# ------------------------------------------------- hypothesis (CI)
+if HAVE_HYPOTHESIS:
+    grid_f32 = st.integers(0, 4).map(float)
+    point = st.tuples(grid_f32, grid_f32)
+    pool_st = st.dictionaries(st.integers(0, 11), point, min_size=1,
+                              max_size=12)
+
+    def _subsets(pool, picks):
+        states = []
+        for mask in picks:
+            pts = [(i, v) for b, (i, v) in zip(mask, sorted(pool.items()))
+                   if b]
+            states.append(mk_state(pts, cap=max(len(pts), 4)))
+        return states
+
+    masks = st.lists(st.booleans(), min_size=12, max_size=12)
+
+    @given(pool=pool_st, m1=masks, m2=masks)
+    @settings(max_examples=60, deadline=None)
+    def test_h_merge_states_commutative(pool, m1, m2):
+        a, b = _subsets(pool, [m1, m2])
+        assert live_set(M(a, b)) == live_set(M(b, a))
+
+    @given(pool=pool_st, m1=masks, m2=masks, m3=masks)
+    @settings(max_examples=60, deadline=None)
+    def test_h_merge_states_associative(pool, m1, m2, m3):
+        a, b, c = _subsets(pool, [m1, m2, m3])
+        assert live_set(M(M(a, b), c)) == live_set(M(a, M(b, c)))
+
+    @given(pool=pool_st, m1=masks, m2=masks)
+    @settings(max_examples=60, deadline=None)
+    def test_h_merge_states_idempotent_and_matches_skyline(pool, m1, m2):
+        a, b = _subsets(pool, [m1, m2])
+        s = M(a, b)
+        assert live_set(M(s, s)) == live_set(s)
+        members = sorted({int(i) for i in np.asarray(a[2]) if i >= 0}
+                         | {int(i) for i in np.asarray(b[2]) if i >= 0})
+        want = skyline([(i, pool[i]) for i in members])
+        assert {i for i, _, _ in live_set(s)} == want
