@@ -148,6 +148,17 @@ def _bench_serving_traffic() -> BenchResult:
             f"frontier_ok={int(r['frontier_ok'])}"), r
 
 
+def _bench_sweep_objectives() -> BenchResult:
+    """Energy/TCO objective axes end-to-end (ISSUE-8 tentpole)."""
+    from benchmarks import sweep_objectives
+    r = sweep_objectives.main(verbose=False)
+    return (f"frontier_ok={int(r['frontier_ok'])};"
+            f"energy_dom={r['n_dominating']}/{r['n_refined']};"
+            f"energy_gain={r['energy_gain']:.2f}x;"
+            f"size_ok={int(r['size_ok'])}"
+            f"@{r['best_replicas']}rep"), r
+
+
 def _bench_calibration() -> BenchResult:
     """Measured GEMM calibration -> strict MRE gain (ISSUE-4 tentpole)."""
     from benchmarks import calibration_gain
@@ -190,6 +201,7 @@ BENCHES: Dict[str, Callable[[], BenchResult]] = {
     "sweep_fabric": _bench_sweep_fabric,
     "cooptimize_refine": _bench_cooptimize,
     "serving_traffic": _bench_serving_traffic,
+    "sweep_objectives": _bench_sweep_objectives,
     "calibration_gain": _bench_calibration,
     "crossflow_query_latency": _bench_crossflow_query,
     "roofline": _bench_roofline,

@@ -1,0 +1,160 @@
+"""First-class objective layer benchmark (ISSUE-8 tentpole).
+
+Runs a tiny traffic-driven serving sweep with energy (J/token) and TCO
+($/token) Pareto axes composed from the `repro.core.objectives`
+registry, then exercises every downstream consumer of the axes:
+
+  * **frontier parity** — the device-resident `--frontier-only`
+    streaming reduction (traced frontier fold over canonical signed
+    objective values) must reach exactly the same surviving set as the
+    host-side Pareto re-filter over full materialization;
+  * **cooptimize** — DVFS/budget refinement seeded from the
+    frontier-only directory (zero re-evaluation) must produce at least
+    one refined point that strictly dominates a sweep frontier point,
+    with a strict improvement on the energy axis — the V^2
+    `dynamic_energy_scale` path through `apply_tech_knobs` is what
+    makes undervolting visible to the descent;
+  * **$/token-capped fleet sizing** — records filtered by a $/token
+    budget feed `traffic.size_fleet`, and every returned replica count
+    is brute-force-verified minimal against the closed-form model
+    (meets the walls at n, fails at n-1).
+
+The operating point (4x4 mesh, qps=0.1) is a known-feasible regime for
+the small configs; the default traffic qps saturates them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict
+
+QPS_SWEEP = 0.1       # per-replica arrival rate swept (feasible on 4x4)
+QPS_TARGET = 1.0      # aggregate rate for the inverse sizing query
+SLO = {"ttft_p99": 1.0e3}     # loose wall: sizing is saturation-driven
+STEPS = 16
+STARTS = 4
+
+
+def main(verbose: bool = True) -> Dict:
+    from repro.core import cooptimize, sweeprunner, traffic
+    from repro.core.sweeprunner import SweepRunner, SweepSpec
+
+    spec = SweepSpec(arches=("qwen1.5-0.5b",), mesh_shapes=((4, 4),),
+                     scenario="serving-traffic",
+                     logic_nodes=("N7", "N5"), hbms=("HBM2E", "HBM3"),
+                     n_tilings=2, chunk_size=4,
+                     scenario_params={"qps": QPS_SWEEP},
+                     objectives=("energy", "cost"))
+    scn = spec.scenario_spec.variants()[0].resolve()
+    assert "energy_j_per_token" in scn.objectives
+    assert "cost_usd_per_token" in scn.objectives
+
+    t0 = time.perf_counter()
+    full = SweepRunner(spec, backend="serial", cache=None).run()
+    sweep_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    front = SweepRunner(spec, backend="pipeline", cache=None).run(
+        frontier_only=True)
+    frontier_s = time.perf_counter() - t0
+
+    # streaming frontier == host-side Pareto re-filter, same keys
+    want = sweeprunner.pareto_records(full.records, scn.objectives)
+    assert want, "reference frontier must be non-empty"
+    assert front.n_frontier_overflowed == 0
+    frontier_ok = (sorted((r["key"], r["cell"]) for r in front.records)
+                   == sorted((r["key"], r["cell"]) for r in want))
+    assert frontier_ok, "frontier-only diverged from the host filter"
+
+    # cooptimize seeded from the frontier records only (what the CLI's
+    # frontier.jsonl fallback feeds it) -- zero re-evaluation of the sweep
+    t0 = time.perf_counter()
+    stats = cooptimize.refine_sweep(
+        (spec, list(front.records)),
+        cooptimize.RefineConfig(top_k=2, candidates_per_seed=2,
+                                steps=STEPS, starts=STARTS))
+    refine_s = time.perf_counter() - t0
+    assert stats.n_refined >= 1, "refinement produced no refined records"
+    assert stats.n_dominating >= 1, (
+        f"no refined point dominates the sweep frontier "
+        f"(frontier {stats.n_frontier}, refined {stats.n_refined})")
+    # the dominance must include a STRICT win on the energy axis
+    energy_gain = 1.0
+    for r in stats.records:
+        rv = scn.objective_values(r)
+        if rv is None:
+            continue
+        for s in stats.frontier:
+            sv = scn.objective_values(s)
+            if sv and cooptimize.dominates(rv, sv):
+                se = float(s["energy_j_per_token"])
+                re_ = float(r["energy_j_per_token"])
+                if re_ < se:
+                    energy_gain = max(energy_gain, se / re_)
+    assert energy_gain > 1.0, \
+        "no dominating refined point strictly improved J/token"
+
+    # ---- inverse sizing under a $/token budget -----------------------
+    sized = [r for r in full.records
+             if r.get("feasible", True) and r.get("slo_ok", True)
+             and math.isfinite(float(r["cost_usd_per_token"]))]
+    assert sized, "no finite-cost feasible records to size"
+    costs = sorted(float(r["cost_usd_per_token"]) for r in sized)
+    cap = costs[(len(costs) - 1) // 2]        # median: keeps >=1 design
+    kept = [r for r in sized if float(r["cost_usd_per_token"]) <= cap]
+    tm = dataclasses.replace(traffic.TrafficModel(), qps=QPS_TARGET)
+    po = traffic.BatchingPolicy()
+    plan = traffic.size_fleet(kept, QPS_TARGET, slo=SLO, traffic=tm,
+                              policy=po)
+    assert plan.best is not None, "no design under the cap is sizeable"
+    # brute-force minimality: walls hold at n replicas, fail at n-1
+    for cand in plan.candidates:
+        rec = next(r for r in kept if r["key"] == cand.key)
+        c1 = traffic._record_consts(rec, tm, po, QPS_TARGET)
+        t_pf = float(rec["prefill_s"])
+        t_d = float(rec["decode_step_s"])
+        ok_n, _ = traffic._meets(
+            t_pf, t_d,
+            dataclasses.replace(c1, qps=QPS_TARGET / cand.replicas), SLO)
+        assert ok_n, cand
+        if cand.replicas > 1:
+            ok_less, _ = traffic._meets(
+                t_pf, t_d,
+                dataclasses.replace(c1,
+                                    qps=QPS_TARGET / (cand.replicas - 1)),
+                SLO)
+            assert not ok_less, cand
+    size_ok = True
+
+    out = {
+        "n_records": len(full.records),
+        "n_frontier": len(want),
+        "frontier_ok": frontier_ok,
+        "n_refined": stats.n_refined,
+        "n_dominating": stats.n_dominating,
+        "energy_gain": energy_gain,
+        "cap_usd_per_token": cap,
+        "n_under_cap": len(kept),
+        "best_key": plan.best.key,
+        "best_replicas": plan.best.replicas,
+        "best_devices": plan.best.devices,
+        "size_ok": size_ok,
+        "sweep_s": sweep_s,
+        "frontier_s": frontier_s,
+        "refine_s": refine_s,
+    }
+    if verbose:
+        print(f"sweep_objectives: {out['n_records']} records -> "
+              f"frontier {out['n_frontier']} "
+              f"(streaming parity {'ok' if frontier_ok else 'FAIL'}); "
+              f"refine: {stats.n_dominating}/{stats.n_refined} dominate, "
+              f"best J/token gain {energy_gain:.2f}x in {refine_s:.1f}s")
+        print(f"  size@{QPS_TARGET}qps under <= {cap:.2e} $/token: "
+              f"{out['best_key']} x{out['best_replicas']} replicas "
+              f"({out['best_devices']} devices), minimality verified")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,27 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def checkpoint_write_s(total_bytes: float, n_devices: float,
+                       gbps_per_device: float) -> float:
+    """Modeled wall-clock of one checkpoint save.
+
+    Leaves are written in parallel across the fleet (each device owns its
+    shard of the logical arrays), so write time is the per-device share
+    over the per-device storage bandwidth.  Feeds the goodput objective
+    (repro.core.objectives) together with `repro.runtime.fault`'s MTBF
+    model.
+    """
+    return float(total_bytes) / max(float(n_devices), 1.0) \
+        / (float(gbps_per_device) * 1e9)
+
+
+def checkpoint_restore_s(total_bytes: float, n_devices: float,
+                         gbps_per_device: float) -> float:
+    """Modeled wall-clock of one restore (parallel read, then re-shard)."""
+    return float(total_bytes) / max(float(n_devices), 1.0) \
+        / (float(gbps_per_device) * 1e9)
+
+
 def _leaf_paths(tree) -> List[str]:
     paths = []
     for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:

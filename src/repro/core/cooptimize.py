@@ -145,14 +145,22 @@ def apply_tech_knobs(arch, tech: TechConfig, voltage, hbm_bw_scale,
     The voltage knob moves the compute operating point along the
     alpha-power-law f(V) curve relative to nominal (`freq_at_voltage`);
     the HBM knobs scale main-memory bandwidth and capacity (a stack-count
-    / generation interpolation).  At the nominal point (Vnom, 1, 1) this
-    is the identity, so a refinement started there reproduces the seed.
+    / generation interpolation).  The embedded tech config's
+    energy-per-flop is rescaled by the V^2 dynamic-energy law, so energy
+    objectives (`pathfinder.hw_coeffs` reads ``arch.tech``) see the DVFS
+    operating point — both in the traced refinement and when re-scoring a
+    realized theta.  At the nominal point (Vnom, 1, 1) this is the
+    identity, so a refinement started there reproduces the seed.
     """
     c = tech.compute
     f_ratio = freq_at_voltage(voltage, c.nominal_voltage, 1.0,
                               c.threshold_voltage)
+    e_scale = dynamic_energy_scale(voltage, c.nominal_voltage)
+    tech_v = dataclasses.replace(tech, compute=dataclasses.replace(
+        c, energy_per_flop=c.energy_per_flop * e_scale))
     return dataclasses.replace(
         arch,
+        tech=tech_v,
         compute_throughput=arch.compute_throughput * f_ratio,
         core_frequency=arch.core_frequency * f_ratio,
         dram_bw=arch.dram_bw * hbm_bw_scale,
@@ -251,7 +259,9 @@ def make_refine_objective(tech: TechConfig, like: Budgets,
     """
     eps = scn.eval_points(dp)
     fold = scn.refine_objectives(dp)
-    norms = [max(float(n), 1e-30) for n in norms]
+    # abs(): canonical objective values are negative for max-direction
+    # objectives (goodput) — the norm must stay a positive magnitude
+    norms = [max(abs(float(n)), 1e-30) for n in norms]
 
     def f(theta):
         w = theta[:BUDGET_DIM]
@@ -262,10 +272,10 @@ def make_refine_objective(tech: TechConfig, like: Budgets,
         if profile is not None:
             from repro.calibrate import profiles as profiles_lib
             arch = profiles_lib.apply_profile(arch, profile)
-        totals = [simulate.predict(arch, ep.graph, ep.strategy,
-                                   system=ep.system, cfg=ppe,
-                                   pod_bw=ep.pod_bw).total_s for ep in eps]
-        objs = fold(totals, arch.dram_capacity)
+        bds = [simulate.predict(arch, ep.graph, ep.strategy,
+                                system=ep.system, cfg=ppe,
+                                pod_bw=ep.pod_bw) for ep in eps]
+        objs = fold(bds, pathfinder.hw_ctx(arch))
         scalar = sum(o / n for o, n in zip(objs, norms))
         pen = power_excess(w, tech, v, s_bw, s_cap)
         return scalar * (1.0 + cfg.power_penalty * pen)
@@ -402,10 +412,14 @@ def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
 
 
 def _candidate_rank(scn: scenarios.Scenario, seed_vals):
-    """Sort key: objectives normalized by the seed's values, summed."""
+    """Sort key: objectives normalized by the seed's values, summed.
+
+    Values are canonical (max-direction objectives already negated), so
+    smaller is uniformly better; the seed norm is an absolute magnitude.
+    """
     def key(rec):
         vs = scn.objective_values(rec)
-        return sum(v / max(s, 1e-30) for v, s in zip(vs, seed_vals))
+        return sum(v / max(abs(s), 1e-30) for v, s in zip(vs, seed_vals))
     return key
 
 

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core import age as age_lib
 from repro.core import simulate
+from repro.core import techlib as techlib_lib
 from repro.core.age import Budgets, MicroArch
 from repro.core.graph import ComputeGraph
 from repro.core.parallelism import Strategy
@@ -70,8 +71,53 @@ HW_FIELDS: Tuple[str, ...] = (
     "dram_capacity", "dram_bw",
     "net_intra_bw", "net_inter_bw",
     "net_intra_latency", "net_inter_latency",
+    # energy/cost coefficients for the objective layer
+    # (repro.core.objectives).  Appended AFTER the performance leaves so
+    # `unpack_hw`'s positional reads — and every persisted payload that
+    # slices the first 13 columns — stay valid.
+    "energy_per_flop", "dram_energy_per_byte", "net_energy_per_byte",
+    "static_power_w", "device_cost_usd",
 )
 HW_DIM = len(HW_FIELDS)
+
+# columns of the energy/cost coefficient block (ctx keys for objectives)
+HW_COEFF_FIELDS: Tuple[str, ...] = HW_FIELDS[13:]
+
+
+def hw_coeffs(arch: MicroArch) -> Dict[str, object]:
+    """Energy/cost coefficients of one hardware point, keyed per HW_FIELDS.
+
+    The single definition shared by `pack_hw` (host floats into the
+    struct-of-arrays matrix) and cooptimize's traced refine ctx (jnp
+    tracers when the DVFS knobs ride through `arch.tech`): per-flop and
+    per-byte dynamic energies, aggregate static power, and device capex
+    from the per-tech cost table.  Plain arithmetic — traceable.
+    """
+    t = arch.tech
+    return {
+        "energy_per_flop": t.compute.energy_per_flop,
+        "dram_energy_per_byte": t.dram.dynamic_energy_per_bit * 8.0,
+        "net_energy_per_byte": t.net_inter.nominal_energy_per_bit * 8.0,
+        "static_power_w": techlib_lib.static_power_w(
+            t, arch.dram_capacity, arch.compute_throughput),
+        "device_cost_usd": techlib_lib.device_cost_usd(
+            t, arch.dram_capacity),
+    }
+
+
+def hw_ctx(arch: MicroArch) -> Dict[str, object]:
+    """Objective-fold hardware ctx for a (possibly traced) MicroArch.
+
+    The refine-path analogue of reading `pack_hw` columns: the hardware
+    keys of the `repro.core.objectives` ctx contract, live-valued so
+    cooptimize differentiates energy/cost through the DVFS knobs.
+    """
+    ctx = hw_coeffs(arch)
+    ctx["compute_throughput"] = arch.compute_throughput
+    ctx["dram_bw"] = arch.dram_bw
+    ctx["net_inter_bw"] = arch.net_inter_bw
+    ctx["dram_capacity"] = arch.dram_capacity
+    return ctx
 
 
 def pack_hw(arch: MicroArch) -> np.ndarray:
@@ -80,6 +126,7 @@ def pack_hw(arch: MicroArch) -> np.ndarray:
     Host-side (NumPy): packing thousands of points must not pay per-leaf
     JAX dispatch; the batch crosses into JAX once, already stacked.
     """
+    coeffs = hw_coeffs(arch)
     return np.asarray([
         float(arch.compute_throughput),
         float(arch.mem_capacity[0]),
@@ -94,7 +141,7 @@ def pack_hw(arch: MicroArch) -> np.ndarray:
         float(arch.net_inter_bw),
         float(arch.net_intra_latency),
         float(arch.net_inter_latency),
-    ], dtype=np.float32)
+    ] + [float(coeffs[k]) for k in HW_COEFF_FIELDS], dtype=np.float32)
 
 
 def unpack_hw(template: MicroArch, v) -> MicroArch:

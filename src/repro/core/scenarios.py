@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, SHAPE_CELLS, get_config
 from repro.core import lmgraph, simulate, traffic
+from repro.core import objectives as objectives_lib
 from repro.core.age import MicroArch
 from repro.core.graph import ComputeGraph
 from repro.core.parallelism import Strategy
@@ -186,11 +187,220 @@ class Scenario:
     description: str = ""
     # record fields holding metrics (after the shared label fields)
     fields: Tuple[str, ...] = ()
-    # record fields a Pareto frontier minimizes
+    # record fields a Pareto frontier optimizes (canonically minimized;
+    # max-direction registry objectives are sign-flipped by
+    # `objective_values` / the frontier folds — see repro.core.objectives)
     objectives: Tuple[str, ...] = ()
     # the continuous subset of `objectives` that `refine_objectives` folds
     # (discrete objectives like device count are fixed within a refinement)
     refine_objective_fields: Tuple[str, ...] = ()
+    # which per-unit ctx the objective registry folds read: "step"
+    # (training iterations) or "token" (serving) — picks the alias family
+    # `--objectives energy,cost,goodput` resolves through
+    objective_kind: str = "step"
+    # set by `with_objectives`: composed registry objectives + their params
+    _custom: bool = False
+    extra_objectives: Tuple = ()
+    obj_params: Optional[Dict[str, float]] = None
+    _obj_signs: Tuple[float, ...] = ()
+
+    # hardware ctx keys the objective folds read (all are HW_FIELDS, so
+    # every fold variant — scalar record, vectorized metrics, traced
+    # frontier — reads them from the same packed columns)
+    _CTX_HW_KEYS: Tuple[str, ...] = (
+        "compute_throughput", "dram_bw", "net_inter_bw", "dram_capacity",
+        "energy_per_flop", "dram_energy_per_byte", "net_energy_per_byte",
+        "static_power_w", "device_cost_usd")
+
+    # ------------------------------------------------ objective layer
+    def with_objectives(self, names: Optional[Sequence[str]] = None,
+                        params: Optional[Mapping[str, float]] = None
+                        ) -> "Scenario":
+        """Compose registry objectives onto a copy of this scenario.
+
+        ``names`` (aliases like "energy"/"cost"/"goodput", canonical
+        registry names, or this scenario's own base objective fields)
+        REPLACE the objective tuple; registry objectives among them (plus
+        their deps) are appended to ``fields`` and computed by every fold
+        variant.  With ``names=None`` the base objectives stand and only
+        the objective model params change.  Returns ``self`` untouched
+        when nothing changes — the default scenarios stay the shared
+        singletons with byte-identical PR7 behavior.
+        """
+        import copy
+        base_objectives = self.objectives
+        resolved = objectives_lib.resolve_names(
+            names, self.objective_kind, base_objectives) \
+            if names else base_objectives
+        merged = {**objectives_lib.PARAM_DEFAULTS, **dict(params or {})}
+        if resolved == base_objectives and not params:
+            return self
+        scn = copy.copy(self)
+        scn.objectives = resolved
+        scn.obj_params = merged
+        scn.extra_objectives = objectives_lib.computation_order(resolved)
+        scn.fields = self.fields + tuple(
+            o.name for o in scn.extra_objectives
+            if o.name not in self.fields)
+        refine = []
+        for n in resolved:
+            o = objectives_lib.REGISTRY.get(n)
+            if o is not None:
+                if o.continuous:
+                    refine.append(n)
+            elif n in type(self).refine_objective_fields:
+                refine.append(n)
+        scn.refine_objective_fields = tuple(refine)
+        scn._obj_signs = objectives_lib.canonical_signs(resolved)
+        scn._custom = (resolved != base_objectives
+                       or bool(scn.extra_objectives))
+        return scn
+
+    def _objective_consts(self, cfg: ArchConfig,
+                          strategy: Strategy) -> Dict[str, float]:
+        """Host-constant ctx entries of one design: the objective model
+        params plus the goodput derate (checkpoint write/restore timings
+        from `repro.checkpoint.manager` over `repro.runtime.fault`'s
+        fleet-MTBF model).  No hardware dependence — computed once per
+        fold closure."""
+        from repro.checkpoint import manager as ckpt_manager
+        from repro.runtime import fault
+        p = dict(self.obj_params or objectives_lib.PARAM_DEFAULTS)
+        devices = float(strategy.devices)
+        # train checkpoints optimizer state (bf16 weights + f32 master +
+        # Adam moments ~ 12 B/param); serving restores bf16 weights only
+        per_param = 12.0 if self.objective_kind == "step" \
+            else float(DTYPE_BYTES)
+        ckpt_bytes = float(cfg.param_count()) * per_param
+        write_s = ckpt_manager.checkpoint_write_s(
+            ckpt_bytes, devices, p["ckpt_write_gbps"])
+        restore_s = ckpt_manager.checkpoint_restore_s(
+            ckpt_bytes, devices, p["ckpt_read_gbps"])
+        mtbf = fault.fleet_mtbf_s(p["device_mtbf_s"], devices)
+        if self.objective_kind == "step":
+            frac = fault.goodput_fraction(write_s, restore_s, mtbf)
+        else:
+            frac = fault.availability(restore_s, mtbf)
+        p.update({"devices": devices, "goodput_fraction": frac,
+                  "ckpt_write_s": write_s, "ckpt_restore_s": restore_s,
+                  "fleet_mtbf_s": mtbf})
+        return p
+
+    def _objective_extras_scalar(self, dp: "DesignPoint",
+                                 units: Dict[str, float]) -> Dict[str, float]:
+        """Registry objective values for one scalar record.
+
+        Hardware inputs are rounded through f32 (`pack_hw` packs f32
+        columns) so this path is bitwise identical to the vectorized
+        metrics fold reading those columns back as f64.
+        """
+        from repro.core import pathfinder
+
+        def r32(x) -> float:
+            return float(np.float32(x))
+
+        ctx: Dict[str, object] = {
+            k: r32(v) for k, v in pathfinder.hw_coeffs(dp.hw).items()}
+        ctx["compute_throughput"] = r32(dp.hw.compute_throughput)
+        ctx["dram_bw"] = r32(dp.hw.dram_bw)
+        ctx["net_inter_bw"] = r32(dp.hw.net_inter_bw)
+        ctx["dram_capacity"] = r32(dp.hw.dram_capacity)
+        ctx.update(self._objective_consts(dp.cfg, dp.strategy))
+        ctx.update(units)
+        vals = objectives_lib.evaluate(np, self.extra_objectives, ctx)
+        return {k: float(v) for k, v in vals.items()}
+
+    def _wrap_metrics_fold(self, base_fold, cfg: ArchConfig,
+                           strategy: Strategy, units_fn):
+        """Extend a legacy vectorized metrics fold with the composed
+        registry objectives (no-op passthrough on default scenarios).
+
+        ``units_fn(rows, recs) -> {unit: (B,) f64}`` supplies the
+        scenario-kind unit values; hardware coefficients come from the
+        packed f32 hw columns, mirroring `_objective_extras_scalar`
+        op-for-op.
+        """
+        if not self._custom or base_fold is None:
+            return base_fold
+        from repro.core import pathfinder
+        idx = {k: pathfinder.HW_FIELDS.index(k)
+               for k in self._CTX_HW_KEYS}
+        consts = self._objective_consts(cfg, strategy)
+        extras = self.extra_objectives
+
+        def fold(rows, hw):
+            recs = base_fold(rows, hw)
+            ctx: Dict[str, object] = {
+                k: hw[:, i].astype(np.float64) for k, i in idx.items()}
+            ctx.update(consts)
+            with np.errstate(divide="ignore", invalid="ignore",
+                             over="ignore"):
+                ctx.update(units_fn(rows, recs))
+                vals = objectives_lib.evaluate(np, extras, ctx)
+            cols = {k: np.asarray(v) for k, v in vals.items()}
+            for i, r in enumerate(recs):
+                for k, col in cols.items():
+                    r[k] = float(col[i])
+            return recs
+        return fold
+
+    def _custom_frontier_fold(self, cfg: ArchConfig, strategy: Strategy,
+                              values_fn):
+        """Traced frontier fold over a composed objective set.
+
+        ``values_fn(jnp, rows, ctx) -> (values, ok)`` supplies the base
+        objective/unit values from one design's metric rows (ctx already
+        holds the hardware coefficients + per-design consts); composed
+        registry objectives are evaluated on top, canonical signs applied
+        (max-direction negated), and everything outside the feasible/SLO
+        region masks to +inf so the device Pareto merge excludes it.
+        """
+        import jax.numpy as jnp
+        from repro.core import pathfinder
+        idx = {k: pathfinder.HW_FIELDS.index(k)
+               for k in self._CTX_HW_KEYS}
+        consts = self._objective_consts(cfg, strategy)
+        extras = self.extra_objectives
+        names = self.objectives
+        signs = objectives_lib.canonical_signs(names)
+
+        def fold(rows, hw_vec):
+            ctx: Dict[str, object] = {k: hw_vec[i] for k, i in idx.items()}
+            ctx.update(consts)
+            values, ok = values_fn(jnp, rows, ctx)
+            ctx.update(values)
+            objectives_lib.evaluate(jnp, extras, ctx)
+            outs = [jnp.where(ok, s * jnp.asarray(ctx[n],
+                                                  dtype=jnp.float32),
+                              jnp.inf)
+                    for s, n in zip(signs, names)]
+            return jnp.stack(outs)
+        return fold
+
+    def _custom_refine_fold(self, dp: "DesignPoint", units_fn):
+        """Differentiable refine fold over a composed objective set.
+
+        ``units_fn(jnp, bds, ctx) -> values`` maps the per-eval-point
+        `simulate.TimeBreakdown`s (soft-derated, barrier-penalized —
+        gradients must point back into the feasible region) to base
+        objective/unit values; registry objectives evaluate on top of the
+        LIVE hardware ctx (`pathfinder.hw_ctx`), so DVFS voltage reaches
+        energy through `techlib.dynamic_energy_scale`.  Returns canonical
+        (sign-applied) scalars ordered like `refine_objective_fields`.
+        """
+        import jax.numpy as jnp
+        consts = self._objective_consts(dp.cfg, dp.strategy)
+        extras = self.extra_objectives
+        fields = self.refine_objective_fields
+        signs = objectives_lib.canonical_signs(fields)
+
+        def fold(bds, ctx):
+            vals: Dict[str, object] = dict(ctx)
+            vals.update(consts)
+            vals.update(units_fn(jnp, bds, vals))
+            objectives_lib.evaluate(jnp, extras, vals)
+            return tuple(s * vals[f] for s, f in zip(signs, fields))
+        return fold
 
     def cells(self, cfg: ArchConfig) -> Tuple[str, ...]:
         """Shape cells this scenario needs for one architecture."""
@@ -224,18 +434,26 @@ class Scenario:
             vs = tuple(float(rec[k]) for k in self.objectives)
         except (KeyError, TypeError, ValueError):
             return None
-        return vs if all(np.isfinite(v) for v in vs) else None
+        if not all(np.isfinite(v) for v in vs):
+            return None
+        signs = self._obj_signs
+        if signs and any(s != 1.0 for s in signs):
+            vs = tuple(s * v for s, v in zip(signs, vs))
+        return vs
 
     def refine_objectives(self, dp: DesignPoint):
         """Differentiable objective fold for cross-stack refinement
         (`repro.core.cooptimize`).
 
-        Returns ``fold(totals, dram_capacity) -> tuple`` mapping the
-        per-eval-point predicted totals (one jnp scalar per
-        `eval_points` entry) and the candidate's (theta-dependent)
-        main-memory capacity to this scenario's *continuous* objective
-        scalars, ordered like `objectives` (discrete objectives such as
-        device count are omitted — they are fixed within one refinement).
+        Returns ``fold(bds, ctx) -> tuple`` mapping the per-eval-point
+        predicted `simulate.TimeBreakdown`s (one per `eval_points` entry)
+        and the candidate's traced hardware ctx (`pathfinder.hw_ctx` —
+        capacity, bandwidths, energy coefficients, all theta-dependent)
+        to this scenario's *continuous* objective scalars, ordered like
+        `refine_objective_fields` (discrete objectives such as device
+        count are omitted — they are fixed within one refinement).
+        Max-direction objectives are sign-flipped: every scalar is
+        canonically minimized.
         """
         raise NotImplementedError
 
@@ -285,6 +503,10 @@ class TrainScenario(Scenario):
         self.cell = cell
         self.name = name
 
+    def _step_tokens(self) -> float:
+        cell = SHAPE_CELLS[self.cell]
+        return float(cell.global_batch) * cell.seq_len
+
     def cells(self, cfg) -> Tuple[str, ...]:
         return (self.cell,)
 
@@ -300,18 +522,52 @@ class TrainScenario(Scenario):
 
     def record(self, dp: DesignPoint, rows: np.ndarray) -> Dict:
         row = rows[0]
-        return {**dp.label_fields(),
-                "time_s": float(row[0]), "compute_s": float(row[1]),
-                "comm_s": float(row[2]), "exposed_comm_s": float(row[3])}
+        rec = {**dp.label_fields(),
+               "time_s": float(row[0]), "compute_s": float(row[1]),
+               "comm_s": float(row[2]), "exposed_comm_s": float(row[3])}
+        if not self._custom:
+            return rec
+        tokens = self._step_tokens()
+        t = float(row[0])
+        with np.errstate(divide="ignore", invalid="ignore"):
+            base = float(np.float64(tokens) / np.float64(t))
+        rec.update(self._objective_extras_scalar(dp, {
+            "step_time_s": t, "step_compute_s": float(row[1]),
+            "step_comm_s": float(row[2]), "base_tokens_per_s": base}))
+        return rec
 
     def refine_objectives(self, dp: DesignPoint):
-        def fold(totals, dram_capacity):
-            return (totals[0],)                    # step time; devices fixed
+        if self._custom:
+            tokens = self._step_tokens()
+            devices = float(dp.strategy.devices)
+
+            def units(jnp, bds, vals):
+                t = bds[0].total_s
+                return {"time_s": t, "devices": devices,
+                        "step_time_s": t,
+                        "step_compute_s": bds[0].compute_s,
+                        "step_comm_s": bds[0].comm_s,
+                        "base_tokens_per_s": tokens / t}
+            return self._custom_refine_fold(dp, units)
+
+        def fold(bds, ctx):
+            return (bds[0].total_s,)               # step time; devices fixed
         return fold
 
     def frontier_fold(self, cfg: ArchConfig, strategy: Strategy):
         import jax.numpy as jnp
         devices = float(strategy.devices)
+        if self._custom:
+            tokens = self._step_tokens()
+
+            def values_fn(jnp, rows, ctx):
+                t = rows[0, 0]
+                return ({"time_s": t, "devices": devices,
+                         "step_time_s": t, "step_compute_s": rows[0, 1],
+                         "step_comm_s": rows[0, 2],
+                         "base_tokens_per_s": tokens / t},
+                        jnp.isfinite(t))
+            return self._custom_frontier_fold(cfg, strategy, values_fn)
 
         def fold(rows, hw_vec):
             return jnp.stack([rows[0, 0], jnp.float32(devices)])
@@ -322,7 +578,17 @@ class TrainScenario(Scenario):
             return [{"time_s": r[0], "compute_s": r[1], "comm_s": r[2],
                      "exposed_comm_s": r[3]}
                     for r in rows[:, 0, :4].tolist()]
-        return fold
+        if not self._custom:
+            return fold
+        tokens = self._step_tokens()
+
+        def units(rows, recs):
+            t = rows[:, 0, 0].astype(np.float64)
+            return {"step_time_s": t,
+                    "step_compute_s": rows[:, 0, 1].astype(np.float64),
+                    "step_comm_s": rows[:, 0, 2].astype(np.float64),
+                    "base_tokens_per_s": tokens / t}
+        return self._wrap_metrics_fold(fold, cfg, strategy, units)
 
 
 class ServingScenario(Scenario):
@@ -336,6 +602,7 @@ class ServingScenario(Scenario):
               "feasible", "slo_ok")
     objectives = ("ttft_s", "cost_device_s_per_token")
     refine_objective_fields = ("ttft_s", "cost_device_s_per_token")
+    objective_kind = "token"
 
     def __init__(self, prefill_cell: str = "prefill_32k",
                  decode_cell: str = "decode_32k",
@@ -379,16 +646,25 @@ class ServingScenario(Scenario):
             prefill, decode, batch=cell.global_batch, devices=st.devices,
             weight_bytes_per_device=w_dev, kv_bytes_per_device=kv_dev,
             dram_capacity=float(dp.hw.dram_capacity), slo_s=self.slo_s)
-        return {**dp.label_fields(),
-                "ttft_s": bd.ttft_s, "tpot_s": bd.tpot_s,
-                "tokens_per_s": bd.tokens_per_s,
-                "tokens_per_s_per_device": bd.tokens_per_s_per_device,
-                "cost_device_s_per_token": bd.cost_device_s_per_token,
-                "kv_bytes_per_device": bd.kv_bytes_per_device,
-                "weight_bytes_per_device": bd.weight_bytes_per_device,
-                "hbm_occupancy": bd.hbm_occupancy,
-                "kv_derate": bd.kv_derate,
-                "feasible": bd.feasible, "slo_ok": bd.slo_ok}
+        rec = {**dp.label_fields(),
+               "ttft_s": bd.ttft_s, "tpot_s": bd.tpot_s,
+               "tokens_per_s": bd.tokens_per_s,
+               "tokens_per_s_per_device": bd.tokens_per_s_per_device,
+               "cost_device_s_per_token": bd.cost_device_s_per_token,
+               "kv_bytes_per_device": bd.kv_bytes_per_device,
+               "weight_bytes_per_device": bd.weight_bytes_per_device,
+               "hbm_occupancy": bd.hbm_occupancy,
+               "kv_derate": bd.kv_derate,
+               "feasible": bd.feasible, "slo_ok": bd.slo_ok}
+        if not self._custom:
+            return rec
+        batch = float(max(cell.global_batch, 1))
+        rec.update(self._objective_extras_scalar(dp, {
+            "token_compute_s": float(rows[1][1]) / batch,
+            "token_comm_s": float(rows[1][2]) / batch,
+            "device_s_per_token": float(bd.cost_device_s_per_token),
+            "base_tokens_per_s": float(bd.tokens_per_s)}))
+        return rec
 
     def refine_objectives(self, dp: DesignPoint):
         from repro.core import roofline
@@ -397,11 +673,26 @@ class ServingScenario(Scenario):
         w_dev, kv_dev = serving_bytes_per_device(dp.cfg, dp.strategy, cell)
         devices = dp.strategy.devices
         batch = max(cell.global_batch, 1)
+        if self._custom:
+            def units(jnp, bds, vals):
+                occ = (w_dev + kv_dev) \
+                    / jnp.maximum(vals["dram_capacity"], 1.0)
+                tpot = bds[1].total_s \
+                    * roofline.capacity_pressure_derate_soft(occ)
+                cost = devices * tpot / batch
+                return {"ttft_s": bds[0].total_s,
+                        "cost_device_s_per_token": cost,
+                        "token_compute_s": bds[1].compute_s / batch,
+                        "token_comm_s": bds[1].comm_s / batch,
+                        "device_s_per_token": cost,
+                        "base_tokens_per_s": batch / tpot}
+            return self._custom_refine_fold(dp, units)
 
-        def fold(totals, dram_capacity):
-            occ = (w_dev + kv_dev) / jnp.maximum(dram_capacity, 1.0)
-            tpot = totals[1] * roofline.capacity_pressure_derate_soft(occ)
-            ttft = totals[0]
+        def fold(bds, ctx):
+            occ = (w_dev + kv_dev) / jnp.maximum(ctx["dram_capacity"], 1.0)
+            tpot = bds[1].total_s \
+                * roofline.capacity_pressure_derate_soft(occ)
+            ttft = bds[0].total_s
             return (ttft, devices * tpot / batch)   # (ttft_s, cost/token)
         return fold
 
@@ -414,6 +705,24 @@ class ServingScenario(Scenario):
         batch = float(cell.global_batch)
         knee = roofline.CAPACITY_PRESSURE_KNEE
         cap_i = pathfinder.HW_FIELDS.index("dram_capacity")
+        if self._custom:
+            def values_fn(jnp, rows, ctx):
+                occ = (w_dev + kv_dev) \
+                    / jnp.maximum(ctx["dram_capacity"], 1.0)
+                over = jnp.maximum(occ - knee, 0.0) / max(1.0 - knee, 1e-9)
+                derate = jnp.where(occ >= 1.0, jnp.inf,
+                                   1.0 + 0.5 * over * over)
+                ttft = rows[0, 0]
+                tpot = rows[1, 0] * derate
+                cost = devices * tpot / max(batch, 1.0)
+                ok = jnp.isfinite(tpot) & jnp.isfinite(ttft)
+                return ({"ttft_s": ttft, "tpot_s": tpot,
+                         "cost_device_s_per_token": cost,
+                         "token_compute_s": rows[1, 1] / max(batch, 1.0),
+                         "token_comm_s": rows[1, 2] / max(batch, 1.0),
+                         "device_s_per_token": cost,
+                         "base_tokens_per_s": batch / tpot}, ok)
+            return self._custom_frontier_fold(cfg, strategy, values_fn)
 
         def fold(rows, hw_vec):
             # the exact (hard-walled) capacity derate of `record` /
@@ -470,7 +779,21 @@ class ServingScenario(Scenario):
                     ttft.tolist(), tpot.tolist(), tokens.tolist(),
                     per_dev.tolist(), cost.tolist(), occ.tolist(),
                     derate.tolist(), feasible.tolist(), slo)]
-        return fold
+        if not self._custom:
+            return fold
+        batch_f = float(max(batch, 1))
+
+        def units(rows, recs):
+            return {
+                "token_compute_s": rows[:, 1, 1].astype(np.float64)
+                / batch_f,
+                "token_comm_s": rows[:, 1, 2].astype(np.float64) / batch_f,
+                "device_s_per_token": np.array(
+                    [r["cost_device_s_per_token"] for r in recs],
+                    dtype=np.float64),
+                "base_tokens_per_s": np.array(
+                    [r["tokens_per_s"] for r in recs], dtype=np.float64)}
+        return self._wrap_metrics_fold(fold, cfg, strategy, units)
 
 
 class ServingTrafficScenario(ServingScenario):
@@ -523,6 +846,19 @@ class ServingTrafficScenario(ServingScenario):
             prefill_tokens=float(pc.global_batch) * pc.seq_len,
             devices=devices)
 
+    def _amortize_consts(self) -> Tuple[float, float]:
+        """(decode slots, prefill-steps-per-output-token) for the energy
+        attribution: decode-step compute/comm is shared by the batch
+        slots; prefill work amortizes as (prompt_mean / prefill_tokens)
+        prefill-graph executions per request over its output_mean
+        generated tokens."""
+        pc = SHAPE_CELLS[self.prefill_cell]
+        dc = SHAPE_CELLS[self.decode_cell]
+        prefill_tokens = max(float(pc.global_batch) * pc.seq_len, 1.0)
+        k = (float(self.traffic.prompt_mean) / prefill_tokens) \
+            / max(float(self.traffic.output_mean), 1.0)
+        return float(max(dc.global_batch, 1)), k
+
     def objective_values(self, rec: Dict) -> Optional[Tuple[float, ...]]:
         if rec.get("slo_ok") is False:           # percentile walls are
             return None                          # feasibility walls here
@@ -548,17 +884,28 @@ class ServingTrafficScenario(ServingScenario):
             np, np.float64(t_pf), np.float64(t_d), c)
         ok = traffic.slo_ok(stats, self.slo)
         f = lambda k: float(np.asarray(stats[k]))  # noqa: E731
-        return {**dp.label_fields(),
-                **{k: f(k) for k in
-                   ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
-                    "util", "qps_max", "tokens_per_s",
-                    "tokens_per_s_per_device", "cost_device_s_per_token")},
-                "prefill_s": t_pf, "decode_step_s": t_d,
-                "kv_bytes_per_device": kv_f,
-                "weight_bytes_per_device": w_f,
-                "hbm_occupancy": occ, "kv_derate": derate,
-                "feasible": bool(np.asarray(stats["feasible"])),
-                "slo_ok": bool(np.asarray(ok))}
+        rec = {**dp.label_fields(),
+               **{k: f(k) for k in
+                  ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+                   "util", "qps_max", "tokens_per_s",
+                   "tokens_per_s_per_device", "cost_device_s_per_token")},
+               "prefill_s": t_pf, "decode_step_s": t_d,
+               "kv_bytes_per_device": kv_f,
+               "weight_bytes_per_device": w_f,
+               "hbm_occupancy": occ, "kv_derate": derate,
+               "feasible": bool(np.asarray(stats["feasible"])),
+               "slo_ok": bool(np.asarray(ok))}
+        if not self._custom:
+            return rec
+        slots_f, k_pf = self._amortize_consts()
+        rec.update(self._objective_extras_scalar(dp, {
+            "token_compute_s": float(rows[1][1]) / slots_f
+            + float(rows[0][1]) * k_pf,
+            "token_comm_s": float(rows[1][2]) / slots_f
+            + float(rows[0][2]) * k_pf,
+            "device_s_per_token": rec["cost_device_s_per_token"],
+            "base_tokens_per_s": rec["tokens_per_s"]}))
+        return rec
 
     def refine_objectives(self, dp: DesignPoint):
         from repro.core import roofline
@@ -566,12 +913,39 @@ class ServingTrafficScenario(ServingScenario):
         cell = SHAPE_CELLS[self.decode_cell]
         w_dev, kv_dev = serving_bytes_per_device(dp.cfg, dp.strategy, cell)
         c = self._consts(float(dp.strategy.devices))
+        if self._custom:
+            slots_f, k_pf = self._amortize_consts()
 
-        def fold(totals, dram_capacity):
-            occ = (w_dev + kv_dev) / jnp.maximum(dram_capacity, 1.0)
-            t_d = totals[1] * roofline.capacity_pressure_derate_soft(occ)
+            def units(jnp, bds, vals):
+                occ = (w_dev + kv_dev) \
+                    / jnp.maximum(vals["dram_capacity"], 1.0)
+                t_d = bds[1].total_s \
+                    * roofline.capacity_pressure_derate_soft(occ)
+                st = traffic.continuous_batching_stats(
+                    jnp, bds[0].total_s, t_d, c, mask_infeasible=False)
+                wall = jnp.maximum(st["util"] - 1.0, 0.0)
+                barrier = 1.0 + 1e3 * wall * wall
+                # minimized values scale UP with the barrier, the
+                # maximized throughput scales DOWN — descent always
+                # points back inside the feasible region
+                return {"ttft_p99_s": st["ttft_p99_s"] * barrier,
+                        "cost_device_s_per_token":
+                            st["cost_device_s_per_token"] * barrier,
+                        "device_s_per_token":
+                            st["cost_device_s_per_token"] * barrier,
+                        "base_tokens_per_s": st["tokens_per_s"] / barrier,
+                        "token_compute_s": bds[1].compute_s / slots_f
+                        + bds[0].compute_s * k_pf,
+                        "token_comm_s": bds[1].comm_s / slots_f
+                        + bds[0].comm_s * k_pf}
+            return self._custom_refine_fold(dp, units)
+
+        def fold(bds, ctx):
+            occ = (w_dev + kv_dev) / jnp.maximum(ctx["dram_capacity"], 1.0)
+            t_d = bds[1].total_s \
+                * roofline.capacity_pressure_derate_soft(occ)
             st = traffic.continuous_batching_stats(
-                jnp, totals[0], t_d, c, mask_infeasible=False)
+                jnp, bds[0].total_s, t_d, c, mask_infeasible=False)
             # the hard util wall is flat after clamping; a soft barrier
             # keeps descent pointed back inside the feasible region
             wall = jnp.maximum(st["util"] - 1.0, 0.0)
@@ -590,6 +964,34 @@ class ServingTrafficScenario(ServingScenario):
         cap_i = pathfinder.HW_FIELDS.index("dram_capacity")
         c = self._consts(float(strategy.devices))
         slo = self.slo
+        if self._custom:
+            slots_f, k_pf = self._amortize_consts()
+
+            def values_fn(jnp, rows, ctx):
+                occ = (w_f + kv_f) \
+                    / jnp.maximum(ctx["dram_capacity"], 1.0)
+                over = jnp.maximum(occ - knee, 0.0) / max(1.0 - knee, 1e-9)
+                derate = jnp.where(occ >= 1.0, jnp.inf,
+                                   1.0 + 0.5 * over * over)
+                st = traffic.continuous_batching_stats(
+                    jnp, rows[0, 0], rows[1, 0] * derate, c)
+                # slo_ok AND feasible: a masked-infeasible point's
+                # tokens_per_s is 0, which would otherwise survive the
+                # non-finite goodput masking as a finite -0.0 objective
+                ok = jnp.logical_and(
+                    jnp.asarray(traffic.slo_ok(st, slo, xp=jnp)),
+                    jnp.asarray(st["feasible"]))
+                return ({"ttft_p99_s": st["ttft_p99_s"],
+                         "cost_device_s_per_token":
+                             st["cost_device_s_per_token"],
+                         "device_s_per_token":
+                             st["cost_device_s_per_token"],
+                         "base_tokens_per_s": st["tokens_per_s"],
+                         "token_compute_s": rows[1, 1] / slots_f
+                         + rows[0, 1] * k_pf,
+                         "token_comm_s": rows[1, 2] / slots_f
+                         + rows[0, 2] * k_pf}, ok)
+            return self._custom_frontier_fold(cfg, strategy, values_fn)
 
         def fold(rows, hw_vec):
             occ = (w_f + kv_f) / jnp.maximum(hw_vec[cap_i], 1.0)
@@ -638,7 +1040,22 @@ class ServingTrafficScenario(ServingScenario):
                     zip(*cols), t_pf.tolist(), t_d.tolist(), occ.tolist(),
                     derate.tolist(), np.asarray(stats["feasible"]).tolist(),
                     np.asarray(ok).tolist())]
-        return fold
+        if not self._custom:
+            return fold
+        slots_f, k_pf = self._amortize_consts()
+
+        def units(rows, recs):
+            return {
+                "token_compute_s": rows[:, 1, 1].astype(np.float64)
+                / slots_f + rows[:, 0, 1].astype(np.float64) * k_pf,
+                "token_comm_s": rows[:, 1, 2].astype(np.float64)
+                / slots_f + rows[:, 0, 2].astype(np.float64) * k_pf,
+                "device_s_per_token": np.array(
+                    [r["cost_device_s_per_token"] for r in recs],
+                    dtype=np.float64),
+                "base_tokens_per_s": np.array(
+                    [r["tokens_per_s"] for r in recs], dtype=np.float64)}
+        return self._wrap_metrics_fold(fold, cfg, strategy, units)
 
 
 # ---------------------------------------------------------------------------
@@ -696,24 +1113,34 @@ class ScenarioSpec:
     params: Tuple[Tuple[str, object], ...] = ()
     # params keys that came from a sweep axis (encoded into the cell id)
     variant_keys: Tuple[str, ...] = ()
+    # composed Pareto objective set (None = the scenario's defaults —
+    # serialized only when set, so pre-objective specs fingerprint
+    # byte-identically)
+    objectives: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
         object.__setattr__(self, "cells", tuple(self.cells))
         object.__setattr__(self, "params", _canon_params(self.params))
         object.__setattr__(self, "variant_keys",
                            tuple(self.variant_keys))
+        if self.objectives is not None:
+            object.__setattr__(self, "objectives",
+                               tuple(str(o) for o in self.objectives))
 
     # -------------------------------------------------- construction
     @classmethod
     def coerce(cls, obj, cells: Sequence[str] = (),
                slo_s: Optional[float] = None,
-               params: Optional[Mapping] = None) -> "ScenarioSpec":
+               params: Optional[Mapping] = None,
+               objectives: Optional[Sequence[str]] = None
+               ) -> "ScenarioSpec":
         """Normalize a scenario name / dict / spec into a ScenarioSpec."""
         if isinstance(obj, ScenarioSpec):
             return obj
         if isinstance(obj, str):
             return cls(name=obj, cells=tuple(cells), slo_s=slo_s,
-                       params=_canon_params(params))
+                       params=_canon_params(params),
+                       objectives=objectives)
         if isinstance(obj, Mapping):
             return cls.from_dict(obj)
         raise TypeError(f"cannot build a ScenarioSpec from {type(obj)!r}")
@@ -731,14 +1158,18 @@ class ScenarioSpec:
         if self.params:
             d["params"] = {k: (list(v) if isinstance(v, tuple) else v)
                            for k, v in self.params}
+        if self.objectives is not None:
+            d["objectives"] = list(self.objectives)
         return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "ScenarioSpec":
+        objs = d.get("objectives")
         return cls(name=d.get("name", "train"),
                    cells=tuple(d.get("cells", ())),
                    slo_s=d.get("slo_s"),
-                   params=_canon_params(d.get("params")))
+                   params=_canon_params(d.get("params")),
+                   objectives=tuple(objs) if objs is not None else None)
 
     # -------------------------------------------------- axis expansion
     def axes(self) -> Dict[str, Tuple[float, ...]]:
@@ -781,7 +1212,10 @@ class ScenarioSpec:
             raise ValueError(
                 f"scenario {self.name!r} has multi-valued params "
                 f"{sorted(self.axes())}: expand with variants() first")
-        params = self.param_dict
+        # objective model knobs split off FIRST so economic/reliability
+        # constants never reach scenarios that take no workload params
+        obj_params, params = objectives_lib.split_objective_params(
+            self.param_dict)
         if isinstance(base, ServingTrafficScenario):
             pc, dc = base.prefill_cell, base.decode_cell
             if self.cells:
@@ -794,25 +1228,29 @@ class ScenarioSpec:
                 merged["slo_ttft_p99"] = self.slo_s
             merged.update(params)
             variant = {k: merged[k] for k in self.variant_keys}
-            return ServingTrafficScenario(prefill_cell=pc, decode_cell=dc,
-                                          params=merged, name=base.name,
-                                          variant=variant)
-        if params:
+            scn: Scenario = ServingTrafficScenario(
+                prefill_cell=pc, decode_cell=dc, params=merged,
+                name=base.name, variant=variant)
+        elif params:
             raise ValueError(f"scenario {self.name!r} takes no params; "
                              f"got {sorted(params)}")
-        if isinstance(base, TrainScenario) and self.cells:
-            return TrainScenario(cell=self.cells[0], name=base.name)
-        if isinstance(base, ServingScenario) and (self.slo_s is not None
-                                                  or self.cells):
+        elif isinstance(base, TrainScenario) and self.cells:
+            scn = TrainScenario(cell=self.cells[0], name=base.name)
+        elif isinstance(base, ServingScenario) and (self.slo_s is not None
+                                                    or self.cells):
             pc, dc = base.prefill_cell, base.decode_cell
             if self.cells:
                 if len(self.cells) != 2:
                     raise ValueError("serving scenario takes exactly two "
                                      "cells (prefill, decode)")
                 pc, dc = self.cells
-            return ServingScenario(prefill_cell=pc, decode_cell=dc,
-                                   slo_s=self.slo_s, name=base.name)
-        return base
+            scn = ServingScenario(prefill_cell=pc, decode_cell=dc,
+                                  slo_s=self.slo_s, name=base.name)
+        else:
+            scn = base
+        if self.objectives is not None or obj_params:
+            scn = scn.with_objectives(self.objectives, obj_params)
+        return scn
 
 
 def get_scenario(name: str, slo_s: Optional[float] = None,

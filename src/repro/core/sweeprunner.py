@@ -99,6 +99,11 @@ class SweepSpec:
     # entries are sweep axes.  None is dropped from the serialized form so
     # param-less specs fingerprint byte-identically to pre-PR6 checkpoints
     scenario_params: Optional[Dict] = None
+    # composed Pareto objective set (`repro.core.objectives` names /
+    # aliases); None = scenario defaults, dropped from the serialized form
+    # so objective-less specs fingerprint byte-identically to pre-PR8
+    # checkpoints
+    objectives: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
         if isinstance(self.scenario, scenarios.ScenarioSpec):
@@ -113,13 +118,20 @@ class SweepSpec:
                     self, "scenario_params",
                     {k: (list(v) if isinstance(v, tuple) else v)
                      for k, v in ss.params})
+            if ss.objectives is not None:
+                object.__setattr__(self, "objectives",
+                                   tuple(ss.objectives))
+        if self.objectives is not None:
+            object.__setattr__(self, "objectives",
+                               tuple(str(o) for o in self.objectives))
 
     @property
     def scenario_spec(self) -> scenarios.ScenarioSpec:
         """The typed scenario-construction view of this spec."""
         return scenarios.ScenarioSpec(
             name=self.scenario, cells=self.cells, slo_s=self.slo_s,
-            params=self.scenario_params or ())
+            params=self.scenario_params or (),
+            objectives=self.objectives)
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -136,6 +148,10 @@ class SweepSpec:
             d["scenario_params"] = {
                 k: (list(v) if isinstance(v, (list, tuple)) else v)
                 for k, v in sp.items()}
+        if d.get("objectives") is None:   # ditto for pre-PR8 checkpoints
+            d.pop("objectives", None)
+        else:
+            d["objectives"] = list(d["objectives"])
         return d
 
     @staticmethod
@@ -150,6 +166,9 @@ class SweepSpec:
                                    for s in d.get("budget_scales") or (1.0,))
         d.setdefault("profile", None)
         d.setdefault("scenario_params", None)
+        d.setdefault("objectives", None)
+        if d["objectives"] is not None:
+            d["objectives"] = tuple(d["objectives"])
         return SweepSpec(**d)
 
     def fingerprint(self) -> str:
@@ -873,7 +892,15 @@ def pareto_records(records: Sequence[Dict],
     result order (input order) is deterministic regardless of how the
     lexsort breaks ties.  Regression tests pin this contract to
     `pathfinder.pareto_front`.
+
+    Objective directions come from the `repro.core.objectives` registry:
+    max-direction objectives (goodput) are sign-flipped into canonical
+    minimizing space before the skyline.  The default all-minimizing path
+    is untouched (records never multiply by the +1 signs).
     """
+    from repro.core import objectives as objectives_lib
+    signs = objectives_lib.canonical_signs(objectives)
+
     def objvals(r) -> Optional[List[float]]:
         try:
             vs = [float(r[k]) for k in objectives]
@@ -892,6 +919,8 @@ def pareto_records(records: Sequence[Dict],
     if not recs:
         return []
     vals = np.asarray(rows, dtype=np.float64)
+    if any(s < 0 for s in signs):
+        vals = vals * np.asarray(signs, dtype=np.float64)
     order = np.lexsort(vals.T[::-1])       # by first objective, then rest
     front = np.empty((0, vals.shape[1]))
     keep: List[int] = []

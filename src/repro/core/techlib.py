@@ -46,6 +46,7 @@ class ComputeTech:
     energy_per_flop: float          # J at nominal voltage/frequency
     systolic_dims: tuple = (128, 128)  # (N_x, N_y) — used by the dataflow model
     max_utilization: float = 0.85   # derate (paper §4.2.1: V100 fill/drain ~85%)
+    die_cost_usd: float = 4000.0    # per-device compute die cost (TCO capex)
 
     @property
     def nominal_flop_rate(self) -> float:
@@ -99,6 +100,7 @@ class OffChipMemTech:
     threshold_voltage: float
     nominal_frequency: float        # per-link signalling rate
     access_latency_s: float
+    cost_usd_per_gb: float = 10.0   # memory cost (TCO capex)
 
     @property
     def bytes_per_cycle_per_device(self) -> float:
@@ -207,6 +209,17 @@ _N12_E_FLOP = 1.10e-12        # J/flop fp16 at N12 (~V100-class efficiency)
 _AREA_SCALE_PER_NODE = 1.8
 _POWER_SCALE_PER_NODE = 1.3
 
+# Per-tech cost table ($/token TCO objective, repro.core.objectives):
+# wafer cost roughly doubles every two nodes while usable area shrinks,
+# so the per-die cost climbs steeply toward the leading edge.
+_LOGIC_DIE_USD: Dict[str, float] = {
+    "N12": 2500.0, "N7": 5000.0, "N5": 8000.0, "N3": 12000.0,
+    "N2": 17000.0, "N1.5": 23000.0, "N1": 30000.0,
+}
+_HBM_USD_PER_GB: Dict[str, float] = {
+    "HBM2": 8.0, "HBM2E": 10.0, "HBM3": 12.0, "HBM4": 16.0,
+}
+
 
 def _logic(node: str) -> ComputeTech:
     i = _LOGIC_NODES.index(node)
@@ -223,6 +236,7 @@ def _logic(node: str) -> ComputeTech:
         energy_per_flop=_N12_E_FLOP / (_POWER_SCALE_PER_NODE ** i),
         systolic_dims=(16, 16),
         max_utilization=0.85,
+        die_cost_usd=_LOGIC_DIE_USD[node],
     )
 
 
@@ -294,6 +308,7 @@ def _hbm(gen: str) -> OffChipMemTech:
         threshold_voltage=0.35,
         nominal_frequency=bw / 1024 * 8,   # per-link bit rate
         access_latency_s=120e-9,
+        cost_usd_per_gb=_HBM_USD_PER_GB[gen],
     )
 
 
@@ -365,6 +380,7 @@ def _tpu_v5e_compute() -> ComputeTech:
         energy_per_flop=0.35e-12,
         systolic_dims=(128, 128),
         max_utilization=0.85,
+        die_cost_usd=6000.0,
     )
 
 
@@ -385,6 +401,7 @@ def _tpu_v5e_hbm() -> OffChipMemTech:
         threshold_voltage=0.35,
         nominal_frequency=409.5e9 / 1024 * 8,
         access_latency_s=120e-9,
+        cost_usd_per_gb=8.0,
     )
 
 
@@ -425,6 +442,7 @@ def _cpu_host_compute() -> ComputeTech:
         energy_per_flop=5.0e-12,
         systolic_dims=(4, 8),
         max_utilization=0.90,
+        die_cost_usd=1500.0,
     )
 
 
@@ -445,6 +463,7 @@ def _cpu_host_dram() -> OffChipMemTech:
         threshold_voltage=0.4,
         nominal_frequency=12e9 / 64 * 8,
         access_latency_s=90e-9,
+        cost_usd_per_gb=3.0,
     )
 
 
@@ -495,6 +514,32 @@ def cpu_host_tech() -> TechConfig:
         net_intra=_intra_net(16e9),
         net_inter=_inter_net("IB-NDR-X8"),
     )
+
+
+# ---------------------------------------------------------------------------
+# Energy/cost coefficients for the objective layer (repro.core.objectives)
+#
+# Both helpers are plain arithmetic over the TechConfig and two MicroArch
+# scalars, so they stay traceable when cooptimize's DVFS knobs run through
+# them with jnp tracers.
+# ---------------------------------------------------------------------------
+
+# static (leakage) compute power as a fraction of nominal dynamic power
+LEAKAGE_FRAC = 0.15
+
+
+def device_cost_usd(tech: TechConfig, dram_capacity_bytes):
+    """Per-device capex: compute die plus memory at $/GB."""
+    return (tech.compute.die_cost_usd
+            + tech.dram.cost_usd_per_gb * dram_capacity_bytes / 2**30)
+
+
+def static_power_w(tech: TechConfig, dram_capacity_bytes,
+                   compute_throughput):
+    """Per-device static power: DRAM refresh/standby plus logic leakage."""
+    n_dev = dram_capacity_bytes / tech.dram.device_capacity_bytes
+    return (tech.dram.static_power_per_device_w * n_dev
+            + LEAKAGE_FRAC * compute_throughput * tech.compute.energy_per_flop)
 
 
 LOGIC_NODES = list(_LOGIC_NODES)

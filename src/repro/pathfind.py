@@ -190,6 +190,16 @@ def _add_scenario_flags(p, default_scenario: str = "train") -> None:
                         "slo_ttft_p50/p99, slo_tpot_p50/p99.  A comma "
                         "list declares a sweep axis (variants ride in "
                         "the cell id)")
+    g.add_argument("--objectives", type=_csv_list, default=None,
+                   metavar="OBJ1,OBJ2,...",
+                   help="Pareto objectives from the objective registry "
+                        "(repro.core.objectives): 'energy', 'cost', "
+                        "'goodput' (kind-matched aliases), canonical "
+                        "names like energy_j_per_token, or the "
+                        "scenario's own record fields.  Replaces the "
+                        "scenario's default objective set everywhere — "
+                        "frontier folds, --frontier-only streaming "
+                        "Pareto, cooptimize refinement")
     g.add_argument("--profile", default=None, metavar="FILE",
                    help="calibration profile JSON (pathfind calibrate); "
                         "every hardware point is evaluated on the "
@@ -316,6 +326,10 @@ def _parser() -> argparse.ArgumentParser:
                     metavar="KEY=V[,V2,...]",
                     help="must match the sweep's scenario params if given "
                          "(the spec in DIR is authoritative)")
+    co.add_argument("--objectives", type=_csv_list, default=None,
+                    metavar="OBJ1,OBJ2,...",
+                    help="must match the sweep's objectives if given "
+                         "(the spec in DIR is authoritative)")
     co.add_argument("--out", default=None, metavar="FILE",
                     help="refined-records JSONL path "
                          "(default DIR/refined.jsonl)")
@@ -419,7 +433,7 @@ def _cmd_sweep(args) -> int:
                       or args.backend != "auto" or args.slo is not None
                       or args.workers is not None or args.chunk_size != 32
                       or args.profile is not None
-                      or args.scenario_param
+                      or args.scenario_param or args.objectives
                       or args.frontier_only or args.superbatch is not None
                       or args.frontier_cap is not None
                       or args.lease_ttl is not None
@@ -494,6 +508,7 @@ def _cmd_sweep_runner(args) -> int:
             ("--tilings", args.tilings, 8),
             ("--profile", args.profile, None),
             ("--scenario-param", args.scenario_param, None),
+            ("--objectives", args.objectives, None),
         ) if val != default]
         if ignored:
             print(f"error: --resume loads the sweep spec from "
@@ -524,7 +539,8 @@ def _cmd_sweep_runner(args) -> int:
             n_tilings=args.tilings, chunk_size=args.chunk_size,
             profile=profile_dict,
             scenario_params=_scenario_params_dict(args.scenario_param)
-            or None)
+            or None,
+            objectives=tuple(args.objectives) if args.objectives else None)
         runner = sweeprunner.SweepRunner(spec, out_dir=args.out, **kwargs)
 
     # --workers on the pipeline backend = the distributed sweep fabric:
@@ -685,11 +701,19 @@ def _cmd_sweep_worker(args) -> int:
 
 def _cmd_cooptimize(args) -> int:
     """Sweep -> refine pipeline (repro.core.cooptimize)."""
+    import json
     import os
 
     from repro.core import cooptimize, scenarios, sweeprunner
 
     spec, records = sweeprunner.load_sweep(args.from_dir)
+    if not records:
+        # frontier-only sweep: seed refinement from the materialized
+        # frontier (exactly the points worth refining anyway)
+        fp = os.path.join(args.from_dir, "frontier.jsonl")
+        if os.path.exists(fp):
+            with open(fp) as fh:
+                records = [json.loads(ln) for ln in fh if ln.strip()]
     if args.scenario is not None and args.scenario != spec.scenario:
         print(f"error: --scenario {args.scenario} contradicts the sweep "
               f"spec in {args.from_dir} (scenario={spec.scenario}); the "
@@ -703,6 +727,15 @@ def _cmd_cooptimize(args) -> int:
                   f"{args.from_dir} (params={have}); the spec is "
                   f"authoritative — drop the flag", file=sys.stderr)
             return 2
+    if args.objectives is not None \
+            and tuple(args.objectives) != (spec.objectives or ()):
+        print(f"error: --objectives {','.join(args.objectives)} "
+              f"contradicts the sweep spec in {args.from_dir} "
+              f"(objectives="
+              f"{','.join(spec.objectives) if spec.objectives else '<default>'}"
+              f"); the spec is authoritative — drop the flag",
+              file=sys.stderr)
+        return 2
     cfg = cooptimize.RefineConfig(
         top_k=args.top_k, candidates_per_seed=args.candidates,
         steps=args.steps, starts=args.starts, lr=args.lr, seed=args.seed)
@@ -751,6 +784,7 @@ def _cmd_size(args) -> int:
             ("--power", args.power, None), ("--slo", args.slo, None),
             ("--scenario", args.scenario, "serving-traffic"),
             ("--scenario-param", args.scenario_param, None),
+            ("--objectives", args.objectives, None),
             ("--tilings", args.tilings, 8),
             ("--profile", args.profile, None),
             ("--out", args.out, None),
@@ -789,7 +823,8 @@ def _cmd_size(args) -> int:
             n_tilings=args.tilings, chunk_size=args.chunk_size,
             profile=profile_dict,
             scenario_params=_scenario_params_dict(args.scenario_param)
-            or None)
+            or None,
+            objectives=tuple(args.objectives) if args.objectives else None)
         runner = sweeprunner.SweepRunner(spec, out_dir=args.out,
                                          backend=args.backend)
         records = runner.run().records
@@ -804,6 +839,10 @@ def _cmd_size(args) -> int:
                  if not isinstance(v, tuple)})
     if spec.slo_s is not None:
         base["slo_ttft_p99"] = spec.slo_s
+    # objective-model params (energy price, MTBF, ...) are not traffic
+    # params; split them out before the strict traffic parser
+    from repro.core import objectives as objectives_lib
+    _, base = objectives_lib.split_objective_params(base)
     tm, pol, spec_slo = traffic.split_params(base)
     slo = {name: float(v) for name in
            ("ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99")

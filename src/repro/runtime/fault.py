@@ -90,6 +90,41 @@ class StragglerWatchdog:
         return is_straggler
 
 
+def fleet_mtbf_s(device_mtbf_s: float, n_devices: float) -> float:
+    """Mean time between failures of the whole fleet (independent fails)."""
+    return float(device_mtbf_s) / max(float(n_devices), 1.0)
+
+
+def availability(restore_s: float, mtbf_s: float) -> float:
+    """Steady-state availability: fraction of wall-clock spent serving.
+
+    Each failure costs one restore; serving has no checkpoint-write tax
+    (state is reconstructible), so goodput derates by MTBF/(MTBF+restore).
+    """
+    return float(mtbf_s) / max(float(mtbf_s) + float(restore_s), 1e-30)
+
+
+def goodput_fraction(write_s: float, restore_s: float,
+                     mtbf_s: float) -> float:
+    """Fraction of wall-clock doing useful training work under failures.
+
+    Young's optimal checkpoint interval T = sqrt(2 * write * MTBF):
+    the fleet loses `write_s` per interval to checkpointing and, per
+    failure (rate 1/MTBF), half an interval of lost work plus a restore.
+    With write_s == 0 this degrades to the serving `availability` model.
+    Clipped to [0, 1] — an MTBF shorter than the recovery cost means the
+    run never progresses.
+    """
+    write_s = max(float(write_s), 0.0)
+    mtbf_s = max(float(mtbf_s), 1e-30)
+    if write_s <= 0.0:
+        return availability(restore_s, mtbf_s)
+    interval = (2.0 * write_s * mtbf_s) ** 0.5
+    frac = ((1.0 - write_s / interval)
+            * (1.0 - (interval / 2.0 + float(restore_s)) / mtbf_s))
+    return min(max(frac, 0.0), 1.0)
+
+
 def elastic_plan(n_healthy: int, model_parallel: int,
                  global_batch: int) -> dict:
     """Choose the new mesh for a changed healthy-device count.

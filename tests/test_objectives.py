@@ -1,0 +1,398 @@
+"""Objective-layer tests (ISSUE-8 tentpole + satellites).
+
+Covers: the typed objective registry (kinds, aliases, dependency order,
+canonical direction signs), objective-param splitting (explicit-only,
+sweep-axis rejection), `SweepSpec`/`ScenarioSpec` serialization compat
+(PR7-shaped dicts round-trip byte-identically; pre-PR8 sweep dirs resume
+with zero re-evaluation), cross-fold objective parity for every scenario
+family (scalar `record` == vectorized `metrics_fold` op-for-op; traced
+`frontier_fold` reaches the host-filtered Pareto set), direction-aware
+Pareto filtering (goodput is maximized), and unit sanity of the
+energy/cost/goodput folds themselves.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import objectives, scenarios, sweeprunner, traffic
+from repro.core.sweeprunner import SweepRunner, SweepSpec
+
+ARCH = "qwen1.5-0.5b"
+OBJS = ("energy", "cost", "goodput")
+
+TRAIN_SPEC = SweepSpec(
+    arches=(ARCH,), mesh_shapes=((2, 2),), scenario="train",
+    logic_nodes=("N7", "N5"), n_tilings=2, chunk_size=2, objectives=OBJS)
+
+# 2x2 is KV-capacity-infeasible for the 32k serving cells, 4x4 is
+# feasible — the parity grids must exercise the non-finite masking path
+SERVING_SPEC = SweepSpec(
+    arches=(ARCH,), mesh_shapes=((2, 2), (4, 4)), scenario="serving",
+    logic_nodes=("N7",), n_tilings=2, chunk_size=3, objectives=OBJS)
+
+# the slo_ttft_p99 axis spans an unmeetable and a trivially-met wall so
+# the grid carries feasible, infeasible, AND SLO-wall-failing points
+TRAFFIC_SPEC = SweepSpec(
+    arches=(ARCH,), mesh_shapes=((2, 2), (4, 4)),
+    scenario="serving-traffic", n_tilings=2, chunk_size=3,
+    scenario_params={"qps": 0.1, "slo_ttft_p99": [1.0, 1e6]},
+    objectives=OBJS)
+
+
+# ------------------------------------------------------------- registry
+def test_registry_kinds_units_directions():
+    assert objectives.REGISTRY["energy_j_per_step"].kind == "step"
+    assert objectives.REGISTRY["energy_j_per_token"].kind == "token"
+    assert objectives.REGISTRY["goodput_tokens_per_s"].kind is None
+    assert objectives.REGISTRY["goodput_tokens_per_s"].direction == "max"
+    for name, o in objectives.REGISTRY.items():
+        assert o.name == name
+        assert o.direction in ("min", "max")
+        assert o.unit
+
+
+def test_computation_order_deps_first():
+    order = [o.name for o in
+             objectives.computation_order(("cost_usd_per_token",))]
+    assert order == ["energy_j_per_token", "cost_usd_per_token"]
+    # listing the dep explicitly never duplicates it
+    order = [o.name for o in objectives.computation_order(
+        ("cost_usd_per_step", "energy_j_per_step"))]
+    assert order == ["energy_j_per_step", "cost_usd_per_step"]
+    # scenario-native fields are not registry objectives
+    assert objectives.computation_order(("time_s", "devices")) == ()
+
+
+def test_resolve_names_aliases_and_errors():
+    assert objectives.resolve_names(OBJS, "token", ("tokens_per_s",)) == \
+        ("energy_j_per_token", "cost_usd_per_token", "goodput_tokens_per_s")
+    assert objectives.resolve_names(("energy", "cost"), "step", ()) == \
+        ("energy_j_per_step", "cost_usd_per_step")
+    # scenario base fields pass through; dedupe keeps first occurrence
+    assert objectives.resolve_names(
+        ("time_s", "energy", "energy"), "step", ("time_s", "devices")) == \
+        ("time_s", "energy_j_per_step")
+    with pytest.raises(ValueError, match="per-token"):
+        objectives.resolve_names(("energy_j_per_token",), "step", ())
+    with pytest.raises(ValueError, match="valid:"):
+        objectives.resolve_names(("bogus",), "step", ("time_s",))
+    with pytest.raises(ValueError, match="empty"):
+        objectives.resolve_names((), "step", ())
+
+
+def test_canonical_signs():
+    assert objectives.canonical_signs(
+        ("energy_j_per_step", "goodput_tokens_per_s")) == (1.0, -1.0)
+    # unknown (scenario-native) fields default to minimize
+    assert objectives.canonical_signs(("time_s",)) == (1.0,)
+
+
+def test_split_objective_params_explicit_only():
+    obj, rest = objectives.split_objective_params(
+        {"pue": 1.1, "qps": 2.0})
+    assert obj == {"pue": 1.1}
+    assert rest == {"qps": 2.0}
+    # explicit-only: nothing provided -> nothing returned (resolve()
+    # uses emptiness to decide whether to customize the scenario)
+    obj, rest = objectives.split_objective_params({"qps": 2.0})
+    assert obj == {}
+    with pytest.raises(ValueError, match="sweep axis"):
+        objectives.split_objective_params({"pue": [1.1, 1.3]})
+
+
+def test_objective_unit_sanity():
+    ctx = {
+        "compute_throughput": 1e14, "dram_bw": 1e12, "net_inter_bw": 1e11,
+        "energy_per_flop": 1e-11, "dram_energy_per_byte": 5e-11,
+        "net_energy_per_byte": 6e-11, "static_power_w": 150.0,
+        "device_cost_usd": 10000.0, "devices": 4.0,
+        "token_compute_s": 0.01, "token_comm_s": 0.002,
+        "device_s_per_token": 0.05, "base_tokens_per_s": 100.0,
+        "goodput_fraction": 0.95,
+        **objectives.PARAM_DEFAULTS,
+    }
+    objs = objectives.computation_order(
+        ("cost_usd_per_token", "goodput_tokens_per_s"))
+    out = objectives.evaluate(np, objs, dict(ctx))
+    e, c, g = (out["energy_j_per_token"], out["cost_usd_per_token"],
+               out["goodput_tokens_per_s"])
+    assert 0.0 < e < math.inf and 0.0 < c < math.inf
+    assert g == pytest.approx(95.0)
+    # the energy bill responds to the price knob; capex does not
+    expensive = dict(ctx, energy_price_usd_per_kwh=10.0)
+    out2 = objectives.evaluate(np, objs, expensive)
+    assert out2["energy_j_per_token"] == e
+    assert out2["cost_usd_per_token"] > c
+    # an infeasible point's inf occupancy poisons energy AND cost
+    dead = dict(ctx, device_s_per_token=math.inf)
+    out3 = objectives.evaluate(np, objs, dead)
+    assert math.isinf(out3["energy_j_per_token"])
+    assert math.isinf(out3["cost_usd_per_token"])
+
+
+# ------------------------------------------- serialization / compat pin
+def test_spec_without_objectives_serializes_pr7_shaped():
+    spec = SweepSpec(arches=(ARCH,), mesh_shapes=((2, 2),),
+                     scenario="train")
+    d = spec.to_dict()
+    assert "objectives" not in d
+    # a PR7-era dict (no objectives key) round-trips to the identical
+    # fingerprint — old checkpoint dirs keep resuming
+    again = SweepSpec.from_dict(json.loads(json.dumps(d)))
+    assert again.objectives is None
+    assert again.fingerprint() == spec.fingerprint()
+
+
+def test_spec_with_objectives_roundtrips_and_forks_fingerprint():
+    base = SweepSpec(arches=(ARCH,), mesh_shapes=((2, 2),),
+                     scenario="train")
+    spec = SweepSpec(arches=(ARCH,), mesh_shapes=((2, 2),),
+                     scenario="train", objectives=OBJS)
+    d = spec.to_dict()
+    assert d["objectives"] == list(OBJS)
+    again = SweepSpec.from_dict(json.loads(json.dumps(d)))
+    assert again.objectives == OBJS
+    assert again.fingerprint() == spec.fingerprint()
+    assert spec.fingerprint() != base.fingerprint()
+
+
+def test_scenario_spec_objectives_roundtrip():
+    ss = scenarios.ScenarioSpec(name="serving-traffic",
+                                params={"qps": 0.5},
+                                objectives=("energy", "cost"))
+    d = ss.to_dict()
+    assert d["objectives"] == ["energy", "cost"]
+    assert scenarios.ScenarioSpec.from_dict(d) == ss
+    plain = scenarios.ScenarioSpec(name="train")
+    assert "objectives" not in plain.to_dict()
+
+
+def test_pre_pr8_sweep_dir_resumes_with_zero_reeval(tmp_path):
+    """A sweep dir written without objectives is byte-shaped exactly like
+    a PR7 dir (no `objectives` key in spec.json); resuming it must skip
+    every committed chunk."""
+    spec = SweepSpec(arches=(ARCH,), mesh_shapes=((2, 2),),
+                     scenario="train", logic_nodes=("N7", "N5"),
+                     n_tilings=2, chunk_size=1)
+    first = SweepRunner(spec, out_dir=str(tmp_path),
+                        backend="serial").run(max_chunks=1)
+    assert first.n_chunks_evaluated == 1 and not first.complete
+    head = json.loads((tmp_path / "spec.json").read_text())
+    assert "objectives" not in head["spec"]
+    second = SweepRunner.from_dir(str(tmp_path), backend="serial").run(
+        resume=True)
+    assert second.n_chunks_skipped == 1
+    assert second.complete
+
+
+# ----------------------------------------------- scenario composition
+def test_with_objectives_composes_fields():
+    scn = scenarios.get_scenario("serving-traffic")
+    base_fields = scn.fields
+    custom = scn.with_objectives(OBJS)
+    assert custom.objectives == (
+        "energy_j_per_token", "cost_usd_per_token", "goodput_tokens_per_s")
+    # base record fields stay, objective columns append
+    assert [f for f in custom.fields if f in base_fields] == \
+        list(base_fields)
+    for name in custom.objectives:
+        if name in objectives.REGISTRY:
+            assert name in custom.fields
+    # the base scenario is untouched (registry instance is shared)
+    assert scn.fields == base_fields
+    # no-op customization returns the scenario unchanged
+    assert scn.with_objectives(None) is scn
+
+
+def test_resolve_routes_objective_params():
+    ss = scenarios.ScenarioSpec(
+        name="serving-traffic", objectives=("energy", "cost"),
+        params={"qps": 0.5, "pue": 2.0})
+    scn = ss.resolve()
+    assert scn.objectives == ("energy_j_per_token", "cost_usd_per_token")
+    assert scn.obj_params["pue"] == 2.0
+    # non-objective params still reach the traffic model
+    assert scn.traffic.qps == 0.5
+    # objective params on a paramless scenario are fine; leftovers raise
+    scenarios.ScenarioSpec(name="train", params={"pue": 2.0},
+                           objectives=("energy",)).resolve()
+    with pytest.raises(ValueError, match="takes no params"):
+        scenarios.ScenarioSpec(name="train", params={"qps": 1.0}).resolve()
+
+
+# ----------------------------------------------------- cross-fold parity
+@pytest.fixture(scope="module", params=["train", "serving", "traffic"])
+def objective_sweeps(request, tmp_path_factory):
+    spec = {"train": TRAIN_SPEC, "serving": SERVING_SPEC,
+            "traffic": TRAFFIC_SPEC}[request.param]
+    tmp = tmp_path_factory.mktemp(f"obj_{request.param}")
+    serial = SweepRunner(spec, backend="serial", cache=None).run()
+    front = SweepRunner(spec, out_dir=str(tmp / "f"), backend="pipeline",
+                        cache=None).run(frontier_only=True)
+    return spec, serial, front
+
+
+def test_record_vs_metrics_fold_objective_parity(objective_sweeps):
+    """Cross-backend parity with objective columns present.
+
+    Legacy fields keep their pre-existing guarantees: bit-exact for
+    serving-traffic, rtol=1e-5 for train/serving (test_sweeppipeline's
+    contract).  Objective columns consume the compute_s/comm_s metric
+    columns, which carry f32 cross-backend evaluation jitter (only
+    total_s is bit-stable across backends), so they get a tight rtol
+    here; bitwise scalar-vs-vectorized agreement on IDENTICAL rows is
+    asserted separately below.  Non-finite patterns (infeasible /
+    SLO-wall points) must match exactly — never silently dropped."""
+    spec, serial, _ = objective_sweeps
+    pipe = SweepRunner(spec, backend="pipeline", cache=None).run()
+    exact_legacy = spec.scenario == "serving-traffic"
+    objective_cols = set(objectives.REGISTRY)
+    by_s = {(r["key"], r["cell"]): r for r in serial.records}
+    by_p = {(r["key"], r["cell"]): r for r in pipe.records}
+    assert by_s.keys() == by_p.keys() and by_s
+    for k, s in by_s.items():
+        p = by_p[k]
+        assert s.keys() == p.keys()
+        for f, sv in s.items():
+            pv = p[f]
+            if not isinstance(sv, float):
+                assert sv == pv, (k, f)
+            elif not math.isfinite(sv):
+                assert (sv == pv) or (math.isnan(sv) and math.isnan(pv)), \
+                    (k, f, sv, pv)
+            elif f in objective_cols:
+                np.testing.assert_allclose(pv, sv, rtol=1e-6,
+                                           err_msg=f"{k}:{f}")
+            elif exact_legacy:
+                assert sv == pv, (k, f, sv, pv)
+            else:
+                np.testing.assert_allclose(pv, sv, rtol=1e-5,
+                                           err_msg=f"{k}:{f}")
+
+
+def test_record_matches_metrics_fold_bitwise_on_identical_rows():
+    """The tentpole's op-for-op contract: scalar `record` and vectorized
+    `metrics_fold` produce BIT-IDENTICAL objective columns when fed the
+    same metric rows (the single-fold-definition guarantee; cross-backend
+    row jitter excluded by construction)."""
+    from repro.core import pathfinder
+
+    spec = SweepSpec(
+        arches=(ARCH,), mesh_shapes=((4, 4),), scenario="serving-traffic",
+        n_tilings=2, scenario_params={"qps": 0.1}, objectives=OBJS)
+    captured = {}
+    orig = scenarios.ServingTrafficScenario.record
+
+    def spy(self, dp, rows):
+        captured[dp.key()] = (dp, np.array(rows))
+        return orig(self, dp, rows)
+
+    scenarios.ServingTrafficScenario.record = spy
+    try:
+        serial = SweepRunner(spec, backend="serial", cache=None).run()
+    finally:
+        scenarios.ServingTrafficScenario.record = orig
+    assert captured
+    lb = sweeprunner.enumerate_labels(spec)[0]
+    scn = sweeprunner.scenario_for(spec, lb.cell)
+    checked = 0
+    for rec in serial.records:
+        dp, rows = captured[rec["key"]]
+        fold = scn.metrics_fold(dp.cfg, dp.strategy, lb.cell)
+        hw_row = np.asarray(pathfinder.pack_hw(dp.hw))
+        md = fold(np.asarray(rows, dtype=np.float64)[None],
+                  hw_row[None, :])[0]
+        for f, mv in md.items():
+            sv = rec[f]
+            if isinstance(sv, float):
+                assert (sv == mv) or (math.isnan(sv) and math.isnan(mv)), \
+                    (rec["key"], f, sv, mv)
+            else:
+                assert sv == mv, (rec["key"], f)
+        checked += 1
+    assert checked
+
+
+def test_frontier_fold_matches_host_filter(objective_sweeps):
+    """--frontier-only (traced frontier_fold + device Pareto merge over
+    canonical signed values) must reach the same surviving set as the
+    host-side re-filter over full materialization."""
+    spec, serial, front = objective_sweeps
+    scn = spec.scenario_spec.variants()[0].resolve()
+    want = sweeprunner.pareto_records(serial.records, scn.objectives)
+    assert want, "reference frontier must be non-empty"
+    assert front.n_frontier_overflowed == 0
+    assert sorted((r["key"], r["cell"]) for r in front.records) == \
+        sorted((r["key"], r["cell"]) for r in want)
+
+
+def test_objective_values_signs_and_exclusion(objective_sweeps):
+    """objective_values mirrors the record columns through the canonical
+    signs (goodput negated); infeasible / walled / non-finite -> None."""
+    spec, serial, _ = objective_sweeps
+    scn = spec.scenario_spec.variants()[0].resolve()
+    n_ok = 0
+    for rec in serial.records:
+        vs = scn.objective_values(rec)
+        finite = all(isinstance(rec.get(f), (int, float))
+                     and math.isfinite(float(rec[f]))
+                     for f in scn.objectives)
+        # the percentile SLO wall is an exclusion only for
+        # serving-traffic; plain serving merely tags slo_ok
+        walled = (spec.scenario == "serving-traffic"
+                  and not rec.get("slo_ok", True))
+        excluded = not rec.get("feasible", True) or walled or not finite
+        if excluded:
+            assert vs is None, rec["key"]
+            continue
+        n_ok += 1
+        for name, v in zip(scn.objectives, vs):
+            sign = -1.0 if objectives.direction(name) == "max" else 1.0
+            assert v == sign * float(rec[name]), (rec["key"], name)
+    assert n_ok, "grid must contain included points"
+    if spec.scenario != "train":
+        assert n_ok < len(serial.records), \
+            "grid must also contain excluded points"
+
+
+def test_pareto_records_respects_direction():
+    """goodput is maximized: a record that is worse on goodput must be
+    dominated even though its raw value is numerically smaller."""
+    def rec(key, cost, goodput):
+        return {"key": key, "cell": "c", "feasible": True, "slo_ok": True,
+                "cost_usd_per_token": cost,
+                "goodput_tokens_per_s": goodput}
+    objs = ("cost_usd_per_token", "goodput_tokens_per_s")
+    records = [rec("a", 1.0, 10.0),    # best goodput
+               rec("b", 1.0, 5.0),     # dominated by a
+               rec("c", 0.5, 5.0)]     # cheaper, survives
+    front = {r["key"] for r in sweeprunner.pareto_records(records, objs)}
+    assert front == {"a", "c"}
+    # sanity: naive min-min would instead keep "b" over "a"
+    naive = {r["key"] for r in sweeprunner.pareto_records(
+        records, ("cost_usd_per_token",))}
+    assert naive == {"c"}
+
+
+def test_goodput_deration_bounds(objective_sweeps):
+    """Goodput never exceeds raw throughput and the deration is strictly
+    applied (checkpoint/failure overheads are non-zero)."""
+    spec, serial, _ = objective_sweeps
+    scn = spec.scenario_spec.variants()[0].resolve()
+    if "goodput_tokens_per_s" not in scn.objectives:
+        pytest.skip("goodput not in the objective set")
+    checked = 0
+    for rec in serial.records:
+        if scn.objective_values(rec) is None:
+            continue
+        g = float(rec["goodput_tokens_per_s"])
+        raw = float(rec["tokens_per_s"]) if "tokens_per_s" in rec else None
+        if raw is not None:
+            assert 0.0 < g <= raw, rec["key"]
+        else:
+            assert 0.0 < g < math.inf
+        checked += 1
+    assert checked

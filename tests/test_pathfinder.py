@@ -63,7 +63,7 @@ def test_evaluate_points_heterogeneous_groups(toy):
                   Strategy("CR", kp1=4, dp=4)]
     points = [pathfinder.EvalPoint(a, g, st)
               for st in strategies for a in archs]
-    rows = pathfinder.evaluate_points(points, ppe=PPE, cache=None)
+    rows = pathfinder.evaluate(points=points, ppe=PPE, cache=None)
     for p, row in zip(points, rows):
         bd = simulate.predict(p.arch, g, p.strategy, cfg=PPE)
         np.testing.assert_allclose(row[0], float(bd.total_s), rtol=1e-6)
@@ -116,11 +116,12 @@ def test_cache_distinguishes_strategies(toy):
     g, _, archs = toy
     cache = pathfinder.PredictionCache()
     a = archs[0]
-    r1 = pathfinder.evaluate_points(
-        [pathfinder.EvalPoint(a, g, Strategy("RC", kp1=2, kp2=2, dp=4))],
+    r1 = pathfinder.evaluate(
+        points=[pathfinder.EvalPoint(a, g, Strategy("RC", kp1=2, kp2=2,
+                                                    dp=4))],
         ppe=PPE, cache=cache)
-    r2 = pathfinder.evaluate_points(
-        [pathfinder.EvalPoint(a, g, Strategy("CR", kp1=4, dp=4))],
+    r2 = pathfinder.evaluate(
+        points=[pathfinder.EvalPoint(a, g, Strategy("CR", kp1=4, dp=4))],
         ppe=PPE, cache=cache)
     assert cache.stats["misses"] == 2        # no false sharing across keys
     assert r1[0, 0] != r2[0, 0]

@@ -219,7 +219,8 @@ def test_eval_labels_resolves_cache_at_call_time():
     pathfinder.set_prediction_cache(fresh)
     try:
         labels = sweeprunner.enumerate_labels(SPEC)[:2]
-        sweeprunner.eval_labels(SPEC, labels)
+        with pytest.warns(DeprecationWarning, match="eval_labels"):
+            sweeprunner.eval_labels(SPEC, labels)
         stats = fresh.stats
         assert stats["hits"] + stats["misses"] > 0, (
             "replacement cache saw no traffic: eval_labels is still "
