@@ -1,0 +1,237 @@
+"""Surrogate-driven exploration vs exhaustive sweep (ISSUE-9 tentpole).
+
+The exploration loop (repro.core.surrogate) must recover the exhaustive
+sweep's Pareto frontier from a fraction of the real evaluations: per
+scenario it fits an MLP ensemble on the points evaluated so far and
+spends the budget on the top-acquisition chunks.  Recovery is scored by
+dominated hypervolume over the scenario's canonical-signed objectives
+with a shared reference point derived from the exhaustive frontier
+(max + 10% margin per axis), so a missing frontier extreme costs real
+volume instead of hiding behind a point count.
+
+Asserts (ISSUE-9 acceptance):
+  * per scenario (train + serving-traffic): explore recovers
+    >= EXPLORE_MIN_HV (default 0.95) of the exhaustive frontier's
+    hypervolume using <= EXPLORE_MAX_EVAL_FRAC (default 0.25) of the
+    grid's real evaluations;
+  * the surrogate's advisory chunk order (order.json) steers a 2-worker
+    fabric fleet without changing results: merged records identical to
+    an unordered fleet of the same size.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict
+
+MIN_HV = float(os.environ.get("EXPLORE_MIN_HV", "0.95"))
+MAX_EVAL_FRAC = float(os.environ.get("EXPLORE_MAX_EVAL_FRAC", "0.25"))
+
+
+def _train_spec():
+    from repro.core import sweeprunner
+    # 120 points: 4 meshes x 3 logic x 2 HBM x 5 budget scales
+    return sweeprunner.SweepSpec(
+        arches=("qwen1.5-0.5b",),
+        mesh_shapes=((2, 2), (4, 1), (1, 4), (2, 1)),
+        scenario="train", logic_nodes=("N12", "N7", "N5"),
+        hbms=("HBM2E", "HBM3"),
+        budget_scales=(0.7, 0.85, 1.0, 1.15, 1.3),
+        n_tilings=4, chunk_size=1)
+
+
+def _serving_spec():
+    from repro.core import sweeprunner
+    # 96 points with all three feasibility regimes (capacity walls, SLO
+    # walls, feasible); chunk_size=2 pairs both budget scales of a config
+    return sweeprunner.SweepSpec(
+        arches=("qwen1.5-0.5b",),
+        mesh_shapes=((2, 2), (4, 4), (2, 8)),
+        scenario="serving-traffic", logic_nodes=("N7", "N5"),
+        hbms=("HBM2E", "HBM3"), budget_scales=(0.9, 1.1),
+        n_tilings=4, chunk_size=2,
+        scenario_params={"qps": 0.1,
+                         "prefill_chunk": [1024.0, 8192.0],
+                         "slo_ttft_p99": [5.0, 50.0]})
+
+
+def _canonical_front(front, objectives):
+    import numpy as np
+    from repro.core.objectives import canonical_signs
+    signs = canonical_signs(objectives)
+    return np.asarray([[s * float(r[o]) for s, o in zip(signs, objectives)]
+                       for r in front], dtype=np.float64)
+
+
+def _explore_one(tag: str, spec, cfg) -> Dict:
+    """Exhaustive vs explored frontier hypervolume on one scenario."""
+    from repro.core import pathfinder, surrogate, sweeprunner
+
+    labels = sweeprunner.enumerate_labels(spec)
+    n = len(labels)
+    scn = spec.scenario_spec.variants()[0].resolve()
+    objectives = list(scn.objectives)
+
+    t0 = time.perf_counter()
+    full = sweeprunner.SweepRunner(spec, cache=None).run()
+    full_s = time.perf_counter() - t0
+    assert full.complete and full.n_points_evaluated == n
+    front_full = sweeprunner.pareto_records(full.records, objectives)
+    assert front_full, f"{tag}: exhaustive sweep has an empty frontier"
+
+    t0 = time.perf_counter()
+    stats = surrogate.explore(spec, cfg=cfg, cache=None)
+    explore_s = time.perf_counter() - t0
+    frac = stats.n_points_evaluated / n
+    assert frac <= MAX_EVAL_FRAC + 1e-9, (
+        f"{tag}: explore spent {stats.n_points_evaluated}/{n} real "
+        f"evaluations ({frac:.0%} > {MAX_EVAL_FRAC:.0%} ceiling)")
+
+    cf = _canonical_front(front_full, objectives)
+    ref = cf.max(axis=0) + 0.1 * (cf.max(axis=0) - cf.min(axis=0)) + 1e-9
+    hv_full = pathfinder.hypervolume(cf, ref)
+    hv_explore = pathfinder.hypervolume(
+        _canonical_front(stats.frontier, objectives), ref)
+    ratio = hv_explore / hv_full if hv_full > 0 else 0.0
+    assert ratio >= MIN_HV, (
+        f"{tag}: explored frontier recovers only {ratio:.1%} of the "
+        f"exhaustive hypervolume (ISSUE-9 acceptance: >= {MIN_HV:.0%} "
+        f"at <= {MAX_EVAL_FRAC:.0%} evaluations)")
+    return {
+        "n_points": n,
+        "n_evaluated": stats.n_points_evaluated,
+        "eval_frac": frac,
+        "stop": stats.stop,
+        "rounds": stats.rounds,
+        "frontier_full": len(front_full),
+        "frontier_explore": len(stats.frontier),
+        "hv_full": hv_full,
+        "hv_explore": hv_explore,
+        "hv_ratio": ratio,
+        "full_sweep_s": full_s,
+        "explore_s": explore_s,
+    }
+
+
+def _fabric_order_parity(train_records) -> Dict:
+    """Surrogate-ordered vs unordered 2-worker fleets: identical merges."""
+    import json
+
+    import numpy as np
+
+    from repro.core import surrogate, sweepfabric, sweeprunner
+
+    spec = sweeprunner.SweepSpec(
+        arches=("qwen1.5-0.5b",), mesh_shapes=((2, 2), (4, 4)),
+        scenario="train", logic_nodes=("N7", "N5"),
+        budget_scales=(0.9, 1.1), n_tilings=4, chunk_size=2)
+    n_chunks = len(sweeprunner.make_chunks(
+        sweeprunner.enumerate_labels(spec), spec.chunk_size))
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    scratch = tempfile.mkdtemp(prefix="explore_fabric_")
+    worker_env = {
+        "PYTHONPATH": os.pathsep.join(
+            p for p in (os.path.join(root, "src"),
+                        os.environ.get("PYTHONPATH", "")) if p),
+        "JAX_COMPILATION_CACHE_DIR": os.path.join(scratch, "xla"),
+    }
+
+    def run(tag: str, chunk_order):
+        out = os.path.join(scratch, tag)
+        coord = sweepfabric.FabricCoordinator(
+            spec, out, workers=2, ttl_s=60.0, poll_s=0.2, claim_batch=1,
+            chunk_order=chunk_order, worker_env=worker_env)
+        stats = coord.run()
+        assert stats.complete, f"{tag}: fabric run incomplete"
+        return out, stats.records
+
+    try:
+        # the advisory order comes from a surrogate trained on the train
+        # scenario's explored records — the PR7 fabric serves
+        # frontier-adjacent chunks first
+        cfg = surrogate.ExploreConfig(
+            surrogate=surrogate.SurrogateConfig(steps=100))
+        order = surrogate.rank_chunks(spec, train_records, cfg=cfg)
+        assert sorted(order) == list(range(n_chunks))
+        _, rec_plain = run("plain", None)
+        out_ord, rec_ord = run("ordered", order)
+        with open(os.path.join(out_ord, "order.json")) as fh:
+            written = json.load(fh)
+        assert written["order"] == list(order)
+        assert written["fingerprint"] == spec.fingerprint()
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+    keys = sorted(r["key"] for r in rec_plain)
+    assert keys == sorted(r["key"] for r in rec_ord)
+    assert len(keys) == len(set(keys))
+    by_key = {r["key"]: r for r in rec_plain}
+    for rec in rec_ord:
+        want = by_key[rec["key"]]
+        assert set(want) == set(rec)
+        for f, v in want.items():
+            if isinstance(v, float) and np.isfinite(v):
+                np.testing.assert_allclose(rec[f], v, rtol=1e-5)
+            else:
+                assert rec[f] == v, (rec["key"], f)
+    return {"n_chunks": n_chunks, "order": [int(i) for i in order],
+            "n_records": len(keys), "parity_ok": True}
+
+
+def main(verbose: bool = True) -> Dict:
+    from repro.core import surrogate, sweeprunner
+
+    r: Dict = {"min_hv": MIN_HV, "max_eval_frac": MAX_EVAL_FRAC}
+
+    train_spec = _train_spec()
+    r["train"] = _explore_one(
+        "train", train_spec,
+        surrogate.ExploreConfig(
+            eval_budget=max(1, int(MAX_EVAL_FRAC
+                                   * len(sweeprunner.enumerate_labels(
+                                       train_spec)))),
+            init_chunks=8, batch_chunks=4,
+            surrogate=surrogate.SurrogateConfig(steps=150)))
+
+    serving_spec = _serving_spec()
+    r["serving"] = _explore_one(
+        "serving-traffic", serving_spec,
+        surrogate.ExploreConfig(
+            eval_budget=max(1, int(MAX_EVAL_FRAC
+                                   * len(sweeprunner.enumerate_labels(
+                                       serving_spec)))),
+            init_chunks=6, batch_chunks=3, stagnation=6,
+            surrogate=surrogate.SurrogateConfig(steps=200)))
+
+    # re-use the train scenario's exhaustive records as surrogate food for
+    # the fabric-ordering leg (what `explore --order-dir` does on disk)
+    full_train = sweeprunner.SweepRunner(
+        sweeprunner.SweepSpec(
+            arches=("qwen1.5-0.5b",), mesh_shapes=((2, 2), (4, 4)),
+            scenario="train", logic_nodes=("N7", "N5"),
+            budget_scales=(0.9, 1.1), n_tilings=4, chunk_size=2),
+        cache=None).run()
+    r["fabric"] = _fabric_order_parity(full_train.records)
+
+    if verbose:
+        for tag in ("train", "serving"):
+            s = r[tag]
+            print(f"explore[{tag}]: {s['n_evaluated']}/{s['n_points']} "
+                  f"evals ({s['eval_frac']:.0%}) -> HV ratio "
+                  f"{s['hv_ratio']:.3f} (floor {MIN_HV:g}); frontier "
+                  f"{s['frontier_explore']}/{s['frontier_full']}; "
+                  f"stop={s['stop']}; full sweep {s['full_sweep_s']:.1f}s "
+                  f"vs explore {s['explore_s']:.1f}s")
+        f = r["fabric"]
+        print(f"fabric order: {f['n_chunks']} chunks, advisory order "
+              f"{f['order']}; 2-worker ordered == unordered merge over "
+              f"{f['n_records']} records "
+              f"({'ok' if f['parity_ok'] else 'FAIL'})")
+    return r
+
+
+if __name__ == "__main__":
+    main()

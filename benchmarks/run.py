@@ -159,6 +159,18 @@ def _bench_sweep_objectives() -> BenchResult:
             f"@{r['best_replicas']}rep"), r
 
 
+def _bench_explore() -> BenchResult:
+    """Surrogate + acquisition exploration vs exhaustive sweep (ISSUE-9)."""
+    from benchmarks import explore_efficiency
+    r = explore_efficiency.main(verbose=False)
+    return (f"hv_train={r['train']['hv_ratio']:.3f}@"
+            f"{r['train']['eval_frac']:.0%};"
+            f"hv_serving={r['serving']['hv_ratio']:.3f}@"
+            f"{r['serving']['eval_frac']:.0%}"
+            f"(>={r['min_hv']:g}@<={r['max_eval_frac']:.0%});"
+            f"order_parity_ok={int(r['fabric']['parity_ok'])}"), r
+
+
 def _bench_calibration() -> BenchResult:
     """Measured GEMM calibration -> strict MRE gain (ISSUE-4 tentpole)."""
     from benchmarks import calibration_gain
@@ -202,6 +214,7 @@ BENCHES: Dict[str, Callable[[], BenchResult]] = {
     "cooptimize_refine": _bench_cooptimize,
     "serving_traffic": _bench_serving_traffic,
     "sweep_objectives": _bench_sweep_objectives,
+    "explore_efficiency": _bench_explore,
     "calibration_gain": _bench_calibration,
     "crossflow_query_latency": _bench_crossflow_query,
     "roofline": _bench_roofline,
@@ -269,6 +282,7 @@ _KEY_RATIOS = {
     "sweep_pipeline": (("speedup",), "sweep_pipeline_speedup"),
     "sweep_fabric": (("speedup",), "sweep_fabric_speedup"),
     "calibration_gain": (("mre_improvement",), "calibration_mre_gain"),
+    "explore_efficiency": (("train", "hv_ratio"), "explore_hv_train"),
 }
 
 

@@ -733,6 +733,44 @@ def pareto_front(points: Sequence, objectives: Sequence[Callable]) -> List:
     return keep
 
 
+def hypervolume(vals, ref) -> float:
+    """Dominated hypervolume of objective rows against a reference corner.
+
+    ``vals`` is (N, K) in canonical all-minimizing space (apply
+    `objectives.canonical_signs` to max-direction axes first) and ``ref``
+    the (K,) worst corner; the result is the exact volume of the union of
+    boxes ``[v, ref]`` — the standard frontier-quality scalar the explore
+    benchmark compares surrogate-guided search against exhaustive sweeps
+    with.  Computed by recursive dimension-sweep slicing: exact for any
+    K, O(N^2) per level, intended for frontier-sized sets (hundreds of
+    points), not raw sweep clouds.  Rows with any non-finite coordinate
+    or outside the reference box contribute nothing; dominated rows are
+    harmless (their boxes are subsets).
+    """
+    ref = np.asarray(ref, dtype=np.float64).reshape(-1)
+    v = np.asarray(vals, dtype=np.float64).reshape(-1, ref.shape[0])
+    keep = np.all(np.isfinite(v), axis=1) & np.all(v < ref, axis=1)
+    v = v[keep]
+    if not v.size:
+        return 0.0
+
+    def hv(rows: np.ndarray, r: np.ndarray) -> float:
+        if rows.shape[1] == 1:
+            return float(r[0] - rows[:, 0].min())
+        rows = rows[np.argsort(rows[:, 0], kind="stable")]
+        total = 0.0
+        for i in range(rows.shape[0]):
+            hi = rows[i + 1, 0] if i + 1 < rows.shape[0] else r[0]
+            width = hi - rows[i, 0]
+            if width > 0.0:
+                # slab [rows[i,0], hi): its cross-section is dominated by
+                # exactly the points entered so far
+                total += width * hv(rows[:i + 1, 1:], r[1:])
+        return total
+
+    return hv(v, ref)
+
+
 # ---------------------------------------------------------------------------
 # Device-resident streaming Pareto frontier (carried across chunks)
 # ---------------------------------------------------------------------------

@@ -96,9 +96,72 @@ class Preempted(RuntimeError):
 def _paths(out_dir: str) -> Dict[str, str]:
     return {"spec": os.path.join(out_dir, "spec.json"),
             "fabric": os.path.join(out_dir, "fabric.json"),
+            "order": os.path.join(out_dir, "order.json"),
             "leases": os.path.join(out_dir, "leases"),
             "shards": os.path.join(out_dir, "shards"),
             "workers": os.path.join(out_dir, "workers")}
+
+
+# ---------------------------------------------------------------------------
+# Advisory chunk order (surrogate-guided lease-queue priority)
+# ---------------------------------------------------------------------------
+
+
+def write_chunk_order(out_dir: str, indices: Sequence[int],
+                      fingerprint: str) -> str:
+    """Atomically write the directory's advisory claim order.
+
+    ``order.json`` holds acquisition-ranked chunk indices (best first,
+    from `surrogate.rank_chunks`) plus the spec fingerprint they were
+    computed for.  The order is SCHEDULE-ONLY: workers consult it to
+    pick what to claim next, but the lease protocol, done-set, chunk
+    hashes and the deterministic first-wins shard merge are untouched —
+    an ordered fleet's merged records are identical to an unordered
+    fleet's (the explore benchmark asserts this), it just front-loads
+    the frontier-adjacent chunks so a preempted fleet's first minutes
+    are spent on the most informative points.
+    """
+    path = _paths(out_dir)["order"]
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump({"fingerprint": fingerprint,
+                   "order": [int(i) for i in indices]}, fh)
+    os.replace(tmp, path)
+    return path
+
+
+def load_chunk_order(out_dir: str, fingerprint: str,
+                     n_chunks: int) -> Optional[List[int]]:
+    """The directory's advisory claim order, or None.
+
+    Defensive by design — the order can only ever *reorder* the scan:
+    a missing/corrupt file, a fingerprint from another spec, out-of-range
+    or duplicate indices are ignored (never fatal, a worker must not die
+    over an advisory hint), and indices the order omits are appended in
+    ascending order so every chunk is always reachable.
+    """
+    path = _paths(out_dir)["order"]
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as fh:
+            payload = json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if payload.get("fingerprint") != fingerprint:
+        return None
+    seen = set()
+    order: List[int] = []
+    try:
+        raw = [int(i) for i in payload.get("order", [])]
+    except (TypeError, ValueError):
+        return None
+    for i in raw:
+        if 0 <= i < n_chunks and i not in seen:
+            seen.add(i)
+            order.append(i)
+    order.extend(i for i in range(n_chunks) if i not in seen)
+    return order
 
 
 def shard_paths(out_dir: str, worker_id: str) -> Dict[str, str]:
@@ -500,6 +563,13 @@ class FabricWorker:
         self._fp = self.spec.fingerprint()
         self._chunks = sweeprunner.make_chunks(
             sweeprunner.enumerate_labels(self.spec), self.spec.chunk_size)
+        # advisory surrogate work order (DIR/order.json): claims are
+        # attempted acquisition-first when present and fingerprint-matched;
+        # chunk identities and the commit protocol are untouched, so the
+        # order can only change the schedule, never the merged results
+        order = load_chunk_order(out_dir, self._fp, len(self._chunks))
+        self._scan = [self._chunks[i] for i in order] \
+            if order is not None else self._chunks
         self._sp = shard_paths(out_dir, self.worker_id)
         self._lease = LeaseManager(out_dir, self.worker_id, ttl_s,
                                    injector=self._inj)
@@ -535,9 +605,10 @@ class FabricWorker:
             raise LostLease(f"leases stolen for chunks {sorted(lost)}")
 
     def _claim(self, done: Dict[int, str]) -> List:
-        """Claim up to claim_batch pending chunks (lowest index first —
-        workers racing from opposite ends would fragment the shared XLA
-        compile cache for no benefit).
+        """Claim up to claim_batch pending chunks, in scan order: the
+        advisory ``order.json`` ranking when present, else lowest index
+        first (workers racing from opposite ends would fragment the
+        shared XLA compile cache for no benefit).
 
         Stealing an expired lease re-checks the merged done-set right
         before and after the steal: the previous holder may have
@@ -547,7 +618,7 @@ class FabricWorker:
         """
         claimed = []
         fresh_done: Optional[Dict[int, str]] = None
-        for c in self._chunks:
+        for c in self._scan:
             if len(claimed) >= self.claim_batch:
                 break
             if c.index in done:
@@ -781,6 +852,7 @@ class FabricCoordinator:
                  eval_delay_s: float = 0.0,
                  max_respawns: int = 0,
                  worker_env: Optional[Dict[str, str]] = None,
+                 chunk_order: Optional[Sequence[int]] = None,
                  verbose: bool = False):
         self.spec = spec
         self.out_dir = out_dir
@@ -794,6 +866,9 @@ class FabricCoordinator:
         self.eval_delay_s = eval_delay_s
         self.max_respawns = max_respawns
         self.worker_env = worker_env
+        # advisory work order (surrogate.rank_chunks output): written to
+        # DIR/order.json before the fleet spawns; schedule-only
+        self.chunk_order = chunk_order
         self.verbose = verbose
 
     def worker_cmd(self) -> List[str]:
@@ -821,6 +896,8 @@ class FabricCoordinator:
                  frontier_only=self.frontier_only,
                  frontier_capacity=self.frontier_capacity)
         fp = self.spec.fingerprint()
+        if self.chunk_order is not None:
+            write_chunk_order(self.out_dir, self.chunk_order, fp)
         chunks = sweeprunner.make_chunks(
             sweeprunner.enumerate_labels(self.spec), self.spec.chunk_size)
         if self.frontier_only:
@@ -891,6 +968,6 @@ __all__ = [
     "DEFAULT_POLL_S", "DEFAULT_TTL_S", "FabricCoordinator",
     "FabricStats", "FabricWorker", "LeaseManager", "LostLease",
     "Preempted", "WorkerStats", "global_done", "global_frontier_done",
-    "init_dir", "load_dir", "merge_frontier", "merge_results",
-    "shard_paths",
+    "init_dir", "load_chunk_order", "load_dir", "merge_frontier",
+    "merge_results", "shard_paths", "write_chunk_order",
 ]

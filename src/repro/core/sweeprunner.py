@@ -42,7 +42,7 @@ import threading
 import time
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor, \
     as_completed
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -287,6 +287,26 @@ def make_chunks(labels: Sequence[PointLabel], size: int) -> List[Chunk]:
     size = max(int(size), 1)
     return [Chunk(i // size, tuple(labels[i:i + size]))
             for i in range(0, len(labels), size)]
+
+
+def order_chunks(chunks: Sequence[Chunk],
+                 scores: Mapping[int, float]) -> List[Chunk]:
+    """Schedule-only reordering: highest score first, index tie-break.
+
+    Chunk identities (index, labels, hash) are untouched, so spec
+    fingerprints, checkpoint done-lines and resume semantics cannot
+    change — only the order work is *attempted* in (the surrogate's
+    acquisition ranking feeds this).  Unscored / non-finite-scored
+    chunks sort last, in index order; exact score ties fall back to
+    index order, so a permutation of equal-scored inputs cannot change
+    the output.
+    """
+    def key(c: Chunk):
+        s = scores.get(c.index)
+        if s is None or not np.isfinite(s):
+            return (1, 0.0, c.index)
+        return (0, -float(s), c.index)
+    return sorted(chunks, key=key)
 
 
 # ---------------------------------------------------------------------------

@@ -356,6 +356,16 @@ class FleetCandidate:
     devices: int                    # replicas * devices_per_replica
     per_replica_qps: float
     metrics: Dict[str, float]       # traffic stats at the chosen size
+    rank_value: Optional[float] = None  # objective column under rank_by
+
+
+# objective-record column behind each `size_fleet(rank_by=...)` choice;
+# None = the default total-device-count ranking (no column needed)
+RANK_COLUMNS: Dict[str, Optional[str]] = {
+    "devices": None,
+    "cost_per_token": "cost_usd_per_token",
+    "energy_per_token": "energy_j_per_token",
+}
 
 
 @dataclasses.dataclass
@@ -406,7 +416,8 @@ def size_fleet(records: Sequence[Mapping], qps: float, *,
                slo: Mapping[str, float],
                traffic: TrafficModel = TrafficModel(),
                policy: BatchingPolicy = BatchingPolicy(),
-               top_k: int = 5, max_replicas: int = 1 << 20) -> FleetPlan:
+               top_k: int = 5, max_replicas: int = 1 << 20,
+               rank_by: str = "devices") -> FleetPlan:
     """Minimum device count serving ``qps`` under percentile SLO walls.
 
     For each swept record carrying its phase costs (``prefill_s``,
@@ -417,11 +428,32 @@ def size_fleet(records: Sequence[Mapping], qps: float, *,
     feasible ``n`` is found by doubling + bisection — no sweep point is
     ever re-evaluated.  Designs whose zero-load limit already violates an
     SLO can never be saved by adding replicas and are skipped.
+
+    ``rank_by`` picks the best/candidate ordering: ``devices`` (default,
+    total fleet size) or a per-token objective column the sweep carried —
+    ``cost_per_token`` ($/token, `cost_usd_per_token`) /
+    ``energy_per_token`` (J/token, `energy_j_per_token`), both from a
+    sweep run with ``--objectives cost,energy``.  Ranking reads the
+    already-streamed objective columns — zero re-evaluation either way;
+    candidates missing the column sort last, and a record set carrying
+    the column nowhere raises (the sweep was run without the objective).
     """
     slo = dict(slo)
     bad = set(slo) - {k[len("slo_"):] for k in SLO_KEYS}
     if bad:
         raise KeyError(f"unknown SLO keys {sorted(bad)}")
+    if rank_by not in RANK_COLUMNS:
+        raise ValueError(f"unknown rank_by {rank_by!r}; choose from "
+                         f"{sorted(RANK_COLUMNS)}")
+    rank_col = RANK_COLUMNS[rank_by]
+    if rank_col is not None:
+        sized = [r for r in records
+                 if "prefill_s" in r and "decode_step_s" in r]
+        if sized and not any(r.get(rank_col) is not None for r in sized):
+            raise ValueError(
+                f"rank_by={rank_by!r} needs the {rank_col!r} objective "
+                f"column, which no record carries; rerun the sweep with "
+                f"--objectives energy,cost")
     cands: List[FleetCandidate] = []
     n_evals = n_unsizeable = 0
     seen = 0
@@ -466,10 +498,22 @@ def size_fleet(records: Sequence[Mapping], qps: float, *,
             else:
                 lo = mid
         dev = int(rec["devices"])
+        rank_val = None
+        if rank_col is not None:
+            v = rec.get(rank_col)
+            if v is not None and math.isfinite(float(v)):
+                rank_val = float(v)
         cands.append(FleetCandidate(
             key=str(rec.get("key", "")), replicas=n, devices_per_replica=dev,
-            devices=n * dev, per_replica_qps=qps / n, metrics=st))
-    cands.sort(key=lambda c: (c.devices, c.replicas, c.key))
+            devices=n * dev, per_replica_qps=qps / n, metrics=st,
+            rank_value=rank_val))
+    if rank_col is None:
+        cands.sort(key=lambda c: (c.devices, c.replicas, c.key))
+    else:
+        # objective-ranked: missing columns last, devices as tie-break
+        cands.sort(key=lambda c: (c.rank_value is None,
+                                  c.rank_value if c.rank_value is not None
+                                  else 0.0, c.devices, c.replicas, c.key))
     return FleetPlan(qps=float(qps), slo=slo,
                      best=cands[0] if cands else None,
                      candidates=cands[:max(top_k, 0)], n_records=seen,

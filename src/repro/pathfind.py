@@ -46,6 +46,27 @@ Subcommands:
           flags; a comma list (e.g. --scenario-param
           prefill_chunk=256,512) declares a sweep axis.
 
+  explore surrogate-driven exploration (repro.core.surrogate): instead of
+          exhausting the cross-product, fit an ensemble of small jit'd
+          MLPs (mean + epistemic spread + feasibility head) on the points
+          evaluated so far and spend the real-evaluation budget on the
+          top-acquisition chunks (UCB / expected-Pareto-improvement over
+          the canonical-signed objectives) until the frontier stagnates
+          or the budget runs out.  The output directory is a normal
+          partial sweep (spec.json / results.jsonl / checkpoint.jsonl) —
+          resumable, and readable by size/cooptimize:
+
+              PYTHONPATH=src python -m repro.pathfind explore \
+                  --arch qwen1.5-0.5b --mesh 2x2 --mesh 4x4 \
+                  --logic N7,N5 --scale 0.9,1.1 \
+                  --eval-frac 0.25 --out sweeps/explore
+
+          With --order-dir DIR the surrogate instead ranks a fabric
+          sweep directory's chunks and writes DIR/order.json — an
+          advisory claim order that makes `sweep --workers N` fleets
+          evaluate frontier-adjacent chunks first (results are
+          byte-identical to an unordered run; only the schedule moves).
+
   size    inverse fleet sizing over a swept design space: the minimum
           device count serving --qps under percentile SLO walls, by
           doubling+bisection on the closed-form traffic model — swept
@@ -54,6 +75,11 @@ Subcommands:
               PYTHONPATH=src python -m repro.pathfind size \
                   --from sweeps/traffic --qps 24 \
                   --slo-ttft-p99 2.0 --slo-tpot-p50 0.05
+
+          --rank-by cost_per_token | energy_per_token re-ranks the
+          feasible fleet plans by the PR8 objective columns already in
+          the swept records (zero re-evaluation; needs a sweep run with
+          --objectives energy,cost)
 
   plan    the CrossFlow -> runtime bridge: best runtime-realizable strategy
           for one (arch, cell, mesh) on the TPU-v5e micro-arch:
@@ -335,6 +361,66 @@ def _parser() -> argparse.ArgumentParser:
                          "(default DIR/refined.jsonl)")
     co.add_argument("--csv", default=None, help="also write CSV here")
 
+    ex = sub.add_parser("explore",
+                        help="surrogate-driven exploration: spend a "
+                             "real-evaluation budget on top-acquisition "
+                             "chunks instead of the full cross-product")
+    _add_axis_flags(ex)
+    _add_scenario_flags(ex)
+    ex.add_argument("--out", default=None,
+                    help="stream evaluated chunks + checkpoints into this "
+                         "directory (a normal partial sweep; enables "
+                         "--resume)")
+    ex.add_argument("--resume", action="store_true",
+                    help="continue from --out (spec loaded from "
+                         "DIR/spec.json; committed chunks are never "
+                         "re-evaluated and keep training the surrogate)")
+    ex.add_argument("--chunk-size", type=int, default=8,
+                    help="design points per evaluated chunk (default 8; "
+                         "acquisition ranks whole chunks)")
+    ex.add_argument("--train-from", default=None, metavar="DIR",
+                    help="seed the surrogate with a finished/partial "
+                         "sweep directory's records (read via the "
+                         "torn-line-tolerant JSONL reader; they count "
+                         "toward the training floor, not the budget)")
+    ex.add_argument("--eval-budget", type=int, default=None,
+                    help="hard ceiling on real-evaluated points "
+                         "(default: --eval-frac of the grid)")
+    ex.add_argument("--eval-frac", type=float, default=0.25,
+                    help="budget as a fraction of the full grid when "
+                         "--eval-budget is not given (default 0.25)")
+    ex.add_argument("--init-chunks", type=int, default=4,
+                    help="evenly-spread seed chunks before the first fit "
+                         "(default 4)")
+    ex.add_argument("--batch-chunks", type=int, default=4,
+                    help="top-acquisition chunks evaluated per round "
+                         "(default 4)")
+    ex.add_argument("--stagnation", type=int, default=3,
+                    help="stop after N rounds with an unchanged frontier "
+                         "(default 3)")
+    ex.add_argument("--acquisition", default="ucb",
+                    choices=["ucb", "epi"],
+                    help="chunk-ranking rule: ucb = optimistic dominance "
+                         "margin; epi = expected Pareto improvement")
+    ex.add_argument("--kappa", type=float, default=1.0,
+                    help="UCB exploration weight (default 1.0)")
+    ex.add_argument("--ensemble", type=int, default=4,
+                    help="surrogate ensemble size (default 4)")
+    ex.add_argument("--hidden", type=int, default=32,
+                    help="surrogate hidden width (default 32)")
+    ex.add_argument("--steps", type=int, default=300,
+                    help="surrogate fit steps per round (default 300)")
+    ex.add_argument("--lr", type=float, default=0.01)
+    ex.add_argument("--seed", type=int, default=0)
+    ex.add_argument("--csv", default=None,
+                    help="also write the explored frontier CSV here")
+    ex.add_argument("--order-dir", default=None, metavar="DIR",
+                    help="rank DIR's fabric chunks with the surrogate "
+                         "and write DIR/order.json (advisory worker "
+                         "claim order) instead of evaluating anything; "
+                         "trains on DIR's committed shards plus "
+                         "--train-from")
+
     sz = sub.add_parser("size",
                         help="inverse fleet sizing: minimum device count "
                              "serving --qps under percentile SLO walls")
@@ -357,6 +443,13 @@ def _parser() -> argparse.ArgumentParser:
                     help="p99 TPOT wall in seconds")
     sz.add_argument("--top-k", type=int, default=5,
                     help="feasible designs to report (default 5)")
+    sz.add_argument("--rank-by", default="devices",
+                    choices=["devices", "cost_per_token",
+                             "energy_per_token"],
+                    help="fleet-plan ranking: devices (default) or a "
+                         "PR8 objective column already in the swept "
+                         "records ($/token, J/token) — zero "
+                         "re-evaluation")
     sz.add_argument("--out", default=None,
                     help="stream the fresh sweep's results + checkpoints "
                          "into this directory (axes mode only)")
@@ -855,7 +948,8 @@ def _cmd_size(args) -> int:
               "0.5, --slo-tpot-p50 0.05, ...)", file=sys.stderr)
         return 2
     plan = traffic.size_fleet(records, args.qps, slo=slo, traffic=tm,
-                              policy=pol, top_k=args.top_k)
+                              policy=pol, top_k=args.top_k,
+                              rank_by=args.rank_by)
     walls = " ".join(f"{k}<={v:g}s" for k, v in sorted(slo.items()))
     print(f"# size: {plan.n_records} serving-traffic records, "
           f"{plan.n_sized} sizeable under {walls} at {plan.qps:g} qps "
@@ -865,19 +959,160 @@ def _cmd_size(args) -> int:
         print("# no swept design meets the SLO walls at any replica "
               "count", file=sys.stderr)
         return 1
-    print("devices,replicas,devices_per_replica,per_replica_qps,"
-          "ttft_p99_s,tpot_p50_s,util,key")
+    rank_col = traffic.RANK_COLUMNS[args.rank_by]
+    header = ("devices,replicas,devices_per_replica,per_replica_qps,"
+              "ttft_p99_s,tpot_p50_s,util,key")
+    if rank_col is not None:       # default devices output stays identical
+        header += f",{rank_col}"
+    print(header)
     for c in plan.candidates:
         m = c.metrics
-        print(f"{c.devices},{c.replicas},{c.devices_per_replica},"
-              f"{c.per_replica_qps:.4g},{m['ttft_p99_s']:.4g},"
-              f"{m['tpot_p50_s']:.4g},{m['util']:.3f},{c.key}")
+        row = (f"{c.devices},{c.replicas},{c.devices_per_replica},"
+               f"{c.per_replica_qps:.4g},{m['ttft_p99_s']:.4g},"
+               f"{m['tpot_p50_s']:.4g},{m['util']:.3f},{c.key}")
+        if rank_col is not None:
+            row += f",{c.rank_value:.6g}" if c.rank_value is not None \
+                else ","
+        print(row)
     b = plan.best
     print(f"# best: {b.devices} devices = {b.replicas} replicas x "
           f"{b.devices_per_replica} ({b.key}) -> ttft_p99 "
           f"{b.metrics['ttft_p99_s']:.4g}s, tpot_p50 "
           f"{b.metrics['tpot_p50_s']:.4g}s at {b.per_replica_qps:.4g} "
           f"qps/replica", file=sys.stderr)
+    return 0
+
+
+def _cmd_explore(args) -> int:
+    """Surrogate + acquisition-driven exploration (repro.core.surrogate)."""
+    from repro.core import surrogate, sweeprunner
+
+    cfg = surrogate.ExploreConfig(
+        eval_budget=args.eval_budget, eval_frac=args.eval_frac,
+        init_chunks=args.init_chunks, batch_chunks=args.batch_chunks,
+        stagnation=args.stagnation, acquisition=args.acquisition,
+        kappa=args.kappa,
+        surrogate=surrogate.SurrogateConfig(
+            ensemble=args.ensemble, hidden=args.hidden, steps=args.steps,
+            lr=args.lr, seed=args.seed))
+
+    train_records = None
+    if args.train_from:
+        _, train_records = surrogate.load_training_records(args.train_from)
+        if not train_records:
+            print(f"error: no committed records in {args.train_from}",
+                  file=sys.stderr)
+            return 2
+        print(f"# surrogate: seeded with {len(train_records)} records "
+              f"from {args.train_from}", file=sys.stderr)
+
+    # axis/scenario flags are meaningless when the spec comes from a
+    # directory; refuse them instead of silently ignoring them
+    spec_from_dir = args.resume or args.order_dir
+    if spec_from_dir:
+        src = args.order_dir or args.out
+        ignored = [name for name, val, default in (
+            ("--arch", args.arch, None), ("--cell", args.cell, None),
+            ("--mesh", args.mesh, None), ("--logic", args.logic, ["N7"]),
+            ("--hbm", args.hbm, ["HBM2E"]),
+            ("--net", args.net, ["IB-NDR-X8"]),
+            ("--scale", args.scale, None), ("--area", args.area, None),
+            ("--power", args.power, None), ("--slo", args.slo, None),
+            ("--scenario", args.scenario, "train"),
+            ("--chunk-size", args.chunk_size, 8),
+            ("--tilings", args.tilings, 8),
+            ("--profile", args.profile, None),
+            ("--scenario-param", args.scenario_param, None),
+            ("--objectives", args.objectives, None),
+        ) if val != default]
+        if ignored:
+            print(f"error: the spec is loaded from {src}/spec.json; drop "
+                  f"these flags (they would be ignored): "
+                  f"{', '.join(ignored)}", file=sys.stderr)
+            return 2
+
+    if args.order_dir:
+        # ranking-only mode: no real evaluations, just DIR/order.json
+        if args.out or args.resume:
+            print("error: --order-dir ranks an existing fabric "
+                  "directory; it is incompatible with --out/--resume",
+                  file=sys.stderr)
+            return 2
+        from repro.core import sweepfabric
+        _, fabric = sweepfabric.load_dir(args.order_dir)
+        if fabric.get("mode") == "frontier":
+            committed, _, _ = sweepfabric.merge_frontier(args.order_dir)
+        else:
+            committed, _ = sweepfabric.merge_results(args.order_dir)
+        rows = list(train_records or []) + list(committed)
+        if not rows:
+            print(f"error: nothing to train on — {args.order_dir} has no "
+                  f"committed chunks yet; seed with --train-from DIR",
+                  file=sys.stderr)
+            return 2
+        order = surrogate.order_fabric_dir(args.order_dir, rows, cfg=cfg)
+        print(f"# explore: wrote advisory order for {len(order)} chunks "
+              f"-> {args.order_dir}/order.json (trained on {len(rows)} "
+              f"records); workers claim frontier-adjacent chunks first",
+              file=sys.stderr)
+        head = ",".join(str(i) for i in order[:8])
+        print(f"# explore: first claims: {head}"
+              + (",..." if len(order) > 8 else ""), file=sys.stderr)
+        return 0
+
+    if args.resume:
+        if not args.out:
+            print("error: --resume requires --out DIR", file=sys.stderr)
+            return 2
+        spec, _ = surrogate.load_training_records(args.out)
+    else:
+        if not (args.arch and args.mesh):
+            print("error: explore needs --arch and --mesh (or --resume "
+                  "with --out / --order-dir DIR)", file=sys.stderr)
+            return 2
+        profile_dict = None
+        if args.profile is not None:
+            from repro.calibrate import profiles as profiles_lib
+            profile_dict = profiles_lib.load_profile(args.profile).to_dict()
+        spec = sweeprunner.SweepSpec(
+            arches=tuple(args.arch),
+            mesh_shapes=tuple(tuple(m) for m in args.mesh),
+            scenario=args.scenario, cells=tuple(args.cell or ()),
+            logic_nodes=tuple(args.logic), hbms=tuple(args.hbm),
+            nets=tuple(args.net),
+            budget_scales=tuple(float(s) for s in args.scale)
+            if args.scale else (1.0,),
+            area_mm2=args.area, power_w=args.power, slo_s=args.slo,
+            n_tilings=args.tilings, chunk_size=args.chunk_size,
+            profile=profile_dict,
+            scenario_params=_scenario_params_dict(args.scenario_param)
+            or None,
+            objectives=tuple(args.objectives) if args.objectives else None)
+
+    stats = surrogate.explore(spec, out_dir=args.out, cfg=cfg,
+                              resume=args.resume,
+                              train_records=train_records, verbose=True)
+    scn = spec.scenario_spec.variants()[0].resolve()
+    csv_text = sweeprunner.to_csv(stats.frontier, scn)
+    print(csv_text)
+    if args.csv:
+        with open(args.csv, "w") as fh:
+            fh.write(csv_text + "\n")
+        print(f"# wrote {len(stats.frontier)} frontier points to "
+              f"{args.csv}", file=sys.stderr)
+    frac = stats.n_points_evaluated / max(stats.n_points_total, 1)
+    print(f"# explore[{scn.name}] acq={cfg.acquisition}: evaluated "
+          f"{stats.n_points_evaluated}/{stats.n_points_total} points "
+          f"({frac:.0%}) in {stats.n_chunks_evaluated} chunks "
+          f"(+{stats.n_chunks_skipped} resumed) over {stats.rounds} "
+          f"rounds in {stats.elapsed_s:.1f}s; stop={stats.stop}",
+          file=sys.stderr)
+    print(f"# frontier: {len(stats.frontier)} non-dominated points over "
+          f"{'/'.join(stats.objectives)}", file=sys.stderr)
+    if stats.out_dir:
+        print(f"# continue with `python -m repro.pathfind explore --out "
+              f"{stats.out_dir} --resume`, or exhaust the grid with "
+              f"`sweep --out {stats.out_dir} --resume`", file=sys.stderr)
     return 0
 
 
@@ -1028,6 +1263,7 @@ def main(argv=None) -> int:
                 "plan": _cmd_plan,
                 "soe": _cmd_soe, "calibrate": _cmd_calibrate,
                 "validate": _cmd_validate, "size": _cmd_size,
+                "explore": _cmd_explore,
                 "cooptimize": _cmd_cooptimize}[args.cmd](args)
     except ModuleNotFoundError as e:
         print(f"error: unknown arch (no config module): {e.name}",

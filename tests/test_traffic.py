@@ -288,6 +288,63 @@ def test_size_fleet_respects_variant_overrides():
     assert c_small.chunks_per_req > c_big.chunks_per_req
 
 
+def test_size_fleet_rank_by_objective_columns():
+    """rank_by reads the sweep's already-streamed PR8 objective columns —
+    the cheapest-per-token design wins without a single re-evaluation."""
+    tm = traffic.TrafficModel(qps=1.0, prompt_mean=1024.0,
+                              output_mean=64.0)
+    po = traffic.BatchingPolicy(prefill_chunk=512.0)
+    slo = {"ttft_p99": 30.0, "tpot_p50": 0.2}
+    # "small" needs fewer devices but burns more $ and J per token
+    small = dict(_mk_record("small", 2, 0.5, 0.02),
+                 cost_usd_per_token=3e-6, energy_j_per_token=9.0)
+    big = dict(_mk_record("big", 8, 0.3, 0.01),
+               cost_usd_per_token=1e-6, energy_j_per_token=2.0)
+    records = [small, big]
+
+    default = traffic.size_fleet(records, 2.0, slo=slo, traffic=tm,
+                                 policy=po)
+    assert default.best.key == "small"
+    assert all(c.rank_value is None for c in default.candidates)
+
+    by_cost = traffic.size_fleet(records, 2.0, slo=slo, traffic=tm,
+                                 policy=po, rank_by="cost_per_token")
+    assert by_cost.best.key == "big"
+    assert by_cost.best.rank_value == pytest.approx(1e-6)
+
+    by_energy = traffic.size_fleet(records, 2.0, slo=slo, traffic=tm,
+                                   policy=po, rank_by="energy_per_token")
+    assert by_energy.best.key == "big"
+    assert by_energy.best.rank_value == pytest.approx(2.0)
+
+    # objective ranking reorders, never resizes: replica counts match
+    sizes = {c.key: (c.replicas, c.devices) for c in default.candidates}
+    assert {c.key: (c.replicas, c.devices)
+            for c in by_cost.candidates} == sizes
+
+
+def test_size_fleet_rank_by_missing_column_and_unknown_key():
+    tm = traffic.TrafficModel(qps=1.0, prompt_mean=1024.0,
+                              output_mean=64.0)
+    po = traffic.BatchingPolicy()
+    slo = {"ttft_p99": 30.0}
+    with pytest.raises(ValueError, match="unknown rank_by"):
+        traffic.size_fleet([], 1.0, slo=slo, traffic=tm, policy=po,
+                           rank_by="carbon")
+    # a sweep run without --objectives energy,cost carries the column
+    # nowhere -> actionable error instead of a silently arbitrary order
+    with pytest.raises(ValueError, match="--objectives energy,cost"):
+        traffic.size_fleet([_mk_record("a", 4, 0.5, 0.02)], 1.0, slo=slo,
+                           traffic=tm, policy=po, rank_by="cost_per_token")
+    # but a *partially* populated column ranks: carriers first, rest last
+    recs = [dict(_mk_record("c", 4, 0.5, 0.02), cost_usd_per_token=5e-6),
+            _mk_record("d", 4, 0.5, 0.02)]
+    plan = traffic.size_fleet(recs, 1.0, slo=slo, traffic=tm, policy=po,
+                              rank_by="cost_per_token")
+    assert [c.key for c in plan.candidates] == ["c", "d"]
+    assert plan.candidates[1].rank_value is None
+
+
 # ----------------------------------------------------- ScenarioSpec API
 def test_scenariospec_roundtrip_and_variants():
     spec = scenarios.ScenarioSpec(
