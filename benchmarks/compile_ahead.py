@@ -1,0 +1,219 @@
+"""Compile-ahead service + cross-design bucketed dispatch (ISSUE-10).
+
+Cold-start sweep throughput on a many-design grid: every distinct mesh
+is its own design group, so the PR9 lazy path pays one XLA compile *on
+the device stage's critical path* per group, while the PR10 path
+(a) buckets designs that trace to the same canonical jaxpr into one
+compiled megabatch parameterized by per-design coefficient packs, and
+(b) AOT-compiles upcoming superbatches' executables off-path.
+
+Both variants run in their own fresh subprocess (cold jit caches,
+`clear_compiled_caches` on entry, persistent XLA cache disabled) over
+the identical `SweepSpec`.
+
+Asserts (ISSUE-10 acceptance):
+  * bucketed+compile-ahead >= 2x cold-start evaluated-points/sec vs the
+    lazy path on a >= 48-design-group grid (relax with
+    COMPILE_AHEAD_MIN_SPEEDUP for CI's noisy shared hosts; shrink the
+    grid with COMPILE_AHEAD_GROUPS for the smoke lane; each variant is
+    best-of-COMPILE_AHEAD_BEST_OF fresh processes, default 2);
+  * bucketed pipeline records are BIT-identical to the serial backend
+    (both dispatch the very same canonical executables);
+  * bucketed records match the lazy unbucketed path at rtol 1e-5 (the
+    lazy path bakes design constants into each executable, so XLA is
+    free to constant-fold in a different order — ~1e-7 relative).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, List
+
+MARK = "COMPILE_AHEAD_RESULT:"
+
+
+def _min_speedup() -> float:
+    return float(os.environ.get("COMPILE_AHEAD_MIN_SPEEDUP", "2.0"))
+
+
+def _n_groups() -> int:
+    return int(os.environ.get("COMPILE_AHEAD_GROUPS", "48"))
+
+
+def _best_of() -> int:
+    # cold-start wall times on a shared host are noisy in one direction
+    # (slow outliers); best-of-N fresh processes per variant removes them
+    return int(os.environ.get("COMPILE_AHEAD_BEST_OF", "2"))
+
+
+def _spec():
+    from repro.core import sweeprunner
+    # one design group per mesh: 8 x 6 = 48 distinct shapes by default.
+    # all axes >= 2: a mesh axis of extent 1 drops its collective from
+    # the traced graph, which is a *different* jaxpr structure (its own
+    # bucket) — the interior grid shares one canonical executable, which
+    # is the regime the bucketing layer exists for
+    meshes = tuple((a, b) for a in (2, 4, 8, 16, 32, 64, 128, 256)
+                   for b in (2, 4, 8, 16, 32, 64))[:_n_groups()]
+    return sweeprunner.SweepSpec(
+        arches=("qwen1.5-0.5b",), mesh_shapes=meshes, scenario="train",
+        budget_scales=(0.85, 0.95, 1.05, 1.15), n_tilings=4,
+        chunk_size=16)
+
+
+def _records_bitwise_equal(a: List[Dict], b: List[Dict]) -> bool:
+    if {r["key"] for r in a} != {r["key"] for r in b}:
+        return False
+    by_key = {r["key"]: r for r in b}
+    for ra in a:
+        rb = by_key[ra["key"]]
+        for f in set(ra) | set(rb):
+            va, vb = ra.get(f), rb.get(f)
+            if isinstance(va, float) and isinstance(vb, float):
+                if math.isnan(va) and math.isnan(vb):
+                    continue
+                if va != vb:
+                    return False
+            elif va != vb:
+                return False
+    return True
+
+
+def measure(kind: str) -> Dict:
+    from repro.core import pathfinder, sweeprunner
+
+    assert kind in ("lazy", "bucketed"), kind
+    spec = _spec()
+    n_points = len(sweeprunner.enumerate_labels(spec))
+    pathfinder.clear_compiled_caches()
+    kwargs = dict(bucketing=False, compile_ahead=0) if kind == "lazy" \
+        else {}
+    c0 = pathfinder.compile_cache_stats()
+    t0 = time.perf_counter()
+    # one superbatch covers the default grid: every bucket sees a single
+    # padded batch shape, so the cold run pays exactly one compile per
+    # bucket (smaller superbatches split buckets across packs with
+    # different row counts -> extra shape signatures on both variants)
+    stats = sweeprunner.SweepRunner(
+        spec, backend="pipeline", cache=None, superbatch=192,
+        **kwargs).run()
+    elapsed = time.perf_counter() - t0
+    c1 = pathfinder.compile_cache_stats()
+    assert stats.complete and stats.n_points_evaluated == n_points
+    records = stats.records
+
+    out = {
+        "kind": kind,
+        "n_points": n_points,
+        "elapsed_s": elapsed,
+        "pps": n_points / elapsed,
+        "compile_seconds": c1["compile_seconds"] - c0["compile_seconds"],
+        "stall_seconds": c1["stall_seconds"] - c0["stall_seconds"],
+    }
+    if kind == "bucketed":
+        # the serial backend's BatchedEvaluator registers the SAME
+        # ("skel", key) design vectors and dispatches the same canonical
+        # bucket executables, so parity here must be exact to the bit
+        serial = sweeprunner.SweepRunner(spec, backend="serial",
+                                         cache=None).run()
+        out["serial_bitwise_ok"] = _records_bitwise_equal(
+            records, serial.records)
+    out["records"] = [sweeprunner.json_safe(r) for r in records]
+    return out
+
+
+def _close(a, b, rtol=1e-5) -> bool:
+    if isinstance(a, float) and isinstance(b, float) \
+            and math.isfinite(a) and math.isfinite(b):
+        return abs(a - b) <= rtol * max(abs(a), abs(b), 1e-300)
+    return a == b
+
+
+def _records_close(a: List[Dict], b: List[Dict]) -> bool:
+    if {r["key"] for r in a} != {r["key"] for r in b}:
+        return False
+    by_key = {r["key"]: r for r in b}
+    return all(_close(ra.get(f), by_key[ra["key"]].get(f))
+               for ra in a for f in set(ra) | set(by_key[ra["key"]]))
+
+
+def _run_variant(kind: str) -> Dict:
+    """One cold measurement in a fresh process: empty jit caches, no
+    persistent XLA cache, same forced host device count as the parent."""
+    n_dev = min(4, os.cpu_count() or 1)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_dev}"
+                        ).strip()
+    env.pop("JAX_COMPILATION_CACHE_DIR", None)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.compile_ahead",
+         "--measure", kind],
+        env=env, capture_output=True, text=True, cwd=root)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"compile_ahead[{kind}] measurement failed "
+            f"(exit {proc.returncode}):\n{proc.stdout}\n{proc.stderr}")
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith(MARK))
+    return json.loads(line[len(MARK):])
+
+
+def main(verbose: bool = True) -> Dict:
+    lazy = max((_run_variant("lazy") for _ in range(_best_of())),
+               key=lambda r: r["pps"])
+    cand = max((_run_variant("bucketed") for _ in range(_best_of())),
+               key=lambda r: r["pps"])
+    speedup = cand["pps"] / lazy["pps"]
+    parity_vs_lazy = _records_close(cand["records"], lazy["records"])
+    r = {
+        "n_groups": _n_groups(),
+        "n_points": cand["n_points"],
+        "lazy_pps": lazy["pps"],
+        "bucketed_pps": cand["pps"],
+        "speedup": speedup,
+        "min_speedup": _min_speedup(),
+        "lazy_compile_s": lazy["compile_seconds"],
+        "bucketed_compile_s": cand["compile_seconds"],
+        "bucketed_stall_s": cand["stall_seconds"],
+        "serial_bitwise_ok": bool(cand["serial_bitwise_ok"]),
+        "parity_vs_lazy_ok": parity_vs_lazy,
+    }
+    if verbose:
+        print(f"compile_ahead: {r['n_groups']} design groups, "
+              f"{r['n_points']} points, cold fresh-process runs")
+        print(f"  lazy (PR9)     : {r['lazy_pps']:8.2f} points/s "
+              f"({r['lazy_compile_s']:.0f}s compiling on-path)")
+        print(f"  bucketed+AOT   : {r['bucketed_pps']:8.2f} points/s "
+              f"-> {speedup:.1f}x (floor {r['min_speedup']:g}x; "
+              f"{r['bucketed_compile_s']:.0f}s compiling, "
+              f"{r['bucketed_stall_s']:.0f}s stalled)")
+        print(f"  parity         : serial bit-identical "
+              f"({'ok' if r['serial_bitwise_ok'] else 'FAIL'}), "
+              f"vs lazy rtol 1e-5 "
+              f"({'ok' if parity_vs_lazy else 'FAIL'})")
+    assert r["serial_bitwise_ok"], \
+        "bucketed pipeline records diverged from the serial backend"
+    assert parity_vs_lazy, \
+        "bucketed records diverged from the lazy path beyond rtol 1e-5"
+    assert speedup >= _min_speedup(), (
+        f"compile-ahead + bucketing only {speedup:.2f}x over the lazy "
+        f"path (ISSUE-10 acceptance: >= {_min_speedup():g}x)")
+    return r
+
+
+if __name__ == "__main__":
+    if "--measure" in sys.argv:
+        kind = sys.argv[sys.argv.index("--measure") + 1]
+        print(MARK + json.dumps(measure(kind)))
+    else:
+        main()

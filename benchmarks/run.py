@@ -128,6 +128,17 @@ def _bench_sweep_fabric() -> BenchResult:
             f"parity_ok={int(r['parity_ok'])}"), r
 
 
+def _bench_compile_ahead() -> BenchResult:
+    """Compile-ahead service + bucketed dispatch vs lazy path (ISSUE-10)."""
+    from benchmarks import compile_ahead
+    r = compile_ahead.main(verbose=False)
+    return (f"speedup={r['speedup']:.1f}x"
+            f"(>={r['min_speedup']:g}x,{r['n_groups']}groups);"
+            f"bucketed_pps={r['bucketed_pps']:.1f};"
+            f"serial_bitwise_ok={int(r['serial_bitwise_ok'])};"
+            f"parity_ok={int(r['parity_vs_lazy_ok'])}"), r
+
+
 def _bench_cooptimize() -> BenchResult:
     """Sweep -> refine cross-stack co-optimization (ISSUE-3 tentpole)."""
     from benchmarks import cooptimize_refine
@@ -211,6 +222,7 @@ BENCHES: Dict[str, Callable[[], BenchResult]] = {
     "sweep_shard": _bench_sweep_shard,
     "sweep_pipeline": _bench_sweep_pipeline,
     "sweep_fabric": _bench_sweep_fabric,
+    "compile_ahead": _bench_compile_ahead,
     "cooptimize_refine": _bench_cooptimize,
     "serving_traffic": _bench_serving_traffic,
     "sweep_objectives": _bench_sweep_objectives,
@@ -281,6 +293,7 @@ _KEY_RATIOS = {
     "sweep_shard": (("speedup_vs_single",), "sweep_shard_speedup"),
     "sweep_pipeline": (("speedup",), "sweep_pipeline_speedup"),
     "sweep_fabric": (("speedup",), "sweep_fabric_speedup"),
+    "compile_ahead": (("speedup",), "compile_ahead_speedup"),
     "calibration_gain": (("mre_improvement",), "calibration_mre_gain"),
     "explore_efficiency": (("train", "hv_ratio"), "explore_hv_train"),
 }

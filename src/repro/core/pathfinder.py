@@ -39,7 +39,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import os
 import threading
+import time
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
@@ -306,20 +308,104 @@ def clear_prediction_cache() -> None:
 # actual XLA compile happens at first call, outside the lock).
 _COMPILED: "collections.OrderedDict[tuple, Callable]" = \
     collections.OrderedDict()
-_COMPILED_MAXSIZE = 128
+_COMPILED_MAXSIZE = int(os.environ.get("REPRO_COMPILED_MAXSIZE", "128"))
 _COMPILED_LOCK = threading.Lock()
+# Pin counts per store key.  A pinned entry is never evicted by the LRU
+# sweep — the AOT compile service pins a key from the moment it is queued
+# until its first dispatch, so an executable compiled off-path can't be
+# popped (and silently recompiled on-path) between build and use.  The
+# store may transiently exceed maxsize while pins are held.
+_COMPILED_PINS: Dict[tuple, int] = {}
 # hit/miss counts over EVERY compiled-function store that goes through
 # `_compiled_get_or_create` (skeleton evaluators, budget fns, the pipelined
 # design/frontier fns).  A miss = one wrapped fn built, i.e. one XLA
 # compile per input shape at first call; the sweep runner surfaces the
 # per-run delta so compile churn is visible from the CLI summary line.
-_COMPILE_STATS = {"hits": 0, "misses": 0}
+# `compile_seconds` accumulates wall time spent inside XLA lower+compile
+# (wherever it runs: AOT service threads or the dispatch path);
+# `stall_seconds` counts only the time a *dispatching* caller was blocked
+# waiting for a compile — the number compile-ahead exists to drive to zero.
+_COMPILE_STATS = {"hits": 0, "misses": 0,
+                  "compile_seconds": 0.0, "stall_seconds": 0.0}
 
 
-def compile_cache_stats() -> Dict[str, int]:
-    """Process-wide compiled-evaluator cache hit/miss counters."""
+def compile_cache_stats() -> Dict[str, float]:
+    """Process-wide compiled-evaluator cache counters.
+
+    ``hits``/``misses`` count store lookups (ints); ``compile_seconds`` /
+    ``stall_seconds`` are cumulative wall-clock floats (see comments on
+    `_COMPILE_STATS`).
+    """
     with _COMPILED_LOCK:
         return dict(_COMPILE_STATS)
+
+
+def set_compiled_maxsize(n: int) -> int:
+    """Set the compiled-function LRU capacity; returns the previous value.
+
+    Also configurable at process start via env ``REPRO_COMPILED_MAXSIZE``.
+    Pinned (AOT-queued / in-flight) entries are exempt from eviction, so
+    the store may transiently hold more than ``n`` entries.
+    """
+    global _COMPILED_MAXSIZE
+    if n <= 0:
+        raise ValueError(f"compiled maxsize must be positive, got {n}")
+    with _COMPILED_LOCK:
+        prev, _COMPILED_MAXSIZE = _COMPILED_MAXSIZE, n
+        _evict_locked(_COMPILED)
+    return prev
+
+
+def compiled_maxsize() -> int:
+    return _COMPILED_MAXSIZE
+
+
+def pin_compiled(key: tuple) -> None:
+    """Protect `key` from LRU eviction until the matching `unpin_compiled`.
+
+    Reentrant (a pin count is kept).  Pinning a key that is not in the
+    store yet is allowed — the AOT service pins at submit time, before the
+    wrapped function has been built.
+    """
+    with _COMPILED_LOCK:
+        _COMPILED_PINS[key] = _COMPILED_PINS.get(key, 0) + 1
+
+
+def unpin_compiled(key: tuple) -> None:
+    with _COMPILED_LOCK:
+        n = _COMPILED_PINS.get(key, 0) - 1
+        if n > 0:
+            _COMPILED_PINS[key] = n
+        else:
+            _COMPILED_PINS.pop(key, None)
+        _evict_locked(_COMPILED)
+
+
+def _evict_locked(store: "collections.OrderedDict") -> None:
+    # Caller holds _COMPILED_LOCK.  Evict oldest unpinned entries until the
+    # store fits; pinned entries are skipped (and keep their LRU position).
+    excess = len(store) - _COMPILED_MAXSIZE
+    if excess <= 0:
+        return
+    for key in list(store):
+        if excess <= 0:
+            break
+        if _COMPILED_PINS.get(key):
+            continue
+        del store[key]
+        excess -= 1
+
+
+def _add_compile_seconds(dt: float, stalled: bool) -> None:
+    with _COMPILED_LOCK:
+        _COMPILE_STATS["compile_seconds"] += dt
+        if stalled:
+            _COMPILE_STATS["stall_seconds"] += dt
+
+
+def _add_stall_seconds(dt: float) -> None:
+    with _COMPILED_LOCK:
+        _COMPILE_STATS["stall_seconds"] += dt
 
 
 def _compiled_get_or_create(store: "collections.OrderedDict", key: tuple,
@@ -333,17 +419,118 @@ def _compiled_get_or_create(store: "collections.OrderedDict", key: tuple,
         fn = build()
         store[key] = fn
         _COMPILE_STATS["misses"] += 1
-        while len(store) > _COMPILED_MAXSIZE:
-            store.popitem(last=False)
+        _evict_locked(store)
         return fn
+
+
+class CompiledEntry:
+    """A `_COMPILED` store value that can hold ahead-of-time executables.
+
+    Wraps a lazy jit/pmap transform (``wrapper``) plus a table of
+    `.lower().compile()`-ed executables keyed by input shape signature.
+    Dispatch prefers a finished AOT executable; if a compile for the
+    needed signature is in flight (AOT service), the caller blocks on it
+    (counted as stall_seconds) instead of compiling a duplicate; on a
+    plain miss it compiles inline (counted as compile+stall) — the
+    graceful-fallback lazy path.  One compile per (key, signature) per
+    process: `compile_for` dedupes via per-signature events.
+    """
+
+    def __init__(self, key: tuple, wrapper: Callable):
+        self.key = key
+        self.wrapper = wrapper
+        self.aot: Dict[tuple, Callable] = {}
+        self._inflight: Dict[tuple, threading.Event] = {}
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def signature(args: tuple) -> tuple:
+        leaves = jax.tree_util.tree_leaves(args)
+        return tuple((tuple(l.shape), str(np.asarray(l).dtype) if not
+                      hasattr(l, "dtype") else str(l.dtype)) for l in leaves)
+
+    def _avals(self, args: tuple):
+        return jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), args)
+
+    def compile_for(self, args: tuple, stalled: bool = False) -> None:
+        """Ensure an executable exists for the shape signature of `args`.
+
+        `args` may be concrete arrays or `jax.ShapeDtypeStruct`s.  Safe to
+        call from any thread; concurrent calls for one signature collapse
+        into a single compile (the rest wait).
+        """
+        sig = self.signature(args)
+        with self._lock:
+            if sig in self.aot:
+                return
+            ev = self._inflight.get(sig)
+            if ev is None:
+                ev = self._inflight[sig] = threading.Event()
+                owner = True
+            else:
+                owner = False
+        if not owner:
+            t0 = time.perf_counter()
+            ev.wait()
+            if stalled:
+                _add_stall_seconds(time.perf_counter() - t0)
+            return
+        t0 = time.perf_counter()
+        try:
+            exe = self.wrapper.lower(*self._avals(args)).compile()
+            self.aot[sig] = exe
+            _add_compile_seconds(time.perf_counter() - t0, stalled)
+        except Exception:
+            # Graceful fallback: leave no executable; __call__ will run the
+            # lazy wrapper (which compiles on first call as before).
+            _add_compile_seconds(time.perf_counter() - t0, stalled)
+        finally:
+            with self._lock:
+                self._inflight.pop(sig, None)
+            ev.set()
+
+    def __call__(self, *args):
+        sig = self.signature(args)
+        exe = self.aot.get(sig)
+        if exe is None:
+            with self._lock:
+                ev = self._inflight.get(sig)
+            if ev is not None:
+                t0 = time.perf_counter()
+                ev.wait()
+                _add_stall_seconds(time.perf_counter() - t0)
+                exe = self.aot.get(sig)
+            if exe is None:
+                self.compile_for(args, stalled=True)
+                exe = self.aot.get(sig)
+        if exe is None:
+            return self.wrapper(*args)
+        return exe(*args)
+
+
+def compiled_entry(key: tuple,
+                   build_wrapper: Callable[[], Callable]) -> CompiledEntry:
+    """Get-or-create a `CompiledEntry` in the process-wide `_COMPILED` LRU.
+
+    Like `_compiled_get_or_create` but the stored value is an AOT-capable
+    entry (see `CompiledEntry`); hit/miss accounting is shared.
+    """
+    return _compiled_get_or_create(
+        _COMPILED, key, lambda: CompiledEntry(key, build_wrapper()))
 
 
 def clear_compiled_caches() -> None:
     """Drop every cached jitted/pmapped evaluation function (benchmarks use
-    this to measure cold-compile paths; also frees the closed-over graphs)."""
+    this to measure cold-compile paths; also frees the closed-over graphs).
+    Pins are dropped too, and the compile-ahead bucket registry is reset so
+    canonical executables are rebuilt from scratch."""
     with _COMPILED_LOCK:
         _COMPILED.clear()
         _BUDGET_COMPILED.clear()
+        _COMPILED_PINS.clear()
+    from . import compileahead
+    compileahead._clear_registries()
 
 
 def _skeleton_key(graph_fp: str, strategy: Strategy,
@@ -367,7 +554,8 @@ class BatchedEvaluator:
                  ppe: PPEConfig = PPEConfig(), overlap: bool = True,
                  n_microbatches: Optional[int] = None,
                  pod_bw: Optional[float] = None,
-                 cache: Optional[PredictionCache] = DEFAULT_CACHE):
+                 cache: Optional[PredictionCache] = DEFAULT_CACHE,
+                 bucketed: Optional[bool] = None):
         self.graph = graph
         self.strategy = strategy
         self.system = system or simulate.default_system(strategy)
@@ -376,6 +564,7 @@ class BatchedEvaluator:
         self.n_microbatches = n_microbatches
         self.pod_bw = pod_bw
         self.cache = resolve_cache(cache)
+        self.bucketed = bucketed
         self._graph_fp = graph.fingerprint()
 
     # -- compiled path ----------------------------------------------------
@@ -401,14 +590,33 @@ class BatchedEvaluator:
             ])
         return scalar
 
-    def _compiled(self, template: MicroArch) -> Callable:
+    def _use_bucketed(self) -> bool:
+        from repro.core import compileahead
+        return compileahead.resolve_bucketed(self.bucketed)
+
+    def _compiled(self, template: MicroArch,
+                  bucketed: Optional[bool] = None) -> Callable:
         key = self._skeleton(template)
+        use = self._use_bucketed() if bucketed is None else bucketed
+        if use:
+            from repro.core import compileahead
+            return compileahead.design_batch_fn(
+                ("skel", key), lambda: self._scalar_fn(template),
+                (jax.ShapeDtypeStruct((HW_DIM,), jnp.float32),), n_dev=1)
         return _compiled_get_or_create(
             _COMPILED, key,
             lambda: jax.jit(jax.vmap(self._scalar_fn(template))))
 
-    def _compiled_sharded(self, template: MicroArch, n_dev: int) -> Callable:
+    def _compiled_sharded(self, template: MicroArch, n_dev: int,
+                          bucketed: Optional[bool] = None) -> Callable:
         key = self._skeleton(template) + ("pmap", n_dev)
+        use = self._use_bucketed() if bucketed is None else bucketed
+        if use:
+            from repro.core import compileahead
+            return compileahead.design_batch_fn(
+                ("skel", self._skeleton(template)),
+                lambda: self._scalar_fn(template),
+                (jax.ShapeDtypeStruct((HW_DIM,), jnp.float32),), n_dev=n_dev)
         return _compiled_get_or_create(
             _COMPILED, key,
             lambda: jax.pmap(jax.vmap(self._scalar_fn(template))))
@@ -457,7 +665,12 @@ class BatchedEvaluator:
             rows = self.evaluate_matrix(archs[0],
                                         np.stack([vecs[i] for i in misses]),
                                         block=shard_block)
-        elif len(misses) >= min_batch_jit:
+        elif len(misses) >= min_batch_jit or self._use_bucketed():
+            # With bucketing on, even tiny miss batches go through the
+            # shared canonical executable: the compile is amortized across
+            # every design in the bucket, and rows stay bit-identical to
+            # the batched/pipelined paths (the eager fallback differs at
+            # float32 rounding).
             fn = self._compiled(archs[0])
             hw = jnp.asarray(np.stack([vecs[i] for i in misses]))
             rows = np.asarray(fn(hw), dtype=np.float64)
@@ -501,14 +714,19 @@ class BatchedEvaluator:
         if target != n:
             hw = np.concatenate(
                 [hw, np.repeat(hw[-1:], target - n, axis=0)])
+        # template+matrix mode is ONE design over a huge hardware batch:
+        # there is nothing for cross-design bucketing to amortize, and the
+        # parameterized bucket executable pays per-row coefficient gathers
+        # plus lost constant folding at warm runtime (~16x slower on 16k
+        # rows) — always dispatch the legacy baked executable here
         if n_dev > 1:
-            fn = self._compiled_sharded(template, n_dev)
+            fn = self._compiled_sharded(template, n_dev, bucketed=False)
             rows = fn(jnp.asarray(hw.reshape(n_dev, target // n_dev,
                                              HW_DIM)))
             rows = np.asarray(rows, dtype=np.float64).reshape(
                 target, len(METRICS))
         else:
-            fn = self._compiled(template)
+            fn = self._compiled(template, bucketed=False)
             rows = np.asarray(fn(jnp.asarray(hw)), dtype=np.float64)
         return rows[:n]
 

@@ -524,6 +524,10 @@ class WorkerStats:
     n_lost_leases: int = 0
     preempted: bool = False
     elapsed_s: float = 0.0
+    # per-incarnation XLA compile observability (deltas of
+    # pathfinder.compile_cache_stats over this worker's lifetime)
+    compile_seconds: float = 0.0
+    stall_seconds: float = 0.0
 
 
 class FabricWorker:
@@ -537,8 +541,10 @@ class FabricWorker:
                  eval_delay_s: float = 0.0,
                  max_chunks: Optional[int] = None,
                  compile_cache: bool = True,
+                 compile_ahead: Optional[int] = None,
+                 bucketing: Optional[bool] = None,
                  on_idle: Optional[Callable[[], None]] = None):
-        from repro.core import sweeprunner
+        from repro.core import pathfinder, sweeprunner
         self.out_dir = out_dir
         self.spec, self.fabric = load_dir(out_dir)
         self.mode = self.fabric["mode"]
@@ -558,6 +564,11 @@ class FabricWorker:
         self.stall_s = float(os.environ.get("REPRO_FABRIC_STALL_S", 0.0))
         self.max_chunks = max_chunks
         self.compile_cache = compile_cache
+        # execution-only dispatch knobs (inherited by the process-global
+        # compile-ahead service); no effect on chunk hashes or commits
+        self.compile_ahead = compile_ahead
+        self.bucketing = bucketing
+        self._compile_base = pathfinder.compile_cache_stats()
         self.on_idle = on_idle
         self._inj = _Injector()
         self._fp = self.spec.fingerprint()
@@ -582,6 +593,12 @@ class FabricWorker:
 
     # -- bookkeeping ------------------------------------------------------
     def _write_stats(self, stats: WorkerStats) -> None:
+        from repro.core import pathfinder
+        now = pathfinder.compile_cache_stats()
+        stats.compile_seconds = now.get("compile_seconds", 0.0) - \
+            self._compile_base.get("compile_seconds", 0.0)
+        stats.stall_seconds = now.get("stall_seconds", 0.0) - \
+            self._compile_base.get("stall_seconds", 0.0)
         tmp = self._sp["stats"] + ".tmp"
         with open(tmp, "w") as fh:
             json.dump({**dataclasses.asdict(stats), "pid": os.getpid(),
@@ -662,7 +679,8 @@ class FabricWorker:
             f"in-flight work, then exiting", file=sys.stderr, flush=True))
         ex = sweeppipeline.PipelineExecutor(
             self.spec, cache=None,
-            superbatch=self.superbatch or sweeppipeline.SUPERBATCH)
+            superbatch=self.superbatch or sweeppipeline.SUPERBATCH,
+            compile_ahead=self.compile_ahead, bucketing=self.bucketing)
         stats = WorkerStats(worker=self.worker_id)
         t0 = time.perf_counter()
         self._write_stats(stats)
@@ -849,6 +867,8 @@ class FabricCoordinator:
                  frontier_capacity: Optional[int] = None,
                  superbatch: Optional[int] = None,
                  claim_batch: Optional[int] = None,
+                 compile_ahead: Optional[int] = None,
+                 bucketing: Optional[bool] = None,
                  eval_delay_s: float = 0.0,
                  max_respawns: int = 0,
                  worker_env: Optional[Dict[str, str]] = None,
@@ -863,6 +883,8 @@ class FabricCoordinator:
         self.frontier_capacity = frontier_capacity
         self.superbatch = superbatch
         self.claim_batch = claim_batch
+        self.compile_ahead = compile_ahead
+        self.bucketing = bucketing
         self.eval_delay_s = eval_delay_s
         self.max_respawns = max_respawns
         self.worker_env = worker_env
@@ -879,6 +901,10 @@ class FabricCoordinator:
             cmd += ["--superbatch", str(self.superbatch)]
         if self.claim_batch is not None:
             cmd += ["--claim-batch", str(self.claim_batch)]
+        if self.compile_ahead is not None:
+            cmd += ["--compile-ahead", str(self.compile_ahead)]
+        if self.bucketing is False:
+            cmd += ["--no-bucketing"]
         if self.eval_delay_s:
             cmd += ["--eval-delay", str(self.eval_delay_s)]
         return cmd

@@ -63,6 +63,12 @@ from repro.core.placement import mesh_system
 # superbatch so per-dispatch overhead amortizes over ~10x more points than
 # the default chunk size (commit granularity stays per chunk)
 SUPERBATCH = 256
+# superbatches packed (and AOT-submitted) ahead of the device stage: while
+# the device runs superbatch N, the producer has already handed N+1..N+k's
+# compiled-fn keys and padded shapes to the compile service, so a cold
+# sweep's XLA compiles run off the critical path (see repro.core
+# .compileahead).  0 disables lookahead (and AOT prefetch) entirely.
+COMPILE_AHEAD = 2
 # packed-superbatch lookahead per queue (producer -> device -> writer):
 # 2 = double buffering at each stage boundary
 QUEUE_DEPTH = 2
@@ -176,6 +182,22 @@ class _Pack:
     groups: Dict[tuple, _Group]
 
 
+@dataclasses.dataclass
+class _BucketOut:
+    """One in-flight bucketed megabatch result, shared by every (group,
+    eval-point) slice that rode in it; materialized to host once."""
+
+    out: object                      # device array, (B, 5) or (D, B/D, 5)
+    _host: Optional[np.ndarray] = None
+
+    def rows(self) -> np.ndarray:
+        if self._host is None:
+            host = np.asarray(self.out, dtype=np.float64)
+            self._host = host.reshape(-1, host.shape[-1])
+            self.out = None
+        return self._host
+
+
 class PipelineExecutor:
     """Asynchronous producer -> device -> writer pipeline for one spec.
 
@@ -187,8 +209,10 @@ class PipelineExecutor:
     def __init__(self, spec, cache=pathfinder.DEFAULT_CACHE,
                  superbatch: int = SUPERBATCH,
                  devices: Optional[int] = None,
-                 threads: Optional[bool] = None):
-        from repro.core import sweeprunner
+                 threads: Optional[bool] = None,
+                 compile_ahead: Optional[int] = None,
+                 bucketing: Optional[bool] = None):
+        from repro.core import compileahead, sweeprunner
         self.spec = spec
         self.cache = pathfinder.resolve_cache(cache)
         self.ppe = sweeprunner.spec_ppe(spec)
@@ -201,6 +225,9 @@ class PipelineExecutor:
         # the inline mode double-buffers through JAX async dispatch alone
         self.threads = threads if threads is not None \
             else (os.cpu_count() or 1) >= 4
+        self.compile_ahead = COMPILE_AHEAD if compile_ahead is None \
+            else max(int(compile_ahead), 0)
+        self.bucketing = compileahead.resolve_bucketed(bucketing)
         self.block = sweeprunner.SHARD_BLOCK
         self._skels: Dict[tuple, _DesignSkeleton] = {}
         self._scn_fp = json.dumps(spec.scenario_spec.to_dict(),
@@ -208,6 +235,11 @@ class PipelineExecutor:
         self._hw: Dict[tuple, tuple] = {}
         self._rows: List[np.ndarray] = []     # unique packed hw rows
         self._rowmat: Optional[np.ndarray] = None
+        # store keys the AOT service pinned on our behalf (see _prefetch);
+        # the device stage releases a key's pins after its first dispatch
+        self._aot_pins: "collections.Counter" = collections.Counter()
+        self._pin_lock = threading.Lock()
+        self._frontier_capacity: Optional[int] = None
 
     # -- memoized resolution ---------------------------------------------
     def _hw_entry(self, lb) -> tuple:
@@ -293,20 +325,28 @@ class PipelineExecutor:
             return jnp.stack([f(v) for f in scalars])
         return design
 
+    def _eval_build(self, group: _Group, n_dev: int) -> Callable:
+        if n_dev > 1:
+            return lambda: jax.pmap(jax.vmap(self._design_scalar(group)))
+        return lambda: jax.jit(jax.vmap(self._design_scalar(group)))
+
     def _compiled_eval(self, group: _Group, n_dev: int) -> Callable:
         key = ("design", group.keys, n_dev)
-        if n_dev > 1:
-            build = lambda: jax.pmap(jax.vmap(self._design_scalar(group)))
-        else:
-            build = lambda: jax.jit(jax.vmap(self._design_scalar(group)))
-        return pathfinder._compiled_get_or_create(
-            pathfinder._COMPILED, key, build)
+        return pathfinder.compiled_entry(key, self._eval_build(group, n_dev))
 
-    def _compiled_frontier(self, group: _Group, capacity: int) -> Callable:
-        # fold_key matters here: the objective fold (SLO walls, traffic
-        # consts) is traced into the step, unlike the pure eval fn
-        key = ("frontier", group.keys, group.skel.fold_key, capacity)
+    def _design_vectors(self, group: _Group) -> List:
+        """One canonical `DesignVector` per eval point of the group's
+        design, registered under the same per-evaluator skeleton keys the
+        serial backend uses — so serial and pipelined sweeps share (and
+        bit-match) the exact same bucket executables."""
+        from repro.core import compileahead
+        avals = (jax.ShapeDtypeStruct((pathfinder.HW_DIM,), jnp.float32),)
+        return [compileahead.design_vector(
+                    ("skel", key),
+                    lambda ev=ev: ev._scalar_fn(group.template), avals)
+                for key, ev in zip(group.keys, group.skel.evaluators)]
 
+    def _frontier_build(self, group: _Group, capacity: int) -> Callable:
         def build():
             design = self._design_scalar(group)
             fold = group.skel.fold
@@ -320,8 +360,14 @@ class PipelineExecutor:
             # the carried frontier state is donated: chunk N's merge reuses
             # chunk N-1's buffers instead of allocating a fresh state
             return jax.jit(step, donate_argnums=2)
-        return pathfinder._compiled_get_or_create(
-            pathfinder._COMPILED, key, build)
+        return build
+
+    def _compiled_frontier(self, group: _Group, capacity: int) -> Callable:
+        # fold_key matters here: the objective fold (SLO walls, traffic
+        # consts) is traced into the step, unlike the pure eval fn
+        key = ("frontier", group.keys, group.skel.fold_key, capacity)
+        return pathfinder.compiled_entry(
+            key, self._frontier_build(group, capacity))
 
     # -- packing (producer side) -----------------------------------------
     def pack(self, chunks: Sequence) -> _Pack:
@@ -414,34 +460,123 @@ class PipelineExecutor:
             self._rowmat = mat
         return mat[idx]
 
-    def _padded(self, g: _Group) -> Tuple[np.ndarray, int]:
-        hw = self._gather(g)
-        n = hw.shape[0]
+    def _pad_plan(self, n: int) -> Tuple[int, int]:
+        """(n_dev, padded row target) for an ``n``-row dispatch."""
         n_dev = max(min(self.devices, n), 1)
         if n < PMAP_MIN_ROWS:
             n_dev = 1                 # jit + XLA intra-op parallelism
         quantum = n_dev * self.block
-        target = -(-n // quantum) * quantum
+        return n_dev, -(-n // quantum) * quantum
+
+    def _padded(self, g: _Group) -> Tuple[np.ndarray, int]:
+        hw = self._gather(g)
+        n = hw.shape[0]
+        n_dev, target = self._pad_plan(n)
         if target != n:
             hw = np.concatenate([hw, np.repeat(hw[-1:], target - n,
                                                axis=0)])
         return hw, n_dev
 
+    def _release_pins(self, key: tuple) -> None:
+        """Release the LRU-eviction pins the AOT service took for ``key``
+        (called after the key's first dispatch of this run)."""
+        with self._pin_lock:
+            n = self._aot_pins.pop(key, 0)
+        for _ in range(n):
+            pathfinder.unpin_compiled(key)
+
+    def _release_all_pins(self) -> None:
+        with self._pin_lock:
+            pins, self._aot_pins = self._aot_pins, collections.Counter()
+        for key, n in pins.items():
+            for _ in range(n):
+                pathfinder.unpin_compiled(key)
+
+    def _bucket_plan(self, pack: _Pack) -> Dict[int, tuple]:
+        """Group the pack's (group, eval-point) pairs by canonical bucket.
+
+        Returns ``{bucket.id: (bucket, items)}`` with items
+        ``(group, eval_idx, design_vector, n_rows)`` — the shared shape
+        plan used by both `_prefetch` (AOT submit) and `dispatch`.
+        """
+        buckets: Dict[int, tuple] = {}
+        for g in pack.groups.values():
+            n = len(g.ridx)
+            if not n:
+                continue
+            for e, dv in enumerate(self._design_vectors(g)):
+                buckets.setdefault(dv.bucket.id, (dv.bucket, []))[1] \
+                    .append((g, e, dv, n))
+        return buckets
+
+    @staticmethod
+    def _bucket_args(bucket, rows: np.ndarray, didx: np.ndarray,
+                     packs_by_item: List[tuple], n_dev: int) -> tuple:
+        """Assemble one megabatch's argument tuple: per-row coefficient
+        packs (gathered from the per-item design vectors) + the hardware
+        rows, reshaped with a leading device axis when pmap-sharded."""
+        packs = tuple(
+            np.stack([p[c] for p in packs_by_item])[didx]
+            for c in range(len(bucket.classes)))
+        if n_dev > 1:
+            per = rows.shape[0] // n_dev
+            rows = rows.reshape(n_dev, per, rows.shape[1])
+            packs = tuple(p.reshape((n_dev, per) + p.shape[1:])
+                          for p in packs)
+        return (packs, rows)
+
     def dispatch(self, pack: _Pack) -> None:
         """Launch every group's fused eval under JAX async dispatch; the
-        results stay on device until `finalize` folds them."""
+        results stay on device until `finalize` folds them.
+
+        With bucketing (default) all (group, eval-point) pairs whose
+        canonical jaxprs landed in one bucket are dispatched as a single
+        megabatch through the shared bucket executable — O(shape-buckets)
+        compiles per pack instead of O(designs); per-design coefficient
+        packs ride along as batch inputs, so records stay bit-identical
+        to per-group dispatch of the same executables."""
+        from repro.core import compileahead
+        if not self.bucketing:
+            for g in pack.groups.values():
+                g.n = len(g.ridx)
+                if not g.n:
+                    continue
+                hw, n_dev = self._padded(g)
+                fn = self._compiled_eval(g, n_dev)
+                if n_dev > 1:
+                    g.out = fn(jnp.asarray(
+                        hw.reshape(n_dev, hw.shape[0] // n_dev,
+                                   pathfinder.HW_DIM)))
+                else:
+                    g.out = fn(jnp.asarray(hw))
+                self._release_pins(("design", g.keys, n_dev))
+            return
         for g in pack.groups.values():
             g.n = len(g.ridx)
-            if not g.n:
-                continue
-            hw, n_dev = self._padded(g)
-            fn = self._compiled_eval(g, n_dev)
-            if n_dev > 1:
-                g.out = fn(jnp.asarray(
-                    hw.reshape(n_dev, hw.shape[0] // n_dev,
-                               pathfinder.HW_DIM)))
-            else:
-                g.out = fn(jnp.asarray(hw))
+            if g.n:
+                g.out = [None] * g.skel.ppd
+        for bucket, items in self._bucket_plan(pack).values():
+            rows = np.concatenate([self._gather(g) for g, _, _, _ in items])
+            didx = np.concatenate([np.full(n, j, dtype=np.intp)
+                                   for j, (_, _, _, n) in enumerate(items)])
+            n = rows.shape[0]
+            n_dev, target = self._pad_plan(n)
+            if target != n:
+                rows = np.concatenate(
+                    [rows, np.repeat(rows[-1:], target - n, axis=0)])
+                didx = np.concatenate(
+                    [didx, np.repeat(didx[-1:], target - n)])
+            packs, hw = self._bucket_args(
+                bucket, rows, didx, [dv.packs for _, _, dv, _ in items],
+                n_dev)
+            entry = compileahead.batch_entry(bucket, n_dev)
+            out = entry(packs, jnp.asarray(hw))
+            self._release_pins(("cabucket", bucket.id, n_dev))
+            holder = _BucketOut(out=out)
+            off = 0
+            for g, e, _, n_g in items:
+                g.out[e] = (holder, off, off + n_g)
+                off += n_g
 
     def finalize(self, pack: _Pack) -> List[List[Dict]]:
         """Block on the pack's device results, fold records per chunk (in
@@ -459,8 +594,15 @@ class PipelineExecutor:
         for g in pack.groups.values():
             if not g.n:
                 continue
-            out = np.asarray(g.out, dtype=np.float64)
-            out = out.reshape(-1, g.skel.ppd, n_metrics)[:g.n]
+            if isinstance(g.out, list):
+                # bucketed: one (B, 5) slice per eval point, possibly from
+                # different megabatches; stack to the (B, ppd, 5) layout
+                out = np.stack(
+                    [holder.rows()[lo:hi] for holder, lo, hi in g.out],
+                    axis=1)
+            else:
+                out = np.asarray(g.out, dtype=np.float64)
+                out = out.reshape(-1, g.skel.ppd, n_metrics)[:g.n]
             g.out = None
             if g.skel.mfold is not None:
                 for (ci, li), md in zip(g.slots,
@@ -521,6 +663,74 @@ class PipelineExecutor:
             out_records.append(recs)
         return out_records
 
+    # -- compile-ahead (producer side) -------------------------------------
+    def _prefetch(self, pack: _Pack) -> None:
+        """Hand the pack's compiled-fn (key, padded shape) pairs to the
+        AOT compile service so the executables are warm (or at least in
+        flight) by the time the device stage reaches this pack.  Runs on
+        the producer side; a miss just means the device stage falls back
+        to the lazy inline compile."""
+        if not self.compile_ahead:
+            return
+        from repro.core import compileahead
+        svc = compileahead.service()
+        n_metrics = len(pathfinder.METRICS)
+
+        def warm(key, build, args):
+            if svc.warm(key, build, args):
+                with self._pin_lock:
+                    self._aot_pins[key] += 1
+
+        def hw_aval(target, n_dev):
+            if n_dev > 1:
+                return jax.ShapeDtypeStruct(
+                    (n_dev, target // n_dev, pathfinder.HW_DIM),
+                    jnp.float32)
+            return jax.ShapeDtypeStruct((target, pathfinder.HW_DIM),
+                                        jnp.float32)
+
+        if self._frontier_capacity is not None:
+            capacity = self._frontier_capacity
+            for g in pack.groups.values():
+                n = len(g.ridx)
+                if not n or g.skel.fold is None:
+                    continue
+                _, target = self._pad_plan(n)
+                state = pathfinder.frontier_init(
+                    capacity, len(g.skel.scn.objectives),
+                    g.skel.ppd * n_metrics)
+                st_avals = jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    state)
+                warm(("frontier", g.keys, g.skel.fold_key, capacity),
+                     self._frontier_build(g, capacity),
+                     (jax.ShapeDtypeStruct((target, pathfinder.HW_DIM),
+                                           jnp.float32),
+                      jax.ShapeDtypeStruct((target,), jnp.int32),
+                      st_avals))
+            return
+        if self.bucketing:
+            for bucket, items in self._bucket_plan(pack).values():
+                n = sum(ni for _, _, _, ni in items)
+                n_dev, target = self._pad_plan(n)
+                lead = (n_dev, target // n_dev) if n_dev > 1 else (target,)
+                packs_avals = tuple(
+                    jax.ShapeDtypeStruct(
+                        lead + (bucket.class_sizes[c],) + tuple(shape),
+                        np.dtype(dt))
+                    for c, (dt, shape) in enumerate(bucket.classes))
+                warm(("cabucket", bucket.id, n_dev),
+                     compileahead.bucket_builder(bucket, n_dev),
+                     (packs_avals, hw_aval(target, n_dev)))
+        else:
+            for g in pack.groups.values():
+                n = len(g.ridx)
+                if not n:
+                    continue
+                n_dev, target = self._pad_plan(n)
+                warm(("design", g.keys, n_dev), self._eval_build(g, n_dev),
+                     (hw_aval(target, n_dev),))
+
     # -- the pipeline -----------------------------------------------------
     def _pack_slices(self, chunks: Sequence) -> List[Sequence]:
         per = max(self.superbatch // max(self.spec.chunk_size, 1), 1)
@@ -543,6 +753,8 @@ class PipelineExecutor:
         if not self.threads:
             n_points = 0
             prev: Optional[_Pack] = None
+            buf: "collections.deque" = collections.deque()
+            si = 0
 
             def flush(pack: _Pack) -> int:
                 n = 0
@@ -551,14 +763,26 @@ class PipelineExecutor:
                     commit(chunk, recs)
                 return n
 
-            for sl in slices:
-                pack = self.pack(sl)
-                self.dispatch(pack)          # async: pack N on device ...
+            try:
+                while si < len(slices) or buf:
+                    # pack (and AOT-submit) up to compile_ahead
+                    # superbatches past the one about to dispatch, so
+                    # their compiles overlap this pack's device work
+                    while si < len(slices) \
+                            and len(buf) <= self.compile_ahead:
+                        nxt = self.pack(slices[si])
+                        si += 1
+                        self._prefetch(nxt)
+                        buf.append(nxt)
+                    pack = buf.popleft()
+                    self.dispatch(pack)      # async: pack N on device ...
+                    if prev is not None:
+                        n_points += flush(prev)   # ... while N-1 commits
+                    prev = pack
                 if prev is not None:
-                    n_points += flush(prev)  # ... while N-1 folds+commits
-                prev = pack
-            if prev is not None:
-                n_points += flush(prev)
+                    n_points += flush(prev)
+            finally:
+                self._release_all_pins()
             return n_points
         pack_q: "queue.Queue" = queue.Queue(maxsize=QUEUE_DEPTH)
         write_q: "queue.Queue" = queue.Queue(maxsize=QUEUE_DEPTH)
@@ -566,11 +790,21 @@ class PipelineExecutor:
         n_points = [0]
 
         def produce():
+            # the deque keeps compile_ahead packed superbatches in hand
+            # beyond the bounded queue: each is AOT-submitted at pack
+            # time, so its compiles run while earlier packs dispatch
+            buf: "collections.deque" = collections.deque()
             try:
                 for sl in slices:
                     if errors:
                         break
-                    pack_q.put(self.pack(sl))
+                    pack = self.pack(sl)
+                    self._prefetch(pack)
+                    buf.append(pack)
+                    while len(buf) > self.compile_ahead:
+                        pack_q.put(buf.popleft())
+                while buf and not errors:
+                    pack_q.put(buf.popleft())
             except BaseException as e:      # noqa: BLE001 — re-raised below
                 errors.append(e)
             finally:
@@ -621,6 +855,7 @@ class PipelineExecutor:
             write_q.put(None)
             writer.join()
             _join_producer(producer, pack_q)
+            self._release_all_pins()
         if errors:
             raise errors[0]
         return n_points[0]
@@ -666,6 +901,7 @@ class PipelineExecutor:
             state = tuple(jnp.asarray(x) for x in state)
 
         cache, self.cache = self.cache, None    # frontier bypasses caching
+        self._frontier_capacity = capacity      # _prefetch warms step fns
         n_points = 0
         try:
             slices = self._pack_slices(chunks)
@@ -683,6 +919,8 @@ class PipelineExecutor:
                     # async dispatch: the merge runs on device while the
                     # next pack resolves on host
                     state = fn(jnp.asarray(hw), jnp.asarray(idx), state)
+                    self._release_pins(
+                        ("frontier", g.keys, g.skel.fold_key, capacity))
                     n_merged += n
                 return state, n_merged
 
@@ -692,8 +930,16 @@ class PipelineExecutor:
                     on_commit([c.index for c in pack.chunks], host)
 
             if not self.threads:
-                for sl in slices:
-                    pack = self.pack(sl)
+                buf: "collections.deque" = collections.deque()
+                si = 0
+                while si < len(slices) or buf:
+                    while si < len(slices) \
+                            and len(buf) <= self.compile_ahead:
+                        nxt = self.pack(slices[si])
+                        si += 1
+                        self._prefetch(nxt)
+                        buf.append(nxt)
+                    pack = buf.popleft()
                     state, n = merge_pack(pack, state)
                     n_points += n
                     commit_pack(pack, state)
@@ -702,11 +948,18 @@ class PipelineExecutor:
                 errors: List[BaseException] = []
 
                 def produce():
+                    buf: "collections.deque" = collections.deque()
                     try:
                         for sl in slices:
                             if errors:
                                 break
-                            pack_q.put(self.pack(sl))
+                            pack = self.pack(sl)
+                            self._prefetch(pack)
+                            buf.append(pack)
+                            while len(buf) > self.compile_ahead:
+                                pack_q.put(buf.popleft())
+                        while buf and not errors:
+                            pack_q.put(buf.popleft())
                     except BaseException as e:  # noqa: BLE001
                         errors.append(e)
                     finally:
@@ -734,6 +987,8 @@ class PipelineExecutor:
                     raise errors[0]
         finally:
             self.cache = cache
+            self._frontier_capacity = None
+            self._release_all_pins()
 
         records, n_over = self.frontier_records(state, all_chunks)
         return records, n_over, n_points

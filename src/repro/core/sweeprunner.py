@@ -451,10 +451,16 @@ class RunStats:
     ``cache_hits``/``cache_misses`` are this run's prediction-cache delta
     and ``compile_hits``/``compile_misses`` the compiled-evaluator-store
     delta (`pathfinder.compile_cache_stats`), so cache efficacy is visible
-    per sweep instead of only as process-lifetime totals.  In frontier
-    mode (``frontier_only``) ``records`` holds just the surviving Pareto
-    frontier and ``n_frontier_overflowed`` counts candidates the bounded
-    device-resident state had to drop (0 = the frontier is exact).
+    per sweep instead of only as process-lifetime totals.
+    ``compile_seconds`` is wall time this run spent inside XLA
+    lower+compile (wherever it ran — compile-ahead service threads or the
+    dispatch path) and ``stall_seconds`` the part that actually blocked
+    evaluation (the device stage waiting on a compile); a healthy
+    compile-ahead run shows compile_seconds > 0 with stall_seconds near 0.
+    In frontier mode (``frontier_only``) ``records`` holds just the
+    surviving Pareto frontier and ``n_frontier_overflowed`` counts
+    candidates the bounded device-resident state had to drop (0 = the
+    frontier is exact).
     """
 
     n_points_total: int
@@ -470,6 +476,8 @@ class RunStats:
     cache_misses: int = 0
     compile_hits: int = 0
     compile_misses: int = 0
+    compile_seconds: float = 0.0
+    stall_seconds: float = 0.0
     frontier_only: bool = False
     n_frontier_overflowed: int = 0
 
@@ -526,7 +534,9 @@ class SweepRunner:
                  backend: str = "auto", workers: Optional[int] = None,
                  cache=pathfinder.DEFAULT_CACHE,
                  compile_cache: bool = False,
-                 superbatch: Optional[int] = None):
+                 superbatch: Optional[int] = None,
+                 compile_ahead: Optional[int] = None,
+                 bucketing: Optional[bool] = None):
         self.spec = spec
         self.out_dir = out_dir
         self.backend = pick_backend(backend)
@@ -539,6 +549,11 @@ class SweepRunner:
         # enables it): resumed / repeated sweeps skip cold compiles
         self.compile_cache = compile_cache
         self.superbatch = superbatch
+        # compile-ahead lookahead depth / cross-design bucketing (None =
+        # module defaults; execution-only knobs — no effect on chunk
+        # hashes, point keys, records, or resume)
+        self.compile_ahead = compile_ahead
+        self.bucketing = bucketing
         self._fp = spec.fingerprint()
 
     # -- persistence ------------------------------------------------------
@@ -589,13 +604,17 @@ class SweepRunner:
             else {"hits": 0, "misses": 0}
         return cache_stats, pathfinder.compile_cache_stats()
 
-    def _stat_delta(self, before: Tuple[Dict, Dict]) -> Dict[str, int]:
+    def _stat_delta(self, before: Tuple[Dict, Dict]) -> Dict[str, float]:
         c0, k0 = before
         c1, k1 = self._stat_snapshot()
         return {"cache_hits": c1["hits"] - c0["hits"],
                 "cache_misses": c1["misses"] - c0["misses"],
                 "compile_hits": k1["hits"] - k0["hits"],
-                "compile_misses": k1["misses"] - k0["misses"]}
+                "compile_misses": k1["misses"] - k0["misses"],
+                "compile_seconds": k1.get("compile_seconds", 0.0)
+                - k0.get("compile_seconds", 0.0),
+                "stall_seconds": k1.get("stall_seconds", 0.0)
+                - k0.get("stall_seconds", 0.0)}
 
     def run(self, resume: bool = False, max_chunks: Optional[int] = None,
             collect: bool = True, verbose: bool = False,
@@ -764,7 +783,9 @@ class SweepRunner:
             pending = pending[:max_chunks]
         ex = sweeppipeline.PipelineExecutor(self.spec, cache=self.cache,
                                             superbatch=self.superbatch
-                                            or sweeppipeline.SUPERBATCH)
+                                            or sweeppipeline.SUPERBATCH,
+                                            compile_ahead=self.compile_ahead,
+                                            bucketing=self.bucketing)
         on_commit = None
         if state_path is not None:
             committed = dict(done)
@@ -795,19 +816,31 @@ class SweepRunner:
             **self._stat_delta(stats0))
 
     def _execute(self, pending: List[Chunk], commit):
+        from repro.core import compileahead
         spec = self.spec
         if self.backend == "pipeline":
             from repro.core import sweeppipeline
             ex = sweeppipeline.PipelineExecutor(
                 spec, cache=self.cache,
-                superbatch=self.superbatch or sweeppipeline.SUPERBATCH)
+                superbatch=self.superbatch or sweeppipeline.SUPERBATCH,
+                compile_ahead=self.compile_ahead, bucketing=self.bucketing)
             ex.run(pending, commit)
         elif self.backend in ("serial", "device"):
             shard = self.backend == "device"
-            for c in pending:
-                commit(c, _eval_labels_impl(spec, c.labels,
-                                            cache=self.cache,
-                                            shard_devices=shard))
+            # the synchronous backends evaluate through BatchedEvaluator,
+            # which honors the process-wide bucketing default — scope an
+            # explicit runner-level override around the run
+            scoped = self.bucketing is not None
+            prev = compileahead.set_bucketing_default(self.bucketing) \
+                if scoped else None
+            try:
+                for c in pending:
+                    commit(c, _eval_labels_impl(spec, c.labels,
+                                                cache=self.cache,
+                                                shard_devices=shard))
+            finally:
+                if scoped:
+                    compileahead.set_bucketing_default(prev)
         elif self.backend == "thread":
             with ThreadPoolExecutor(self.workers) as ex:
                 futs = {ex.submit(_eval_labels_impl, spec, c.labels,

@@ -295,6 +295,18 @@ def _parser() -> argparse.ArgumentParser:
                     help="do not persist XLA executables under "
                          "OUT/xla_cache (enabled by default with --out "
                          "so cold starts and resumes skip recompiles)")
+    sw.add_argument("--compile-ahead", type=int, default=None,
+                    metavar="N",
+                    help="superbatches to pack and AOT-compile ahead of "
+                         "the device stage on the pipeline backend "
+                         "(default 2; the compile service builds "
+                         "executables off the critical path so the "
+                         "device stage only dispatches warm functions)")
+    sw.add_argument("--no-bucketing", action="store_true",
+                    help="disable cross-design bucketed dispatch (compile "
+                         "one function per design group instead of one "
+                         "per shape bucket; execution-only — results are "
+                         "numerically equivalent)")
 
     wk = sub.add_parser(
         "sweep-worker",
@@ -317,6 +329,11 @@ def _parser() -> argparse.ArgumentParser:
                          "superbatch's worth)")
     wk.add_argument("--superbatch", type=int, default=None,
                     help="design points per device dispatch (default 256)")
+    wk.add_argument("--compile-ahead", type=int, default=None, metavar="N",
+                    help="superbatches to pack and AOT-compile ahead of "
+                         "the device stage (default 2)")
+    wk.add_argument("--no-bucketing", action="store_true",
+                    help="disable cross-design bucketed dispatch")
     wk.add_argument("--eval-delay", type=float, default=0.0,
                     help="artificial per-chunk device latency in seconds "
                          "(fan-out benchmarks / fault tests)")
@@ -530,6 +547,8 @@ def _cmd_sweep(args) -> int:
                       or args.frontier_only or args.superbatch is not None
                       or args.frontier_cap is not None
                       or args.lease_ttl is not None
+                      or args.compile_ahead is not None
+                      or args.no_bucketing
                       or (args.arch and "all" in args.arch))
     if use_runner:
         return _cmd_sweep_runner(args)
@@ -570,13 +589,44 @@ def _cmd_sweep(args) -> int:
     return 0
 
 
+def _validate_dispatch_args(args) -> int:
+    """Reject nonsensical dispatch sizing up front (rc 2) instead of
+    letting a `--superbatch 0` surface as a reshape traceback mid-sweep."""
+    superbatch = getattr(args, "superbatch", None)
+    if superbatch is not None and superbatch <= 0:
+        print(f"error: --superbatch must be a positive number of design "
+              f"points (got {superbatch}); drop the flag for the default "
+              f"(256)", file=sys.stderr)
+        return 2
+    compile_ahead = getattr(args, "compile_ahead", None)
+    if compile_ahead is not None and compile_ahead <= 0:
+        print(f"error: --compile-ahead must be a positive number of "
+              f"superbatches to pre-compile (got {compile_ahead}); drop "
+              f"the flag for the default (2), or use --no-bucketing to "
+              f"fall back to per-group lazy compilation", file=sys.stderr)
+        return 2
+    return 0
+
+
+def _runner_exec_kwargs(args) -> dict:
+    """Execution-only knobs shared by sweep and sweep-worker — no effect
+    on spec fingerprints, chunk hashes, or resume."""
+    return dict(
+        compile_ahead=args.compile_ahead,
+        bucketing=False if args.no_bucketing else None)
+
+
 def _cmd_sweep_runner(args) -> int:
     """Sharded / chunked / resumable path (repro.core.sweeprunner)."""
     from repro.core import scenarios, sweeprunner
 
+    rc = _validate_dispatch_args(args)
+    if rc:
+        return rc
     kwargs = dict(backend=args.backend, workers=args.workers,
                   superbatch=args.superbatch,
-                  compile_cache=bool(args.out) and not args.no_compile_cache)
+                  compile_cache=bool(args.out) and not args.no_compile_cache,
+                  **_runner_exec_kwargs(args))
     if args.frontier_only:
         if args.pareto:
             print("error: --frontier-only already reduces to the "
@@ -674,6 +724,9 @@ def _cmd_sweep_runner(args) -> int:
           f"{stats.cache_misses} misses; compiled fns "
           f"{stats.compile_misses} built / {stats.compile_hits} reused",
           file=sys.stderr)
+    print(f"# compile: {stats.compile_seconds:.1f}s building XLA "
+          f"executables, {stats.stall_seconds:.1f}s stalling the eval "
+          f"path (compile-ahead hides the rest)", file=sys.stderr)
     if stats.frontier_only:
         print(f"# frontier: {len(records)} non-dominated points over "
               f"{'/'.join(scn.objectives)}", file=sys.stderr)
@@ -728,7 +781,9 @@ def _cmd_sweep_fabric(args, spec) -> int:
         ttl_s=args.lease_ttl or sweepfabric.DEFAULT_TTL_S,
         frontier_only=args.frontier_only,
         frontier_capacity=args.frontier_cap,
-        superbatch=args.superbatch)
+        superbatch=args.superbatch,
+        compile_ahead=args.compile_ahead,
+        bucketing=False if args.no_bucketing else None)
     if args.workers == 0:
         print(f"# fabric: directory initialized; join workers with "
               f"`python -m repro.pathfind sweep-worker --dir {args.out}`",
@@ -771,6 +826,9 @@ def _cmd_sweep_worker(args) -> int:
     """Lease-claiming fabric worker (repro.core.sweepfabric)."""
     from repro.core import sweepfabric
 
+    rc = _validate_dispatch_args(args)
+    if rc:
+        return rc
     kwargs = {}
     if args.ttl is not None:
         kwargs["ttl_s"] = args.ttl
@@ -779,7 +837,9 @@ def _cmd_sweep_worker(args) -> int:
     worker = sweepfabric.FabricWorker(
         args.dir, worker_id=args.id, claim_batch=args.claim_batch,
         superbatch=args.superbatch, eval_delay_s=args.eval_delay,
-        max_chunks=args.max_chunks, **kwargs)
+        max_chunks=args.max_chunks,
+        compile_ahead=args.compile_ahead,
+        bucketing=False if args.no_bucketing else None, **kwargs)
     stats = worker.run()
     print(f"# worker {stats.worker}: committed "
           f"{stats.n_chunks_committed} chunks ({stats.n_points} points) "
